@@ -1,0 +1,261 @@
+"""Shared benchmark substrate: datasets, competitor methods, timing.
+
+The paper's six datasets are modeled by two synthetic corpora (simple /
+multi-hop; see data/corpus.py). Competitors are faithful CPU analogues of the
+paper's baselines:
+
+  bruteforce   — exact hybrid top-k (ground truth + QPS floor)
+  sparse-inv   — SEISMIC-style inverted index over learned sparse vectors
+  ivf-fusion   — IVF over [dense ; JL-projected sparse] fused vectors
+  three-route  — one single-path graph index per path + weighted-sum fusion
+                 (the paper's ThreeRouteGPU)
+  allan-poe-*  — our unified index, one build, every path combination
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.index import HybridIndex
+from repro.core.search import SearchParams, search
+from repro.core.usms import PAD_IDX, FusedVectors, PathWeights, weighted_query
+from repro.data.corpus import (
+    CorpusConfig,
+    SyntheticCorpus,
+    make_corpus,
+    ndcg_at_k,
+    recall_at_k,
+)
+from repro.kernels import ops
+
+
+def default_build(n_docs: int) -> BuildConfig:
+    return BuildConfig(
+        knn=KnnConfig(k=32, iters=5, node_chunk=min(n_docs, 2048)),
+        prune=PruneConfig(degree=32, keyword_degree=8, node_chunk=512),
+        path_refine_iters=2,
+    )
+
+
+def simple_corpus(n_docs=8192, n_queries=64, seed=11) -> SyntheticCorpus:
+    """NQ/MS-like: single-hop, mixed informative paths."""
+    return make_corpus(
+        CorpusConfig(n_docs=n_docs, n_queries=n_queries, n_topics=max(n_docs // 64, 8),
+                     d_dense=96, nnz_sparse=24, nnz_lexical=12, seed=seed)
+    )
+
+
+def multihop_corpus(n_docs=4096, n_queries=64, seed=13) -> SyntheticCorpus:
+    """WM/HP-like: entity chains, multi-hop ground truth."""
+    return make_corpus(
+        CorpusConfig(n_docs=n_docs, n_queries=n_queries, n_topics=max(n_docs // 64, 8),
+                     d_dense=96, nnz_sparse=24, nnz_lexical=12, chain_len=3, seed=seed)
+    )
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, seconds) — median of `repeats` after one warmup."""
+    fn(*args, **kw)  # warmup / compile
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+            out, jax.Array
+        ) else None
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# competitor: brute force
+# ---------------------------------------------------------------------------
+
+
+def bruteforce_topk(corpus, queries, weights, k=10):
+    qw = weighted_query(queries, weights)
+    scores = ops.pairwise_scores_chunked(qw, corpus)
+    top, ids = jax.lax.top_k(scores, k)
+    return np.asarray(ids)
+
+
+# ---------------------------------------------------------------------------
+# competitor: SEISMIC-style sparse inverted index
+# ---------------------------------------------------------------------------
+
+
+class SparseInvertedIndex:
+    """Learned-sparse-only retrieval via an inverted index with top-p static
+    pruning (the SEISMIC recipe, numpy analogue)."""
+
+    def __init__(self, docs: FusedVectors, posting_cap: int = 256):
+        t0 = time.perf_counter()
+        idx = np.asarray(docs.learned.idx)
+        val = np.asarray(docs.learned.val)
+        self.vocab_lists: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        flat_t = idx.reshape(-1)
+        flat_v = val.reshape(-1)
+        flat_d = np.repeat(np.arange(idx.shape[0]), idx.shape[1])
+        ok = flat_t >= 0
+        order = np.lexsort((-flat_v[ok], flat_t[ok]))
+        t_sorted = flat_t[ok][order]
+        v_sorted = flat_v[ok][order]
+        d_sorted = flat_d[ok][order]
+        bounds = np.searchsorted(t_sorted, np.unique(t_sorted))
+        uniq = np.unique(t_sorted)
+        for i, term in enumerate(uniq):
+            lo = bounds[i]
+            hi = bounds[i + 1] if i + 1 < len(bounds) else len(t_sorted)
+            hi = min(hi, lo + posting_cap)  # static pruning
+            self.vocab_lists[int(term)] = (d_sorted[lo:hi], v_sorted[lo:hi])
+        self.n_docs = idx.shape[0]
+        self.build_s = time.perf_counter() - t0
+
+    def nbytes(self) -> int:
+        return sum(d.nbytes + v.nbytes for d, v in self.vocab_lists.values())
+
+    def query(self, q_idx: np.ndarray, q_val: np.ndarray, k: int = 10) -> np.ndarray:
+        out = np.zeros((len(q_idx), k), np.int32)
+        for qi in range(len(q_idx)):
+            acc = np.zeros(self.n_docs, np.float32)
+            for t, v in zip(q_idx[qi], q_val[qi]):
+                if t < 0:
+                    continue
+                lst = self.vocab_lists.get(int(t))
+                if lst is None:
+                    continue
+                acc[lst[0]] += v * lst[1]
+            out[qi] = np.argsort(-acc)[:k]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# competitor: IVF-Fusion (JL-projected sparse + dense, inverted file)
+# ---------------------------------------------------------------------------
+
+
+class IVFFusion:
+    def __init__(self, docs: FusedVectors, n_clusters: int = 64, jl_dim: int = 64,
+                 seed: int = 0, kmeans_iters: int = 8):
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(seed)
+        dense = np.asarray(docs.dense, np.float32)
+        sp_idx = np.asarray(docs.learned.idx)
+        sp_val = np.asarray(docs.learned.val, np.float32)
+        vocab_guess = int(sp_idx.max()) + 1
+        self._jl = rng.normal(0, 1 / np.sqrt(jl_dim), size=(vocab_guess, jl_dim)).astype(
+            np.float32
+        )
+        self.fused = np.concatenate([dense, self._project(sp_idx, sp_val)], axis=1)
+        # k-means
+        cents = self.fused[rng.choice(len(self.fused), n_clusters, replace=False)]
+        for _ in range(kmeans_iters):
+            assign = np.argmax(self.fused @ cents.T, axis=1)
+            for c in range(n_clusters):
+                m = assign == c
+                if m.any():
+                    cents[c] = self.fused[m].mean(0)
+        self.cents = cents
+        self.assign = np.argmax(self.fused @ cents.T, axis=1)
+        self.lists = [np.nonzero(self.assign == c)[0] for c in range(n_clusters)]
+        self.build_s = time.perf_counter() - t0
+
+    def _project(self, idx, val):
+        out = np.zeros((len(idx), self._jl.shape[1]), np.float32)
+        for r in range(len(idx)):
+            ok = idx[r] >= 0
+            if ok.any():
+                out[r] = val[r][ok] @ self._jl[idx[r][ok]]
+        return out
+
+    def nbytes(self) -> int:
+        return self.fused.nbytes + self.cents.nbytes + sum(l.nbytes for l in self.lists)
+
+    def query(self, queries: FusedVectors, weights: PathWeights, k=10, nprobe=8):
+        qd = np.asarray(queries.dense, np.float32) * float(weights.dense)
+        qs = self._project(
+            np.asarray(queries.learned.idx), np.asarray(queries.learned.val)
+        ) * float(weights.sparse)
+        qf = np.concatenate([qd, qs], axis=1)
+        out = np.zeros((len(qf), k), np.int32)
+        for qi in range(len(qf)):
+            probes = np.argsort(-(qf[qi] @ self.cents.T))[:nprobe]
+            cand = np.concatenate([self.lists[c] for c in probes])
+            scores = self.fused[cand] @ qf[qi]
+            out[qi] = cand[np.argsort(-scores)[:k]]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# competitor: ThreeRoute (separate per-path graph indexes + fusion)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ThreeRoute:
+    """The paper's ThreeRouteGPU: one graph index per retrieval path, results
+    fused by weighted sum of path scores over the union of top-k'."""
+
+    indexes: list  # [dense, sparse, full] single-path HybridIndexes
+    build_s: float
+
+    @classmethod
+    def build(cls, docs: FusedVectors, cfg: BuildConfig):
+        from repro.core.knn_graph import build_knn_graph
+        from repro.core.pruning import rng_ip_prune
+
+        t0 = time.perf_counter()
+        base = build_index(
+            docs,
+            dataclasses.replace(
+                cfg, path_refine_iters=0, knn=dataclasses.replace(cfg.knn, iters=0)
+            ),
+        )
+        idxs = []
+        for w in (PathWeights.make(1, 0, 0), PathWeights.make(0, 1, 0),
+                  PathWeights.make(0, 0, 1)):
+            # a single-path index: build the graph under that path's metric
+            qcorp = weighted_query(docs, w)
+            knn_ids, knn_scores = build_knn_graph(
+                docs, cfg.knn, jax.random.key(0), queries=qcorp
+            )
+            sem, kw = rng_ip_prune(docs, knn_ids, knn_scores, cfg.prune)
+            idxs.append(dataclasses.replace(base, semantic_edges=sem, keyword_edges=kw))
+        return cls(idxs, time.perf_counter() - t0)
+
+    def nbytes(self) -> int:
+        return sum(
+            i.edge_nbytes()["semantic"] + i.edge_nbytes()["keyword"] for i in self.indexes
+        ) + self.indexes[0].edge_nbytes()["vectors"]
+
+    def query(self, queries: FusedVectors, weights: PathWeights, params: SearchParams,
+              k=10, k_route=30):
+        """Search each route for top-k', fuse by weighted hybrid score."""
+        single = [PathWeights.make(1, 0, 0), PathWeights.make(0, 1, 0),
+                  PathWeights.make(0, 0, 1)]
+        route_params = dataclasses.replace(params, k=k_route)
+        all_ids = []
+        for idx, w in zip(self.indexes, single):
+            res = search(idx, queries, w, route_params)
+            all_ids.append(np.asarray(res.ids))
+        union = np.concatenate(all_ids, axis=1)  # (B, 3k')
+        # rescore the union under the full hybrid weights (weighted-sum fusion)
+        qw = weighted_query(queries, weights)
+        ids = jnp.asarray(union)
+        scores = ops.hybrid_scores_vs_ids(qw, self.indexes[0].corpus, ids)
+        # dedup by id
+        from repro.core.knn_graph import dedup_mask
+
+        keep = jax.vmap(dedup_mask)(ids)
+        scores = jnp.where(keep, scores, -jnp.inf)
+        top, pos = jax.lax.top_k(scores, k)
+        return np.asarray(jnp.take_along_axis(ids, pos, axis=-1))

@@ -1,0 +1,40 @@
+"""Paper Figure 10: RNG-IP joint pruning vs RNG-only vs IP-only —
+QPS/recall trade-off of the pruning strategy."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import default_build, simple_corpus, timed
+from repro.core import build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights, weighted_query
+from repro.data.corpus import recall_at_k
+from repro.kernels import ops
+
+
+def run(n_docs=4096, n_queries=64):
+    corpus = simple_corpus(n_docs, n_queries)
+    w = PathWeights.three_path()
+    qw = weighted_query(corpus.queries, w)
+    scores = ops.pairwise_scores_chunked(qw, corpus.docs)
+    _, truth = jax.lax.top_k(scores, 10)
+    truth = np.asarray(truth)
+
+    rows = []
+    for mode in ("joint", "rng", "ip"):
+        cfg = default_build(corpus.docs.n)
+        cfg = dataclasses.replace(
+            cfg, prune=dataclasses.replace(cfg.prune, mode=mode)
+        )
+        index = build_index(corpus.docs, cfg)
+        params = SearchParams(k=10, iters=40, pool_size=64)
+        ids, sec = timed(lambda: search(index, corpus.queries, w, params).ids)
+        rec = recall_at_k(np.asarray(ids), truth)
+        rows.append((f"fig10.{mode}", sec * 1e6 / n_queries,
+                     f"recall@10={rec:.3f};qps={n_queries/sec:.0f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Figure 11: effect of keyword edges — keyword-constrained queries
+with and without the recycled keyword edges (and the keyword filter)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import default_build, simple_corpus, timed
+from repro.core import build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights
+from repro.data.corpus import ndcg_at_k
+
+
+def run(n_docs=4096, n_queries=64):
+    corpus = simple_corpus(n_docs, n_queries)
+    truth = corpus.query_relevant
+    kw = jnp.asarray(corpus.query_keywords)
+    cfg = default_build(corpus.docs.n)
+    index = build_index(corpus.docs, cfg)
+    # index without keyword edges (ablation)
+    index_nokw = dataclasses.replace(
+        index, keyword_edges=jnp.full_like(index.keyword_edges, -1)
+    )
+    rows = []
+    for pname, w in [("full", PathWeights.make(0, 0, 1)),
+                     ("three", PathWeights.three_path())]:
+        for label, idx, use_kw in [
+            ("plain", index, False),
+            ("kw-filter-no-edges", index_nokw, True),
+            ("kw-edges", index, True),
+        ]:
+            params = SearchParams(k=10, iters=40, pool_size=64, use_keywords=use_kw)
+            ids, sec = timed(
+                lambda idx=idx, params=params: search(
+                    idx, corpus.queries, w, params,
+                    keywords=kw if use_kw else None,
+                ).ids
+            )
+            nd = ndcg_at_k(np.asarray(ids), truth, 10)
+            rows.append((f"fig11.{pname}.{label}", sec * 1e6 / n_queries,
+                         f"ndcg={nd:.3f};qps={n_queries/sec:.0f}"))
+    return rows

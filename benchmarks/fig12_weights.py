@@ -1,0 +1,39 @@
+"""Paper Figure 12: accuracy across fusion weights — the same index serving
+every weight vector with zero reconstruction."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import default_build, simple_corpus, timed
+from repro.core import build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights
+from repro.data.corpus import ndcg_at_k
+
+
+def run(n_docs=4096, n_queries=64):
+    corpus = simple_corpus(n_docs, n_queries)
+    truth = corpus.query_relevant
+    cfg = default_build(corpus.docs.n)
+    index = build_index(corpus.docs, cfg)
+    params = SearchParams(k=10, iters=40, pool_size=64)
+    rows = []
+    best_alpha, best_nd = 0.5, -1.0
+    for alpha in (0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0):
+        w = PathWeights.make(alpha, 1 - alpha, 0.0)
+        ids, sec = timed(lambda w=w: search(index, corpus.queries, w, params).ids)
+        nd = ndcg_at_k(np.asarray(ids), truth, 10)
+        if nd > best_nd:
+            best_alpha, best_nd = alpha, nd
+        rows.append((f"fig12.two_path.a{alpha:.1f}", sec * 1e6 / n_queries,
+                     f"ndcg={nd:.3f}"))
+    for alpha in (0.1, 0.5, 0.9):
+        # three-path: alpha * (dense + w_opt*sparse) + (1-alpha) * full
+        w_opt = best_alpha and (1 - best_alpha) / max(best_alpha, 1e-6)
+        w = PathWeights.make(alpha, alpha * w_opt, 1 - alpha)
+        ids, sec = timed(lambda w=w: search(index, corpus.queries, w, params).ids)
+        nd = ndcg_at_k(np.asarray(ids), truth, 10)
+        rows.append((f"fig12.three_path.a{alpha:.1f}", sec * 1e6 / n_queries,
+                     f"ndcg={nd:.3f}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Figure 14: scalability — build time, index size, and query latency
+vs corpus size (CPU-scaled sizes; the trends are the claim)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import default_build, simple_corpus, timed
+from repro.core import build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights
+
+
+def run(sizes=(2048, 4096, 8192, 16384), n_queries=32):
+    rows = []
+    w = PathWeights.three_path()
+    params = SearchParams(k=10, iters=48, pool_size=64)
+    for n in sizes:
+        corpus = simple_corpus(n, n_queries, seed=17)
+        cfg = default_build(n)
+        t0 = time.perf_counter()
+        index = build_index(corpus.docs, cfg)
+        build_s = time.perf_counter() - t0
+        size_mb = sum(index.edge_nbytes().values()) / 1e6
+        ids, sec = timed(lambda: search(index, corpus.queries, w, params).ids)
+        rows.append((f"fig14.n{n}", sec * 1e6 / n_queries,
+                     f"build_s={build_s:.1f};size_mb={size_mb:.1f};qps={n_queries/sec:.0f}"))
+    return rows

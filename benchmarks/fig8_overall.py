@@ -1,0 +1,76 @@
+"""Paper Figure 8: QPS vs nDCG@10 for all methods on simple + multi-hop
+corpora, hybrid paths at equal weights."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import (
+    IVFFusion,
+    SparseInvertedIndex,
+    ThreeRoute,
+    bruteforce_topk,
+    default_build,
+    multihop_corpus,
+    simple_corpus,
+    timed,
+)
+from repro.core import build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights
+from repro.data.corpus import ndcg_at_k
+
+
+def run(n_docs=8192, n_queries=64):
+    rows = []
+    for ds_name, corpus in (
+        ("simple", simple_corpus(n_docs, n_queries)),
+        ("multihop", multihop_corpus(n_docs // 2, n_queries)),
+    ):
+        truth = corpus.query_relevant
+        cfg = default_build(corpus.docs.n)
+        index = build_index(corpus.docs, cfg)
+        params = SearchParams(k=10, iters=48, pool_size=64)
+        nq = corpus.queries.dense.shape[0]
+
+        def bench(name, fn):
+            ids, sec = timed(fn, repeats=3)
+            qps = nq / sec
+            nd = ndcg_at_k(np.asarray(ids), truth, k=10)
+            rows.append((f"fig8.{ds_name}.{name}", sec * 1e6 / nq, f"qps={qps:.0f};ndcg@10={nd:.3f}"))
+
+        # Allan-Poe path configurations — same index, zero reconstruction
+        for pname, w in [
+            ("allanpoe-dense", PathWeights.make(1, 0, 0)),
+            ("allanpoe-sparse", PathWeights.make(0, 1, 0)),
+            ("allanpoe-full", PathWeights.make(0, 0, 1)),
+            ("allanpoe-two", PathWeights.make(1, 1, 0)),
+            ("allanpoe-three", PathWeights.three_path()),
+        ]:
+            bench(pname, lambda w=w: search(index, corpus.queries, w, params).ids)
+
+        # brute force
+        bench("bruteforce-three",
+              lambda: bruteforce_topk(corpus.docs, corpus.queries, PathWeights.three_path()))
+
+        # SEISMIC-style sparse inverted
+        inv = SparseInvertedIndex(corpus.docs)
+        qs_i = np.asarray(corpus.queries.learned.idx)
+        qs_v = np.asarray(corpus.queries.learned.val)
+        bench("sparse-inverted", lambda: inv.query(qs_i, qs_v))
+
+        # IVF-Fusion
+        ivf = IVFFusion(corpus.docs, n_clusters=max(corpus.docs.n // 128, 16))
+        bench("ivf-fusion",
+              lambda: ivf.query(corpus.queries, PathWeights.make(1, 1, 0)))
+
+        # ThreeRoute separate multi-path
+        tr = ThreeRoute.build(corpus.docs, cfg)
+        bench("three-route",
+              lambda: tr.query(corpus.queries, PathWeights.three_path(), params))
+    return rows

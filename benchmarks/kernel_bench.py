@@ -1,0 +1,52 @@
+"""Hybrid distance kernel micro-bench: interpret-mode correctness timing on
+CPU + the analytic TPU roofline character of the kernel (it is the
+distance-computation hot spot the paper's warp kernel targets)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.usms import PathWeights, weighted_query
+from repro.kernels import ops, ref
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
+from tests.helpers import random_fused
+
+from benchmarks.common import timed
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    b, c, dd, ps, pf = 8, 512, 1024, 64, 32
+    q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
+    cands = random_fused(rng, (b, c), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
+
+    _, t_oracle = timed(
+        lambda: jax.block_until_ready(ops.hybrid_scores(q, cands, use_kernel=False))
+    )
+    _, t_kernel = timed(
+        lambda: jax.block_until_ready(
+            ops.hybrid_scores(q, cands, use_kernel=True, interpret=True)
+        )
+    )
+    n_pairs = b * c
+    rows.append(("kernel.oracle_xla_cpu", t_oracle * 1e6 / n_pairs, f"pairs={n_pairs}"))
+    rows.append(("kernel.pallas_interpret", t_kernel * 1e6 / n_pairs,
+                 "interpret-mode (correctness harness, not TPU perf)"))
+
+    # analytic TPU roofline of one (query x C_TILE) grid cell
+    c_tile = 128
+    dense_flops = 2 * c_tile * dd
+    sparse_flops = 3 * c_tile * ps * ps + 3 * c_tile * pf * pf  # cmp+mul+acc
+    bytes_moved = c_tile * (dd * 2 + ps * 8 + pf * 8) + dd * 2 + ps * 8 + pf * 8
+    ai = (dense_flops + sparse_flops) / bytes_moved
+    t_compute = (dense_flops + sparse_flops) / PEAK_FLOPS_BF16
+    t_memory = bytes_moved / HBM_BW
+    rows.append((
+        "kernel.tpu_roofline_per_tile",
+        max(t_compute, t_memory) * 1e6,
+        f"arith_intensity={ai:.1f}flops/B;bound={'memory' if t_memory > t_compute else 'compute'}",
+    ))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Table 2: index build time and index size across methods.
+
+Index size counts index structures + stored vectors (the unified index
+stores one copy of the vectors; ThreeRoute needs three graphs; the paper's
+headline is exactly this storage reduction)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    IVFFusion,
+    SparseInvertedIndex,
+    ThreeRoute,
+    default_build,
+    simple_corpus,
+)
+from repro.core import build_index
+
+
+def run(n_docs=8192):
+    corpus = simple_corpus(n_docs, 8)
+    cfg = default_build(corpus.docs.n)
+    rows = []
+
+    t0 = time.perf_counter()
+    index = build_index(corpus.docs, cfg)
+    ap_time = time.perf_counter() - t0
+    sizes = index.edge_nbytes()
+    ap_size = sum(sizes.values())
+    rows.append(("table2.allanpoe.build_s", ap_time * 1e6, f"size_mb={ap_size/1e6:.1f};edges_mb={(ap_size-sizes['vectors'])/1e6:.2f}"))
+
+    tr = ThreeRoute.build(corpus.docs, cfg)
+    rows.append(("table2.three_route.build_s", tr.build_s * 1e6, f"size_mb={tr.nbytes()/1e6:.1f}"))
+
+    inv = SparseInvertedIndex(corpus.docs)
+    rows.append(("table2.sparse_inverted.build_s", inv.build_s * 1e6, f"size_mb={inv.nbytes()/1e6:.1f}"))
+
+    ivf = IVFFusion(corpus.docs, n_clusters=max(n_docs // 128, 16))
+    rows.append(("table2.ivf_fusion.build_s", ivf.build_s * 1e6, f"size_mb={ivf.nbytes()/1e6:.1f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Table 5 + Figure 13: insertion cost vs full rebuild, and the
+retrieval quality of updated indexes."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import default_build, simple_corpus, timed
+from repro.core import build_index, insert
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights, weighted_query
+from repro.data.corpus import recall_at_k
+from repro.kernels import ops
+
+
+def run(n_docs=4096, n_queries=64):
+    corpus = simple_corpus(n_docs, n_queries)
+    cfg = default_build(n_docs)
+    w = PathWeights.three_path()
+    params = SearchParams(k=10, iters=40, pool_size=64)
+    qw = weighted_query(corpus.queries, w)
+    scores = ops.pairwise_scores_chunked(qw, corpus.docs)
+    _, truth = jax.lax.top_k(scores, 10)
+    truth = np.asarray(truth)
+
+    t0 = time.perf_counter()
+    full_index = build_index(corpus.docs, cfg)
+    rebuild_s = time.perf_counter() - t0
+    res = search(full_index, corpus.queries, w, params)
+    rec_full = recall_at_k(np.asarray(res.ids), truth)
+    rows = [("table5.rebuild", rebuild_s * 1e6, f"recall={rec_full:.3f}")]
+
+    for frac in (0.05, 0.10, 0.20):
+        n_keep = int(n_docs * (1 - frac))
+        base = build_index(corpus.docs[slice(0, n_keep)], cfg)
+        new_docs = corpus.docs[slice(n_keep, n_docs)]
+        t0 = time.perf_counter()
+        upd = insert(base, new_docs, cfg)
+        ins_s = time.perf_counter() - t0
+        res = search(upd, corpus.queries, w, params)
+        rec = recall_at_k(np.asarray(res.ids), truth)
+        rows.append((f"table5.insert_{int(frac*100)}pct", ins_s * 1e6,
+                     f"recall={rec:.3f};vs_rebuild={ins_s/rebuild_s:.2%}"))
+    return rows

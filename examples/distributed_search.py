@@ -1,0 +1,57 @@
+"""Segment-sharded distributed search on a (pod, data, model) mesh — the
+production layout of the hybrid index, demonstrated with 8 fake devices.
+
+    PYTHONPATH=src python examples/distributed_search.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig
+from repro.core.distributed import (
+    build_segmented_index,
+    make_distributed_search,
+    place_segmented_index,
+)
+from repro.core.search import SearchParams
+from repro.core.usms import PathWeights, weighted_query
+from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
+from repro.kernels import ops
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    print(f"mesh: {dict(mesh.shape)} = {mesh.devices.size} devices")
+    corpus = make_corpus(CorpusConfig(n_docs=2048, n_queries=16, d_dense=48, seed=5))
+
+    n_segments = 4  # pod x data groups
+    seg = build_segmented_index(
+        corpus.docs, n_segments,
+        BuildConfig(knn=KnnConfig(k=16, iters=4, node_chunk=1024),
+                    prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=512),
+                    path_refine_iters=1),
+    )
+    seg = place_segmented_index(seg, mesh)
+    print(f"{n_segments} segments x {seg.global_ids.shape[1]} docs, "
+          f"queries sharded over the model axis")
+
+    w = PathWeights.three_path()
+    params = SearchParams(k=10, iters=32, pool_size=64)
+    run = make_distributed_search(mesh, w, params)
+    res = run(seg, corpus.queries)
+
+    qw = weighted_query(corpus.queries, w)
+    truth = jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1]
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(truth))
+    print(f"global recall@10 vs brute force: {rec:.3f}")
+    print(f"total nodes expanded across devices: {int(res.expanded[0])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fault-tolerant training demo: inject two node failures; the supervised
+driver restarts from the last committed checkpoint and produces the exact
+same trajectory as an uninterrupted run.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import dataclasses
+import tempfile
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import transformer as tfm
+from repro.runtime.fault_tolerance import FailureInjector, StragglerMonitor, run_supervised
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"), vocab=256)
+    tcfg = TrainConfig(opt=opt.OptConfig(lr=1e-3, warmup_steps=3, total_steps=40))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4))
+    step_fn = make_train_step(cfg, tcfg, None, None)
+
+    def make_state():
+        params = tfm.init_params(jax.random.key(0), cfg)
+        return {"params": params, "opt": opt.init_opt_state(params, tcfg.opt)}
+
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        print("reference run (no failures)...")
+        ref = run_supervised(
+            n_steps=30, make_state=make_state, train_step=step_fn,
+            batch_fn=pipe.batch, ckpt_dir=d1, ckpt_every=10,
+        )
+        print(f"  final loss {ref.losses[-1]:.4f}")
+
+        print("run with injected failures at steps 12 and 23...")
+        rep = run_supervised(
+            n_steps=30, make_state=make_state, train_step=step_fn,
+            batch_fn=pipe.batch, ckpt_dir=d2, ckpt_every=10,
+            injector=FailureInjector(fail_at={12, 23}),
+            monitor=StragglerMonitor(),
+        )
+        print(f"  {rep.restarts} restarts; final loss {rep.losses[-1]:.4f}")
+        match = np.isclose(rep.losses[-1], ref.losses[-1], rtol=1e-6)
+        print(f"  trajectories match: {bool(match)} "
+              "(checkpoint/restart is bit-exact with deterministic data skip)")
+
+
+if __name__ == "__main__":
+    main()

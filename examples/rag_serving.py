@@ -1,0 +1,69 @@
+"""End-to-end driver (the paper's kind: retrieval serving): build the hybrid
+index over a corpus, then serve batched retrieval-augmented generation
+requests — hybrid search -> context assembly -> batched decode.
+
+    PYTHONPATH=src python examples/rag_serving.py
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams
+from repro.core.usms import PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
+from repro.models import transformer as tfm
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.rag import RagConfig, RagPipeline
+
+
+def main():
+    print("=== retrieval-augmented serving (end-to-end) ===")
+    n_docs, n_requests = 4096, 16
+    corpus = make_corpus(CorpusConfig(
+        n_docs=n_docs, n_queries=n_requests, n_topics=64, d_dense=64, seed=3,
+    ))
+
+    t0 = time.perf_counter()
+    index = build_index(
+        corpus.docs,
+        BuildConfig(
+            knn=KnnConfig(k=24, iters=4, node_chunk=2048),
+            prune=PruneConfig(degree=24, keyword_degree=8, node_chunk=512),
+            path_refine_iters=1,
+        ),
+    )
+    print(f"index over {n_docs} docs built in {time.perf_counter()-t0:.1f}s")
+
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"), vocab=2048)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    engine = ServingEngine(cfg, params, ServeConfig(max_len=256, batch=n_requests))
+
+    rng = np.random.default_rng(0)
+    doc_tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(n_docs, 16)), jnp.int32)
+    rag = RagPipeline(
+        engine, index, doc_tokens,
+        RagConfig(top_k=3, ctx_tokens_per_doc=16,
+                  search=SearchParams(k=3, iters=40, pool_size=64)),
+    )
+
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, size=(n_requests, 8)), jnp.int32)
+    t0 = time.perf_counter()
+    out, res = rag.answer(corpus.queries, prompts, n_tokens=24)
+    dt = time.perf_counter() - t0
+
+    rec = recall_at_k(np.asarray(res.ids), corpus.query_relevant[:, :1])
+    print(f"{n_requests} requests: retrieve(top-3) + generate(24 tok) "
+          f"in {dt:.1f}s  ({n_requests * 24 / dt:.1f} tok/s)")
+    print(f"retrieval recall of planted docs: {rec:.2f}")
+    print(f"output shape: {out.shape} (context 3x16 + prompt 8 + 24 generated)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``CONFIG`` (the exact published configuration from the
+assignment) and ``smoke_config()`` (a reduced same-family config for CPU
+smoke tests). Select with ``--arch <id>`` in the launchers.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "rwkv6-7b",
+    "llama3.2-1b",
+    "starcoder2-15b",
+    "qwen2-1.5b",
+    "deepseek-7b",
+    "llama-3.2-vision-90b",
+    "zamba2-1.2b",
+    "kimi-k2-1t-a32b",
+    "deepseek-v3-671b",
+    "whisper-large-v3",
+]
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,33 @@
+"""Allan-Poe core: the paper's all-in-one hybrid graph index in JAX."""
+
+from repro.core.index import BuildConfig, HybridIndex, build_index, insert, mark_deleted
+from repro.core.knn_graph import KnnConfig, build_knn_graph
+from repro.core.pruning import PruneConfig, rng_ip_prune
+from repro.core.search import SearchParams, SearchResult, search
+from repro.core.usms import (
+    PAD_IDX,
+    FusedVectors,
+    PathWeights,
+    SparseVec,
+    weighted_query,
+)
+
+__all__ = [
+    "BuildConfig",
+    "HybridIndex",
+    "build_index",
+    "insert",
+    "mark_deleted",
+    "KnnConfig",
+    "build_knn_graph",
+    "PruneConfig",
+    "rng_ip_prune",
+    "SearchParams",
+    "SearchResult",
+    "search",
+    "PAD_IDX",
+    "FusedVectors",
+    "PathWeights",
+    "SparseVec",
+    "weighted_query",
+]

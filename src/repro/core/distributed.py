@@ -1,0 +1,284 @@
+"""Distributed retrieval: segment-sharded hybrid index over the production
+mesh (paper §5.9 scaling story, Milvus/Starling-style data segments).
+
+Sharding layout on a mesh with axes ("pod", "data", "model") — or any prefix:
+
+  * the corpus is split into S = |pod|x|data| *segments*; every segment owns
+    a full standalone hybrid index over its documents (graphs never cross
+    segments, exactly like vector-DB data segments, so construction and
+    updates stay embarrassingly parallel);
+  * the "model" axis shards the *query batch* within each segment group —
+    with 2x16 pods x 16-way model that is 512-way parallelism for a batched
+    search;
+  * each device runs the full beam search on its (segment, query-shard)
+    block; results are merged with one all_gather over "model" (reassemble
+    the batch) + one all_gather over ("pod", "data") (merge segment top-k) +
+    a local top-k — the only collectives in the query path.
+
+The per-device compute (gather + hybrid-distance kernel) is identical to the
+single-device path, so the Pallas kernel is reused unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.index import BuildConfig, HybridIndex, build_index
+from repro.core.search import SearchParams, SearchResult, _search_batch
+from repro.core.usms import PAD_IDX, FusedVectors, PathWeights
+
+SEGMENT_AXES = ("pod", "data")  # axes that shard segments (present subset used)
+QUERY_AXIS = "model"  # axis that shards the query batch
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["index", "global_ids"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SegmentedIndex:
+    """Per-segment hybrid indexes stacked on a leading segment axis.
+
+    index: HybridIndex pytree whose leaves have shape (S, ...).
+    global_ids: (S, n_seg) int32 mapping local row -> original doc id.
+    """
+
+    index: HybridIndex
+    global_ids: jax.Array
+
+    @property
+    def n_segments(self) -> int:
+        return self.global_ids.shape[0]
+
+
+def segment_slices(n: int, n_segments: int) -> list[tuple[int, int]]:
+    per = -(-n // n_segments)  # ceil
+    return [(s * per, min((s + 1) * per, n)) for s in range(n_segments)]
+
+
+def shard_corpus(
+    corpus: FusedVectors, n_segments: int
+) -> tuple[list[FusedVectors], np.ndarray]:
+    """Split a corpus into equal segments (last one zero-padded).
+    Returns per-segment corpora and the (S, n_seg) global id map."""
+    n = corpus.n
+    per = -(-n // n_segments)
+    gids = np.full((n_segments, per), PAD_IDX, np.int32)
+    parts = []
+    for s, (lo, hi) in enumerate(segment_slices(n, n_segments)):
+        gids[s, : hi - lo] = np.arange(lo, hi)
+        part = corpus[slice(lo, hi)]
+        pad = per - (hi - lo)
+        if pad:
+            part = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]
+                ),
+                part,
+            )
+        parts.append(part)
+    return parts, gids
+
+
+def build_segmented_index(
+    corpus: FusedVectors,
+    n_segments: int,
+    cfg: BuildConfig = BuildConfig(),
+    *,
+    key: Optional[jax.Array] = None,
+    kg_triplets: Optional[np.ndarray] = None,
+    doc_entities: Optional[np.ndarray] = None,
+    n_entities: int = 0,
+) -> SegmentedIndex:
+    """Build every segment's index independently (the distributed-construction
+    model: on real hardware each host builds its own segments; here the loop
+    is sequential but each build is the same jitted program)."""
+    key = key if key is not None else jax.random.key(0)
+    parts, gids = shard_corpus(corpus, n_segments)
+    indexes = []
+    for s, part in enumerate(parts):
+        kg_kwargs = {}
+        if kg_triplets is not None and doc_entities is not None:
+            lo, hi = segment_slices(corpus.n, n_segments)[s]
+            ents = np.full((part.n, doc_entities.shape[1]), PAD_IDX, np.int32)
+            ents[: hi - lo] = doc_entities[lo:hi]
+            kg_kwargs = dict(
+                kg_triplets=kg_triplets, doc_entities=ents, n_entities=n_entities
+            )
+        idx = build_index(part, cfg, key=jax.random.fold_in(key, s), **kg_kwargs)
+        # padded rows must never be returned
+        valid = jnp.asarray(gids[s] >= 0)
+        idx = dataclasses.replace(idx, alive=idx.alive & valid)
+        indexes.append(idx)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *indexes)
+    return SegmentedIndex(index=stacked, global_ids=jnp.asarray(gids))
+
+
+def _present_axes(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    weights: PathWeights,
+    params: SearchParams,
+):
+    """Build the jitted shard_map search for a given mesh.
+
+    Returns fn(seg_index, queries) -> SearchResult with globally-merged ids.
+    Queries are sharded over the "model" axis (if present); the segmented
+    index is sharded over ("pod", "data").
+    """
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    q_axes = _present_axes(mesh, (QUERY_AXIS,))
+    seg_spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+    q_spec = P(q_axes[0]) if q_axes else P()
+    NEG_FILL = jnp.float32(-1e30)
+
+    def local_search(seg_index: SegmentedIndex, queries: FusedVectors):
+        # shard_map gives each device a (segments_per_device=1, ...) block
+        idx = jax.tree.map(lambda a: a[0], seg_index.index)
+        gids = seg_index.global_ids[0]
+        res = _search_batch(
+            idx,
+            queries,
+            weights,
+            jnp.full((queries.dense.shape[0], 1), PAD_IDX, jnp.int32),
+            jnp.full((queries.dense.shape[0], 1), PAD_IDX, jnp.int32),
+            params,
+        )
+        # local -> global ids
+        g = jnp.where(
+            res.ids >= 0, gids[jnp.clip(res.ids, 0, gids.shape[0] - 1)], PAD_IDX
+        )
+        scores = jnp.where(g >= 0, res.scores, -jnp.inf)
+
+        # reassemble the query batch across the model axis
+        if q_axes:
+            g = jax.lax.all_gather(g, q_axes[0], axis=0, tiled=True)
+            scores = jax.lax.all_gather(scores, q_axes[0], axis=0, tiled=True)
+
+        # merge segment top-k across (pod, data)
+        if seg_axes:
+            g_all = jax.lax.all_gather(g, seg_axes, axis=0)  # (S, B, k)
+            s_all = jax.lax.all_gather(scores, seg_axes, axis=0)
+            b = g.shape[0]
+            g_all = jnp.moveaxis(g_all, 0, 1).reshape(b, -1)
+            s_all = jnp.moveaxis(s_all, 0, 1).reshape(b, -1)
+        else:
+            g_all, s_all = g, scores
+        top, pos = jax.lax.top_k(s_all, params.k)
+        ids = jnp.where(
+            jnp.isfinite(top), jnp.take_along_axis(g_all, pos, axis=-1), PAD_IDX
+        )
+        expanded = res.expanded.sum()
+        all_axes = tuple(seg_axes) + tuple(q_axes)
+        if all_axes:
+            expanded = jax.lax.psum(expanded, all_axes)
+        return ids, jnp.where(jnp.isfinite(top), top, NEG_FILL), expanded
+
+    shard_fn = jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(
+            SegmentedIndex(
+                index=jax.tree.map(lambda _: seg_spec, _index_struct()),
+                global_ids=seg_spec,
+            ),
+            jax.tree.map(lambda _: q_spec, _queries_struct()),
+        ),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(seg_index: SegmentedIndex, queries: FusedVectors) -> SearchResult:
+        ids, scores, expanded = shard_fn(seg_index, queries)
+        return SearchResult(ids, scores, jnp.broadcast_to(expanded, (ids.shape[0],)))
+
+    return run
+
+
+def _index_struct():
+    """A HybridIndex-shaped pytree of placeholders for building spec trees."""
+    z = 0
+    return HybridIndex(
+        corpus=_queries_struct(),
+        semantic_edges=z,
+        keyword_edges=z,
+        logical_edges=z,
+        doc_entities=z,
+        entity_to_docs=z,
+        entity_adj=z,
+        entry_points=z,
+        alive=z,
+        self_ip=z,
+    )
+
+
+def _queries_struct():
+    from repro.core.usms import SparseVec
+
+    z = 0
+    return FusedVectors(dense=z, learned=SparseVec(z, z), lexical=SparseVec(z, z))
+
+
+def place_segmented_index(
+    seg_index: SegmentedIndex, mesh: Mesh
+) -> SegmentedIndex:
+    """Device_put the segmented index with segments over ("pod", "data")."""
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+    sharding = NamedSharding(mesh, spec)
+    return jax.tree.map(
+        lambda a: jax.device_put(a, sharding) if hasattr(a, "shape") else a, seg_index
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed construction round (for the construction dry-run at scale):
+# each segment runs one NN-Descent round locally under shard_map.
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_descent_round(mesh: Mesh, cfg):
+    """One lock-step NN-Descent round across all segments (shard_map). The
+    graph of each segment is private, so no cross-device collectives appear in
+    the construction path — the build scales linearly with devices."""
+    from repro.core.knn_graph import _descent_round_chunk
+
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+
+    def local_round(corpus, nbr_ids, scores, rand_ids):
+        corpus = jax.tree.map(lambda a: a[0], corpus)
+        nbr_ids, scores, rand_ids = nbr_ids[0], scores[0], rand_ids[0]
+        n = nbr_ids.shape[0]
+        node_ids = jnp.arange(n, dtype=jnp.int32)
+        ids, sc = _descent_round_chunk(
+            corpus, nbr_ids, corpus, node_ids, nbr_ids, scores, rand_ids, cfg
+        )
+        return ids[None], sc[None]
+
+    return jax.jit(
+        jax.shard_map(
+            local_round,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: spec, _queries_struct()),
+                spec,
+                spec,
+                spec,
+            ),
+            out_specs=(spec, spec),
+            check_vma=False,
+        )
+    )

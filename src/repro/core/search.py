@@ -1,0 +1,310 @@
+"""Flexible query processing on the hybrid index (paper §4.2, Algorithm 2).
+
+Decouples computation from storage: path weights live in the *query* (Theorem
+1), keyword edges load dynamically only at nodes sharing a query keyword
+(§4.2.2), and logical edges load only within ``kg_max_hops`` of the query
+entities (§4.2.3) — so one index serves every path combination with zero
+reconstruction.
+
+GPU -> TPU: the CUDA best-first loop with hash-table visited sets becomes a
+fixed-iteration batched beam search — bounded candidate pool as sorted
+arrays, ``lax.top_k`` merges, id-matching dedup against pool + visited ring —
+vmapped over the query batch under ``lax.fori_loop``. The hybrid distances of
+each expansion go through the same Pallas kernel as construction.
+
+Twin candidate pool (§4.2.2): keyword-satisfying nodes that fall out of the
+primary pool are retained in a secondary pool; final results merge both and
+filter for required keywords.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import HybridIndex
+from repro.core.knn_graph import dedup_mask
+from repro.core.usms import (
+    PAD_IDX,
+    FusedVectors,
+    PathWeights,
+    has_keyword_overlap,
+    weighted_query,
+)
+from repro.kernels import ops
+
+NEG = -1e30
+INF_HOP = jnp.int32(10**6)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    k: int = 10
+    iters: int = 48  # expansion rounds (search breadth ~ iters * expand)
+    pool_size: int = 64  # primary candidate pool
+    kw_pool_size: int = 16  # twin pool for keyword-satisfying overflow
+    expand: int = 1  # nodes expanded per round (CAGRA-style multi-expansion;
+    # >1 cuts the sequential merge/top_k rounds ~expand-fold — §Perf)
+    use_kernel: bool = False
+    use_keywords: bool = False  # enable keyword edge loading + filtering
+    use_kg: bool = False  # enable logical edge traversal
+    kg_max_hops: int = 3  # x: max entity hops for logical expansion
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["ids", "scores", "expanded"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SearchResult:
+    ids: jax.Array  # (B, k) int32
+    scores: jax.Array  # (B, k) f32
+    expanded: jax.Array  # (B,) int32 number of expanded nodes (work measure)
+
+
+def _entry_state(index: HybridIndex, q_entities: jax.Array, p: SearchParams):
+    """Entry points: nodes containing user-specified entities when querying
+    with the KG, else the precomputed large-norm nodes (Algorithm 2 l.2-8)."""
+    n = index.n
+    base = index.entry_points  # (n_entry,)
+    base_ent = jnp.full(base.shape, PAD_IDX, jnp.int32)
+    if p.use_kg:
+        ent_safe = jnp.clip(q_entities, 0, index.entity_to_docs.shape[0] - 1)
+        ent_docs = index.entity_to_docs[ent_safe]  # (Eq, M)
+        valid_e = (q_entities >= 0)[:, None] & (ent_docs >= 0)
+        ent_ids = jnp.where(valid_e, ent_docs, PAD_IDX).reshape(-1)
+        ent_of = jnp.where(
+            valid_e, q_entities[:, None], PAD_IDX
+        ).reshape(-1)
+        ids = jnp.concatenate([ent_ids, base])
+        ents = jnp.concatenate([ent_of, base_ent])
+    else:
+        ids, ents = base, base_ent
+    keep = dedup_mask(ids)
+    ids = jnp.where(keep, ids, PAD_IDX)
+    hops = jnp.where(ents >= 0, 0, INF_HOP)
+    return ids, ents, hops
+
+
+def _search_one(
+    index: HybridIndex,
+    qw: FusedVectors,  # weight-scaled query (single, no batch dim)
+    q_keywords: jax.Array,  # (Kw,) required keyword ids (PAD padded)
+    q_entities: jax.Array,  # (Eq,) query entity ids (PAD padded)
+    w_kg: jax.Array,  # scalar kg weight
+    p: SearchParams,
+):
+    n = index.n
+    P = p.pool_size
+    q_b = jax.tree.map(lambda a: a[None], qw)  # add batch dim for the kernel
+
+    def score_ids(ids):
+        return ops.hybrid_scores_vs_ids(
+            q_b, index.corpus, ids[None], use_kernel=p.use_kernel
+        )[0]
+
+    # ---- init pool --------------------------------------------------------
+    e_ids, e_ents, e_hops = _entry_state(index, q_entities, p)
+    ne = e_ids.shape[0]
+    assert ne <= P, "pool_size must cover the entry set"
+    e_scores = jnp.where(e_ids >= 0, score_ids(e_ids), NEG)
+    if p.use_kg:
+        # entity-matched entry points get the full hop-0 logical reward so the
+        # traversal actually explores them (deviation from Algorithm 2 line 9,
+        # which would leave chain heads with near-zero semantic score
+        # unexpanded; see DESIGN.md §2)
+        e_scores = jnp.where(
+            (e_ents >= 0) & (e_ids >= 0), e_scores + w_kg, e_scores
+        )
+    pad = lambda a, fill: jnp.concatenate(
+        [a, jnp.full((P - ne,) + a.shape[1:], fill, a.dtype)]
+    )
+    E = p.expand
+    pool_ids = pad(e_ids, PAD_IDX)
+    pool_scores = pad(e_scores, NEG)
+    pool_visited = pad(jnp.zeros((ne,), bool), True)
+    pool_ents = pad(e_ents, PAD_IDX)
+    pool_hops = pad(e_hops, INF_HOP)
+    ring = jnp.full((p.iters * E,), PAD_IDX, jnp.int32)
+    kw_ids = jnp.full((p.kw_pool_size,), PAD_IDX, jnp.int32)
+    kw_scores = jnp.full((p.kw_pool_size,), NEG, jnp.float32)
+    n_expanded = jnp.int32(0)
+
+    def body(i, state):
+        (pool_ids, pool_scores, pool_visited, pool_ents, pool_hops, ring,
+         kw_ids, kw_scores, n_expanded) = state
+
+        # ---- pick the E best unvisited candidates (Algorithm 2 l.11;
+        # multi-expansion per round cuts sequential merge cost — §Perf) ----
+        sel = jnp.where(~pool_visited & (pool_ids >= 0), pool_scores, NEG)
+        sel_top, js = jax.lax.top_k(sel, E)  # (E,)
+        active = sel_top > NEG
+        u = jnp.where(active, pool_ids[js], PAD_IDX)  # (E,)
+        u_safe = jnp.clip(u, 0, n - 1)
+        u_ent = pool_ents[js]
+        u_hop = pool_hops[js]
+        pool_visited = pool_visited.at[js].set(True)
+        ring = jax.lax.dynamic_update_slice_in_dim(ring, u, i * E, axis=0)
+        n_expanded = n_expanded + active.sum().astype(jnp.int32)
+
+        # ---- gather neighbor lists (l.13-17, dynamic edge loading) ----
+        parts_ids = [index.semantic_edges[u_safe]]  # (E, d)
+        parts_ents = [jnp.full((E, index.degree), PAD_IDX, jnp.int32)]
+        if p.use_keywords:
+            shares = has_keyword_overlap(
+                index.corpus.lexical.idx[u_safe], q_keywords[None, :]
+            )  # (E,)
+            kwe = jnp.where(
+                shares[:, None], index.keyword_edges[u_safe], PAD_IDX
+            )
+            parts_ids.append(kwe)
+            parts_ents.append(jnp.full(kwe.shape, PAD_IDX, jnp.int32))
+        if p.use_kg:
+            loge = index.logical_edges[u_safe]  # (E, L, 4)
+            ok = (
+                (u_ent[:, None] >= 0)
+                & (u_hop[:, None] < p.kg_max_hops)
+                & (loge[:, :, 1] == u_ent[:, None])
+                & (loge[:, :, 0] >= 0)
+            )
+            parts_ids.append(jnp.where(ok, loge[:, :, 0], PAD_IDX))
+            parts_ents.append(jnp.where(ok, loge[:, :, 3], PAD_IDX))
+        nbr_ids2 = jnp.concatenate(parts_ids, axis=1)  # (E, W)
+        nbr_log_ents2 = jnp.concatenate(parts_ents, axis=1)
+        nbr_ids2 = jnp.where(active[:, None], nbr_ids2, PAD_IDX)
+        src_hop2 = jnp.broadcast_to(u_hop[:, None], nbr_ids2.shape)
+        src_ent2 = jnp.broadcast_to(u_ent[:, None], nbr_ids2.shape)
+        nbr_ids = nbr_ids2.reshape(-1)
+        nbr_log_ents = nbr_log_ents2.reshape(-1)
+        src_hop = src_hop2.reshape(-1)
+        src_ent = src_ent2.reshape(-1)
+
+        # ---- dedup vs pool, visited ring, and within the list ----
+        dup = (nbr_ids[:, None] == pool_ids[None, :]).any(-1)
+        dup |= (nbr_ids[:, None] == ring[None, :]).any(-1)
+        nbr_ids = jnp.where(dup | ~dedup_mask(nbr_ids), PAD_IDX, nbr_ids)
+
+        # ---- entity matching for semantic expansions (l.19-20) ----
+        if p.use_kg:
+            cand_ents = index.doc_entities[jnp.clip(nbr_ids, 0, n - 1)]  # (W, Ed)
+            src_ent_safe = jnp.clip(src_ent, 0, index.entity_adj.shape[0] - 1)
+            rel = (
+                index.entity_adj[
+                    src_ent_safe[:, None], jnp.clip(cand_ents, 0, index.entity_adj.shape[0] - 1)
+                ]
+                & (cand_ents >= 0)
+                & (src_ent[:, None] >= 0)
+            )  # (W, Ed)
+            first = jnp.argmax(rel, axis=-1)
+            sem_match = jnp.where(
+                rel.any(-1), jnp.take_along_axis(cand_ents, first[:, None], -1)[:, 0], PAD_IDX
+            )
+            o_ents = jnp.where(nbr_log_ents >= 0, nbr_log_ents, sem_match)
+            o_hops = jnp.where(
+                (o_ents >= 0) & (nbr_ids >= 0),
+                jnp.minimum(src_hop + 1, INF_HOP),
+                INF_HOP,
+            )
+            reward = jnp.where(
+                o_hops < INF_HOP, w_kg / jnp.maximum(o_hops, 1).astype(jnp.float32), 0.0
+            )
+        else:
+            o_ents = jnp.full(nbr_ids.shape, PAD_IDX, jnp.int32)
+            o_hops = jnp.full(nbr_ids.shape, INF_HOP)
+            reward = jnp.zeros(nbr_ids.shape, jnp.float32)
+
+        # ---- hybrid distances + logical reward (l.21-23) ----
+        nbr_scores = jnp.where(
+            nbr_ids >= 0, score_ids(nbr_ids) + reward, NEG
+        )
+
+        # ---- merge into the pool (l.24-25) ----
+        all_ids = jnp.concatenate([pool_ids, nbr_ids])
+        all_scores = jnp.concatenate([pool_scores, nbr_scores])
+        all_visited = jnp.concatenate([pool_visited, jnp.zeros(nbr_ids.shape, bool)])
+        all_ents = jnp.concatenate([pool_ents, o_ents])
+        all_hops = jnp.concatenate([pool_hops, o_hops])
+        top, pos = jax.lax.top_k(all_scores, P)
+        pool_ids = jnp.where(top > NEG, all_ids[pos], PAD_IDX)
+        pool_scores = top
+        pool_visited = all_visited[pos] | (top <= NEG)
+        pool_ents = all_ents[pos]
+        pool_hops = all_hops[pos]
+
+        # ---- twin pool: keyword-satisfying candidates (l.26-28) ----
+        if p.use_keywords:
+            cand_kw = index.corpus.lexical.idx[jnp.clip(nbr_ids, 0, n - 1)]
+            matches = has_keyword_overlap(cand_kw, q_keywords) & (nbr_ids >= 0)
+            kwc_scores = jnp.where(matches, nbr_scores, NEG)
+            m_ids = jnp.concatenate([kw_ids, nbr_ids])
+            m_scores = jnp.concatenate([kw_scores, kwc_scores])
+            keep = dedup_mask(m_ids)
+            m_scores = jnp.where(keep, m_scores, NEG)
+            kw_top, kw_pos = jax.lax.top_k(m_scores, p.kw_pool_size)
+            kw_ids = jnp.where(kw_top > NEG, m_ids[kw_pos], PAD_IDX)
+            kw_scores = kw_top
+
+        return (pool_ids, pool_scores, pool_visited, pool_ents, pool_hops,
+                ring, kw_ids, kw_scores, n_expanded)
+
+    state = (pool_ids, pool_scores, pool_visited, pool_ents, pool_hops,
+             ring, kw_ids, kw_scores, n_expanded)
+    state = jax.lax.fori_loop(0, p.iters, body, state)
+    (pool_ids, pool_scores, _, _, _, _, kw_ids, kw_scores, n_expanded) = state
+
+    # ---- final results (l.29-30): merge pools, keyword filter, alive filter
+    res_ids = jnp.concatenate([pool_ids, kw_ids])
+    res_scores = jnp.concatenate([pool_scores, kw_scores])
+    keep = dedup_mask(res_ids)
+    alive = index.alive[jnp.clip(res_ids, 0, n - 1)] & (res_ids >= 0)
+    res_scores = jnp.where(keep & alive, res_scores, NEG)
+    if p.use_keywords:
+        has_req = (q_keywords >= 0).any()
+        match = has_keyword_overlap(
+            index.corpus.lexical.idx[jnp.clip(res_ids, 0, n - 1)], q_keywords
+        )
+        res_scores = jnp.where(has_req & ~match, NEG, res_scores)
+    top, pos = jax.lax.top_k(res_scores, p.k)
+    out_ids = jnp.where(top > NEG, res_ids[pos], PAD_IDX)
+    return out_ids, top, n_expanded
+
+
+@partial(jax.jit, static_argnames=("params",))
+def _search_batch(
+    index: HybridIndex,
+    queries: FusedVectors,
+    weights: PathWeights,
+    q_keywords: jax.Array,
+    q_entities: jax.Array,
+    params: SearchParams,
+) -> SearchResult:
+    qw = weighted_query(queries, weights)
+    ids, scores, expanded = jax.vmap(
+        lambda q, kw, en: _search_one(index, q, kw, en, weights.kg, params)
+    )(qw, q_keywords, q_entities)
+    return SearchResult(ids, scores, expanded)
+
+
+def search(
+    index: HybridIndex,
+    queries: FusedVectors,
+    weights: PathWeights,
+    params: SearchParams,
+    *,
+    keywords: Optional[jax.Array] = None,  # (B, Kw) required keywords
+    entities: Optional[jax.Array] = None,  # (B, Eq) query entities
+) -> SearchResult:
+    """Batched hybrid search with any path combination (public API)."""
+    b = queries.dense.shape[0]
+    if keywords is None:
+        keywords = jnp.full((b, 1), PAD_IDX, jnp.int32)
+    if entities is None:
+        entities = jnp.full((b, 1), PAD_IDX, jnp.int32)
+    return _search_batch(
+        index, queries, weights, jnp.asarray(keywords), jnp.asarray(entities), params
+    )

@@ -1,0 +1,177 @@
+"""Unified Semantic Metric Space (USMS) — paper §3.1/§3.2.
+
+A USMS fuses the heterogeneous retrieval paths (dense vector, learned sparse
+vector, lexical/full-text sparse vector, knowledge-graph entities) into a
+single metric space where weighted hybrid search is *exactly* Maximum Inner
+Product Search (Theorem 1 of the paper):
+
+    M_w(q, d) = w_d·<qd, dd> + w_s·<qs, ds> + w_f·<qf, df>
+              = <[w_d·qd, w_s·qs, w_f·qf], [dd, ds, df]>
+
+so weights are applied to the QUERY only and one index serves any weight
+vector without reconstruction.
+
+TPU adaptation: sparse vectors use a fixed-nnz ELL layout ``(idx, val)`` with
+``PAD_IDX`` padding instead of CSR — fixed shapes are mandatory for XLA and
+turn the GPU per-thread binary-search intersection into vectorized
+equality-compare tiles (see ``kernels/hybrid_distance.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PAD_IDX = -1  # sentinel for unused sparse slots / entity slots
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["idx", "val"], meta_fields=[])
+@dataclasses.dataclass
+class SparseVec:
+    """Fixed-nnz (ELL) sparse vectors.
+
+    idx: (..., P) int32, PAD_IDX-padded, indices unique per row.
+    val: (..., P) float, 0 in padded slots.
+    """
+
+    idx: jax.Array
+    val: jax.Array
+
+    @property
+    def nnz_cap(self) -> int:
+        return self.idx.shape[-1]
+
+    def __getitem__(self, key) -> "SparseVec":
+        return SparseVec(self.idx[key], self.val[key])
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["dense", "learned", "lexical"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class FusedVectors:
+    """A batch of documents or queries in the USMS.
+
+    dense:   (..., Dd) float — semantic embedding (e.g. BGE-M3).
+    learned: SparseVec (..., Ps) — learned sparse (e.g. SPLADE).
+    lexical: SparseVec (..., Pf) — full-text/BM25 term weights. The lexical
+             ``idx`` doubles as the keyword set K(·) used by keyword edges.
+    """
+
+    dense: jax.Array
+    learned: SparseVec
+    lexical: SparseVec
+
+    @property
+    def n(self) -> int:
+        return self.dense.shape[0]
+
+    def __getitem__(self, key) -> "FusedVectors":
+        return FusedVectors(self.dense[key], self.learned[key], self.lexical[key])
+
+    def take(self, ids: jax.Array) -> "FusedVectors":
+        """Gather rows by id along axis 0. ids may contain PAD_IDX (clipped;
+        callers must mask the resulting scores)."""
+        safe = jnp.clip(ids, 0, self.dense.shape[0] - 1)
+        take = lambda a: jnp.take(a, safe, axis=0)
+        return FusedVectors(
+            take(self.dense),
+            SparseVec(take(self.learned.idx), take(self.learned.val)),
+            SparseVec(take(self.lexical.idx), take(self.lexical.val)),
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["dense", "sparse", "full", "kg"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class PathWeights:
+    """Runtime fusion weights [w_d, w_s, w_f, w_k] — a pytree of scalars so
+    that changing weights never triggers recompilation or index rebuild."""
+
+    dense: jax.Array
+    sparse: jax.Array
+    full: jax.Array
+    kg: jax.Array
+
+    @classmethod
+    def make(cls, dense=1.0, sparse=0.0, full=0.0, kg=0.0) -> "PathWeights":
+        f = lambda x: jnp.asarray(x, jnp.float32)
+        return cls(f(dense), f(sparse), f(full), f(kg))
+
+    @classmethod
+    def three_path(cls) -> "PathWeights":
+        return cls.make(1.0, 1.0, 1.0, 0.0)
+
+
+def weighted_query(q: FusedVectors, w: PathWeights) -> FusedVectors:
+    """Theorem 1: scale query components by path weights so the hybrid score
+    becomes a single inner product in the USMS."""
+    return FusedVectors(
+        q.dense * w.dense,
+        SparseVec(q.learned.idx, q.learned.val * w.sparse),
+        SparseVec(q.lexical.idx, q.lexical.val * w.full),
+    )
+
+
+def sparse_from_dense(x: jax.Array, nnz_cap: int) -> SparseVec:
+    """Keep the top-``nnz_cap`` entries by magnitude (SEISMIC-style static
+    pruning). x: (..., V) dense -> SparseVec (..., nnz_cap)."""
+    mag = jnp.abs(x)
+    val, idx = jax.lax.top_k(mag, nnz_cap)
+    gathered = jnp.take_along_axis(x, idx, axis=-1)
+    keep = val > 0
+    return SparseVec(
+        jnp.where(keep, idx, PAD_IDX).astype(jnp.int32),
+        jnp.where(keep, gathered, 0.0),
+    )
+
+
+def sparse_to_dense(s: SparseVec, vocab: int) -> jax.Array:
+    """Scatter an ELL sparse vector back to dense (oracle/testing only)."""
+    out_shape = s.idx.shape[:-1] + (vocab,)
+    flat_idx = s.idx.reshape(-1, s.idx.shape[-1])
+    flat_val = s.val.reshape(-1, s.val.shape[-1])
+
+    def scatter_row(i, v):
+        z = jnp.zeros((vocab,), flat_val.dtype)
+        safe = jnp.where(i >= 0, i, 0)
+        return z.at[safe].add(jnp.where(i >= 0, v, 0.0))
+
+    return jax.vmap(scatter_row)(flat_idx, flat_val).reshape(out_shape)
+
+
+def concat_dense(f: FusedVectors, vocab_s: int, vocab_f: int) -> jax.Array:
+    """Materialize f_concat(d) = [dense, sparse, full] as one dense vector
+    (oracle/testing only — never used at scale)."""
+    return jnp.concatenate(
+        [
+            f.dense,
+            sparse_to_dense(f.learned, vocab_s),
+            sparse_to_dense(f.lexical, vocab_f),
+        ],
+        axis=-1,
+    )
+
+
+def keyword_overlap(a_idx: jax.Array, b_idx: jax.Array) -> jax.Array:
+    """|K(a) ∩ K(b)| for PAD_IDX-padded keyword id arrays.
+
+    a_idx: (..., Pa), b_idx: (..., Pb) -> (...,) int32 overlap counts.
+    Assumes unique ids per row (true by construction).
+    """
+    eq = a_idx[..., :, None] == b_idx[..., None, :]
+    valid = (a_idx[..., :, None] >= 0) & (b_idx[..., None, :] >= 0)
+    return jnp.sum(eq & valid, axis=(-1, -2)).astype(jnp.int32)
+
+
+def has_keyword_overlap(a_idx: jax.Array, b_idx: jax.Array) -> jax.Array:
+    return keyword_overlap(a_idx, b_idx) > 0

@@ -1,0 +1,288 @@
+"""Synthetic corpora with planted structure for end-to-end evaluation.
+
+The container has no internet access, so the paper's datasets (NQ, MS MARCO,
+2WikiMultiHopQA, HotpotQA) are modeled by synthetic corpora that preserve the
+*structure* the paper's experiments rely on:
+
+  * topic clusters          -> dense semantic similarity (BGE-M3 analogue)
+  * Zipf-weighted term pools-> learned sparse vectors (SPLADE analogue)
+  * per-doc keyword sets    -> lexical/full-text vectors (BM25 analogue)
+  * entity chains           -> knowledge graph with multi-hop ground truth
+                               (2WikiMultiHopQA analogue)
+
+Each query carries *planted* relevant documents, so "end-to-end accuracy"
+(recall of planted docs) is measurable separately from vector-similarity
+recall — the distinction the paper's §2.2 motivation builds on. Queries can
+be biased so that different paths are informative for different query types
+(dense-informative, sparse-informative, mixed), reproducing the paper's
+finding that no single path or combination dominates everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+
+
+@dataclasses.dataclass
+class CorpusConfig:
+    n_docs: int = 4096
+    n_queries: int = 64
+    n_topics: int = 64
+    d_dense: int = 128
+    vocab_sparse: int = 30522  # SPLADE vocab size (paper Table 1)
+    vocab_lexical: int = 8192
+    nnz_sparse: int = 32  # fixed-nnz cap (ELL)
+    nnz_lexical: int = 16
+    nnz_query_sparse: int = 16
+    nnz_query_lexical: int = 8
+    terms_per_topic: int = 64
+    keywords_per_topic: int = 24
+    relevant_per_query: int = 3
+    dense_noise: float = 0.35
+    # entity/KG structure: each doc has one RARE entity (unique to it — named
+    # entities like "John" in the paper's example) + a few COMMON entities
+    # (places, concepts) shared across docs; multi-hop chains ride on rare
+    # entities so the chain tail is only reachable through the KG.
+    n_common_entities: int = 128
+    entities_per_doc: int = 4
+    chain_len: int = 3  # multi-hop chains: e0 -r-> e1 -r-> e2
+    seed: int = 0
+
+    @property
+    def n_entities(self) -> int:
+        return self.n_docs + self.n_common_entities
+
+
+@dataclasses.dataclass
+class KnowledgeGraph:
+    """Entity-level KG: triplets (src_entity, rel, dst_entity)."""
+
+    triplets: np.ndarray  # (T, 3) int32
+    n_entities: int
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    config: CorpusConfig
+    docs: FusedVectors  # (N, ...)
+    doc_entities: np.ndarray  # (N, E) int32 PAD_IDX-padded
+    doc_topics: np.ndarray  # (N,) int32
+    kg: KnowledgeGraph
+    queries: FusedVectors  # (Q, ...)
+    query_entities: np.ndarray  # (Q, E) int32
+    query_relevant: np.ndarray  # (Q, R) planted relevant doc ids
+    query_keywords: np.ndarray  # (Q, K) required-keyword ids (PAD_IDX padded)
+    query_multihop_target: np.ndarray  # (Q,) doc id reachable via KG chain, or -1
+
+
+def _unit(x: np.ndarray) -> np.ndarray:
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _ell_from_pairs(idx_rows, val_rows, cap: int):
+    """Pack per-row (indices, values) lists into fixed-nnz ELL arrays."""
+    n = len(idx_rows)
+    idx = np.full((n, cap), PAD_IDX, np.int32)
+    val = np.zeros((n, cap), np.float32)
+    for r, (ii, vv) in enumerate(zip(idx_rows, val_rows)):
+        order = np.argsort(-np.asarray(vv))[:cap]
+        ii = np.asarray(ii)[order]
+        vv = np.asarray(vv)[order]
+        idx[r, : len(ii)] = ii
+        val[r, : len(vv)] = vv
+    return idx, val
+
+
+def _sample_sparse(rng, pool, pool_w, nnz):
+    """Sample one Zipf-weighted sparse row from a term pool. Values follow a
+    BM25/SPLADE-like magnitude profile (frequent terms -> smaller weights)."""
+    k = min(nnz, len(pool))
+    sel = rng.choice(len(pool), size=k, replace=False, p=pool_w)
+    val = np.abs(rng.normal(1.0, 0.3, size=k)).astype(np.float32) * (
+        1.0 / np.sqrt(1.0 + 50.0 * pool_w[sel])
+    )
+    return pool[sel], val
+
+
+def make_corpus(cfg: CorpusConfig) -> SyntheticCorpus:
+    rng = np.random.default_rng(cfg.seed)
+    nt = cfg.n_topics
+
+    # --- topic machinery -------------------------------------------------
+    # Real text shares high-frequency terms across topics (Zipf), which is
+    # exactly what makes sparse-similarity landscapes navigable; topic pools
+    # therefore mix a GLOBAL common-term pool with topic-specific rare terms.
+    centers = _unit(rng.normal(size=(nt, cfg.d_dense)).astype(np.float32))
+    n_common = max(cfg.terms_per_topic // 2, 8)
+    common_terms = np.arange(n_common, dtype=np.int64)  # global frequent terms
+    common_kws = np.arange(max(cfg.keywords_per_topic // 2, 4), dtype=np.int64)
+    topic_terms = [
+        np.concatenate(
+            [
+                common_terms,
+                n_common
+                + rng.choice(
+                    cfg.vocab_sparse - n_common, size=cfg.terms_per_topic, replace=False
+                ),
+            ]
+        )
+        for _ in range(nt)
+    ]
+    topic_keywords = [
+        np.concatenate(
+            [
+                common_kws,
+                len(common_kws)
+                + rng.choice(
+                    cfg.vocab_lexical - len(common_kws),
+                    size=cfg.keywords_per_topic,
+                    replace=False,
+                ),
+            ]
+        )
+        for _ in range(nt)
+    ]
+
+    def zipf_for(pool_len):
+        z = 1.0 / np.arange(1, pool_len + 1)
+        return (z / z.sum()).astype(np.float64)
+
+    zipf = zipf_for(len(topic_terms[0]))
+    zipf_kw = zipf_for(len(topic_keywords[0]))
+
+    # --- documents --------------------------------------------------------
+    doc_topics = rng.integers(0, nt, size=cfg.n_docs).astype(np.int32)
+    dense = _unit(
+        centers[doc_topics]
+        + cfg.dense_noise * rng.normal(size=(cfg.n_docs, cfg.d_dense)).astype(np.float32)
+    )
+    si, sv, fi, fv = [], [], [], []
+    for t in doc_topics:
+        a, b = _sample_sparse(rng, topic_terms[t], zipf, cfg.nnz_sparse)
+        si.append(a)
+        sv.append(b)
+        a, b = _sample_sparse(rng, topic_keywords[t], zipf_kw, cfg.nnz_lexical)
+        fi.append(a)
+        fv.append(b)
+    s_idx, s_val = _ell_from_pairs(si, sv, cfg.nnz_sparse)
+    f_idx, f_val = _ell_from_pairs(fi, fv, cfg.nnz_lexical)
+    docs = FusedVectors(
+        dense, SparseVec(s_idx, s_val), SparseVec(f_idx, f_val)
+    )
+
+    # --- entities + KG chains ---------------------------------------------
+    doc_entities = np.full((cfg.n_docs, cfg.entities_per_doc), PAD_IDX, np.int32)
+    doc_entities[:, 0] = np.arange(cfg.n_docs)  # rare entity, unique per doc
+    for i in range(cfg.n_docs):
+        k = rng.integers(0, cfg.entities_per_doc)
+        if k > 0:
+            doc_entities[i, 1 : 1 + k] = cfg.n_docs + rng.choice(
+                cfg.n_common_entities, size=k, replace=False
+            )
+    # chains: docs d0 -> d1 -> d2 linked through their rare entities
+    triplets = []
+    n_chains = max(cfg.n_queries, cfg.n_docs // 16)
+    chain_docs = np.zeros((n_chains, cfg.chain_len), np.int32)
+    for c in range(n_chains):
+        ds = rng.choice(cfg.n_docs, size=cfg.chain_len, replace=False)
+        chain_docs[c] = ds
+        for a, b in zip(ds[:-1], ds[1:]):
+            rel = int(rng.integers(0, 64))
+            triplets.append((doc_entities[a, 0], rel, doc_entities[b, 0]))
+    # noise triplets among common entities
+    for _ in range(cfg.n_common_entities):
+        e1, e2 = cfg.n_docs + rng.choice(cfg.n_common_entities, 2, replace=False)
+        triplets.append((e1, int(rng.integers(0, 64)), e2))
+    kg = KnowledgeGraph(np.asarray(triplets, np.int32), cfg.n_entities)
+
+    # --- queries ------------------------------------------------------------
+    qt = rng.integers(0, nt, size=cfg.n_queries).astype(np.int32)
+    q_rel = np.zeros((cfg.n_queries, cfg.relevant_per_query), np.int32)
+    q_dense = np.zeros((cfg.n_queries, cfg.d_dense), np.float32)
+    qsi, qsv, qfi, qfv = [], [], [], []
+    q_keywords = np.full((cfg.n_queries, 4), PAD_IDX, np.int32)
+    q_entities = np.full((cfg.n_queries, 2), PAD_IDX, np.int32)
+    q_multihop = np.full((cfg.n_queries,), -1, np.int32)
+    for qi_ in range(cfg.n_queries):
+        t = qt[qi_]
+        members = np.nonzero(doc_topics == t)[0]
+        if len(members) < cfg.relevant_per_query:
+            members = np.arange(cfg.n_docs)
+        rel_docs = rng.choice(members, size=cfg.relevant_per_query, replace=False)
+        q_rel[qi_] = rel_docs
+        # dense: perturbation of the *relevant docs* mean (not the center) so
+        # that planted docs are near-optimal but not exactly top by one path
+        q_dense[qi_] = _unit(
+            docs.dense[rel_docs].mean(0)
+            + 0.5 * cfg.dense_noise * rng.normal(size=cfg.d_dense)
+        )
+        # sparse: terms drawn from the relevant docs' own terms
+        terms = np.unique(np.concatenate([s_idx[d][s_idx[d] >= 0] for d in rel_docs]))
+        sel = rng.choice(terms, size=min(cfg.nnz_query_sparse, len(terms)), replace=False)
+        qsi.append(sel)
+        qsv.append(np.abs(rng.normal(1.0, 0.3, size=len(sel))).astype(np.float32))
+        kws = np.unique(np.concatenate([f_idx[d][f_idx[d] >= 0] for d in rel_docs]))
+        selk = rng.choice(kws, size=min(cfg.nnz_query_lexical, len(kws)), replace=False)
+        qfi.append(selk)
+        qfv.append(np.abs(rng.normal(1.0, 0.3, size=len(selk))).astype(np.float32))
+        # required keyword: one keyword shared by all relevant docs if any
+        common = set(f_idx[rel_docs[0]][f_idx[rel_docs[0]] >= 0])
+        for d in rel_docs[1:]:
+            common &= set(f_idx[d][f_idx[d] >= 0])
+        if common:
+            q_keywords[qi_, 0] = sorted(common)[0]
+        # multi-hop: attach a chain; the query mentions the head entity, the
+        # planted target is the tail doc (reachable only via KG edges)
+        chain = rng.integers(0, n_chains)
+        q_entities[qi_, 0] = doc_entities[chain_docs[chain][0], 0]
+        q_multihop[qi_] = chain_docs[chain][-1]
+    qs_idx, qs_val = _ell_from_pairs(qsi, qsv, cfg.nnz_query_sparse)
+    qf_idx, qf_val = _ell_from_pairs(qfi, qfv, cfg.nnz_query_lexical)
+    queries = FusedVectors(
+        q_dense, SparseVec(qs_idx, qs_val), SparseVec(qf_idx, qf_val)
+    )
+
+    return SyntheticCorpus(
+        config=cfg,
+        docs=docs,
+        doc_entities=doc_entities,
+        doc_topics=doc_topics,
+        kg=kg,
+        queries=queries,
+        query_entities=q_entities,
+        query_relevant=q_rel,
+        query_keywords=q_keywords,
+        query_multihop_target=q_multihop,
+    )
+
+
+def recall_at_k(retrieved_ids: np.ndarray, truth_ids: np.ndarray) -> float:
+    """Mean fraction of truth ids present in retrieved ids (per query)."""
+    hits = 0
+    total = 0
+    for r, t in zip(np.asarray(retrieved_ids), np.asarray(truth_ids)):
+        t = t[t >= 0]
+        if len(t) == 0:
+            continue
+        hits += len(set(r.tolist()) & set(t.tolist()))
+        total += len(t)
+    return hits / max(total, 1)
+
+
+def ndcg_at_k(retrieved_ids: np.ndarray, truth_ids: np.ndarray, k: int = 10) -> float:
+    """nDCG@k with binary relevance (the paper's accuracy metric)."""
+    scores = []
+    for r, t in zip(np.asarray(retrieved_ids)[:, :k], np.asarray(truth_ids)):
+        t = set(t[t >= 0].tolist())
+        if not t:
+            continue
+        dcg = sum(
+            1.0 / np.log2(i + 2) for i, d in enumerate(r.tolist()) if d in t
+        )
+        idcg = sum(1.0 / np.log2(i + 2) for i in range(min(len(t), k)))
+        scores.append(dcg / idcg)
+    return float(np.mean(scores)) if scores else 0.0

@@ -1,0 +1,133 @@
+"""Jitted public wrappers around the hybrid distance kernel.
+
+``hybrid_scores``           — (B queries) x (B, C candidate rows) -> (B, C)
+``hybrid_scores_vs_ids``    — gather candidate ids from a corpus, score, mask
+``pairwise_scores_chunked`` — brute-force (N x M) scoring in memory-bounded
+                              chunks (ground truth / rerank)
+
+On CPU (this container) the kernel runs in interpret mode automatically; on
+TPU it lowers to Mosaic. ``use_kernel=False`` falls back to the jnp oracle,
+which XLA fuses well — the distributed search path uses the oracle on CPU and
+the kernel on TPU via the same call sites.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+from repro.kernels import ref
+from repro.kernels.hybrid_distance import DEFAULT_C_TILE, hybrid_distance_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_candidates(cands: FusedVectors, c_tile: int) -> tuple[FusedVectors, int]:
+    c = cands.dense.shape[1]
+    c_pad = (-c) % c_tile
+    if c_pad == 0:
+        return cands, c
+    pad3 = lambda a: jnp.pad(a, ((0, 0), (0, c_pad), (0, 0)))
+    padi = lambda a: jnp.pad(a, ((0, 0), (0, c_pad), (0, 0)), constant_values=PAD_IDX)
+    return (
+        FusedVectors(
+            pad3(cands.dense),
+            SparseVec(padi(cands.learned.idx), pad3(cands.learned.val)),
+            SparseVec(padi(cands.lexical.idx), pad3(cands.lexical.val)),
+        ),
+        c,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("c_tile", "use_kernel", "interpret"))
+def hybrid_scores(
+    q: FusedVectors,
+    cands: FusedVectors,
+    *,
+    c_tile: int = DEFAULT_C_TILE,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Score B queries against their (B, C, ...) candidate rows -> (B, C) f32.
+
+    Weights must already be folded into ``q`` (usms.weighted_query).
+    """
+    if not use_kernel:
+        return ref.hybrid_scores_ref(q, cands)
+    if interpret is None:
+        interpret = _on_cpu()
+    cands, c_orig = _pad_candidates(cands, c_tile)
+    # nnz-major candidate layout for the kernel (see hybrid_distance.py).
+    csi = jnp.swapaxes(cands.learned.idx, 1, 2)
+    csv = jnp.swapaxes(cands.learned.val, 1, 2)
+    cfi = jnp.swapaxes(cands.lexical.idx, 1, 2)
+    cfv = jnp.swapaxes(cands.lexical.val, 1, 2)
+    out = hybrid_distance_pallas(
+        q.dense,
+        q.learned.idx,
+        q.learned.val,
+        q.lexical.idx,
+        q.lexical.val,
+        cands.dense,
+        csi,
+        csv,
+        cfi,
+        cfv,
+        c_tile=c_tile,
+        interpret=interpret,
+    )
+    return out[:, :c_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("c_tile", "use_kernel"))
+def hybrid_scores_vs_ids(
+    q: FusedVectors,
+    corpus: FusedVectors,
+    ids: jax.Array,  # (B, C) int32, PAD_IDX entries masked to -inf
+    *,
+    c_tile: int = DEFAULT_C_TILE,
+    use_kernel: bool = True,
+) -> jax.Array:
+    flat = ids.reshape(-1)
+    rows = corpus.take(flat)
+    cands = jax.tree.map(
+        lambda a: a.reshape(ids.shape + a.shape[1:]), rows
+    )
+    scores = hybrid_scores(q, cands, c_tile=c_tile, use_kernel=use_kernel)
+    return jnp.where(ids >= 0, scores, -jnp.inf)
+
+
+def pairwise_scores_chunked(
+    queries: FusedVectors,
+    corpus: FusedVectors,
+    *,
+    chunk: int = 4096,
+) -> jax.Array:
+    """Brute-force (Nq, Ncorpus) hybrid scores, chunked over the corpus.
+
+    Oracle path (jnp); used for ground truth and exact rerank.
+    """
+    n = corpus.dense.shape[0]
+    outs = []
+    fn = jax.jit(ref.pairwise_hybrid_scores_ref)
+    for s in range(0, n, chunk):
+        outs.append(fn(queries, corpus[slice(s, min(s + chunk, n))]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def topk_hybrid(
+    queries: FusedVectors,
+    corpus: FusedVectors,
+    k: int,
+    *,
+    chunk: int = 4096,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k by brute force (ground truth). Returns (scores, ids)."""
+    scores = pairwise_scores_chunked(queries, corpus, chunk=chunk)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, idx.astype(jnp.int32)

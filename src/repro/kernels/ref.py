@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the hybrid distance kernel (paper §4.1 Step 1).
+
+Semantics contract (shared by the Pallas kernel and this oracle):
+
+  score(q, c) = <q.dense, c.dense> + sp_ip(q.learned, c.learned)
+                                   + sp_ip(q.lexical, c.lexical)
+
+where ``sp_ip`` is the sparse inner product over fixed-nnz ELL vectors and
+padded slots (idx == PAD_IDX) never match. Path weights are applied to the
+query beforehand via ``usms.weighted_query`` (Theorem 1), so the kernel itself
+is weight-free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.usms import FusedVectors, SparseVec
+
+
+def sparse_ip_ref(
+    q_idx: jax.Array, q_val: jax.Array, c_idx: jax.Array, c_val: jax.Array
+) -> jax.Array:
+    """Sparse inner product via all-pairs index matching.
+
+    q_idx/q_val: (B, Pq); c_idx/c_val: (B, C, Pc)  ->  (B, C) float32.
+    """
+    q_idx = q_idx[:, None, None, :]  # (B, 1, 1, Pq)
+    q_val = q_val[:, None, None, :]
+    c_idxe = c_idx[..., :, None]  # (B, C, Pc, 1)
+    c_vale = c_val[..., :, None]
+    match = (c_idxe == q_idx) & (c_idxe >= 0) & (q_idx >= 0)
+    contrib = jnp.where(match, c_vale.astype(jnp.float32) * q_val.astype(jnp.float32), 0.0)
+    return contrib.sum(axis=(-1, -2))
+
+
+def hybrid_scores_ref(q: FusedVectors, cands: FusedVectors) -> jax.Array:
+    """q: batch of B queries; cands: (B, C, ...) candidate rows -> (B, C)."""
+    dense = jnp.einsum(
+        "bd,bcd->bc",
+        q.dense.astype(jnp.float32),
+        cands.dense.astype(jnp.float32),
+    )
+    sp = sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
+    fp = sparse_ip_ref(q.lexical.idx, q.lexical.val, cands.lexical.idx, cands.lexical.val)
+    return dense + sp + fp
+
+
+def pairwise_hybrid_scores_ref(a: FusedVectors, b: FusedVectors) -> jax.Array:
+    """All-pairs scores between two flat sets: a (N, ...) x b (M, ...) -> (N, M).
+
+    Brute-force oracle used for ground truth in recall tests/benchmarks.
+    """
+    dense = a.dense.astype(jnp.float32) @ b.dense.astype(jnp.float32).T
+
+    def sp_all(aidx, aval, bidx, bval):
+        # (N, Pa) x (M, Pb) -> (N, M)
+        m = (aidx[:, None, :, None] == bidx[None, :, None, :]) & (
+            aidx[:, None, :, None] >= 0
+        ) & (bidx[None, :, None, :] >= 0)
+        c = jnp.where(
+            m,
+            aval[:, None, :, None].astype(jnp.float32)
+            * bval[None, :, None, :].astype(jnp.float32),
+            0.0,
+        )
+        return c.sum(axis=(-1, -2))
+
+    sp = sp_all(a.learned.idx, a.learned.val, b.learned.idx, b.learned.val)
+    fp = sp_all(a.lexical.idx, a.lexical.val, b.lexical.idx, b.lexical.val)
+    return dense + sp + fp

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Never touches jax device state at import time: ``make_production_mesh`` is a
+function (the dry-run sets XLA_FLAGS for 512 host devices BEFORE calling it;
+smoke tests never call it)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e pod); multi-pod adds the pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_dp_size(mesh) -> int:
+    out = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            out *= mesh.shape[a]
+    return out
+
+
+def mesh_model_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

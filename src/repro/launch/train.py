@@ -1,0 +1,105 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
+        --steps 200 --batch 8 --seq 512 --ckpt-dir /tmp/run1 [--smoke]
+
+Single-host CPU runs use the smoke config; on a TPU fleet the same driver
+runs the full config on the production mesh (it auto-detects device count
+and builds the largest valid mesh via elastic_mesh_shape). Fault tolerance:
+checkpoint every --ckpt-every steps, automatic restart from the last commit,
+deterministic data skip, straggler monitoring.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import transformer as tfm
+from repro.runtime.fault_tolerance import StragglerMonitor, elastic_mesh_shape, run_supervised
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n_dev = jax.device_count()
+    mesh = None
+    if n_dev > 1:
+        tp = 16 if n_dev % 16 == 0 else 1
+        shape, axes = elastic_mesh_shape(n_dev, tp, pod_size=16)
+        mesh = jax.make_mesh(shape, axes)
+        print(f"mesh: {dict(zip(axes, shape))}")
+
+    tcfg = TrainConfig(
+        opt=opt.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    pipe = TokenPipeline(
+        DataConfig(
+            vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+            seed=args.seed,
+            frontend_tokens=cfg.n_frontend_tokens if cfg.family in ("vlm", "audio") else 0,
+            d_model=cfg.d_model,
+        )
+    )
+    step_fn = make_train_step(cfg, tcfg, mesh, None)
+
+    def make_state():
+        params = tfm.init_params(jax.random.key(args.seed), cfg)
+        return {"params": params, "opt": opt.init_opt_state(params, tcfg.opt)}
+
+    n_params = cfg.n_params if not args.smoke else sum(
+        int(x.size) for x in jax.tree.leaves(make_state()["params"])
+    )
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
+
+    if args.ckpt_dir:
+        monitor = StragglerMonitor()
+        report = run_supervised(
+            n_steps=args.steps, make_state=make_state, train_step=step_fn,
+            batch_fn=pipe.batch, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, monitor=monitor,
+        )
+        print(f"done: {report.steps_done} steps, {report.restarts} restarts, "
+              f"final loss {report.losses[-1]:.4f}")
+        return
+
+    state = make_state()
+    t0 = time.perf_counter()
+    for s in range(args.steps):
+        state, metrics = step_fn(state, pipe.batch(s))
+        if s % args.log_every == 0 or s == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tok_s = args.batch * args.seq * (s + 1) / dt
+            print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                  f"tok/s {tok_s:,.0f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

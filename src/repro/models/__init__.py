@@ -1,0 +1,20 @@
+"""Transformer substrate: the embedding/generation model zoo served alongside
+the Allan-Poe hybrid index (see DESIGN.md §3)."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    init_params,
+    make_decode_step,
+    make_forward,
+    make_prefill,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "param_specs",
+    "make_forward",
+    "make_prefill",
+    "make_decode_step",
+]

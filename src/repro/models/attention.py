@@ -1,0 +1,316 @@
+"""Attention variants: GQA self-attention (train / prefill / cached decode),
+cross-attention (VLM, enc-dec), and MLA (DeepSeek-V3) with compressed-cache
+decode (the projection-absorption trick — the KV cache stores only the
+512-dim latent + shared rope key, not per-head K/V)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ShardCtx,
+    apply_rope,
+    dtype_of,
+    init_rmsnorm,
+    ninit,
+    rms_norm,
+    rmsnorm_specs,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    dtype = dtype_of(cfg)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": ninit(ks[0], (d, h, hd), s, dtype),
+        "wk": ninit(ks[1], (d, kv, hd), s, dtype),
+        "wv": ninit(ks[2], (d, kv, hd), s, dtype),
+        "wo": ninit(ks[3], (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def attention_specs(ctx: ShardCtx, cfg: ModelConfig, cross: bool = False) -> dict:
+    h_sh = ctx.heads(cfg.n_heads)
+    kv_sh = ctx.heads(cfg.n_kv_heads)
+    dd = ctx.data(cfg.d_model)
+    p = {
+        "wq": P(dd, h_sh, None),
+        "wk": P(dd, kv_sh, None),
+        "wv": P(dd, kv_sh, None),
+        "wo": P(h_sh, None, dd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(h_sh, None)
+        p["bk"] = P(kv_sh, None)
+        p["bv"] = P(kv_sh, None)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x, kv_src):
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", kv_src, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B, L, H, hd); k: (B, S, KV, hd) -> (B, KV, G, L, S)."""
+    b, l, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, l, kvh, g, hd)
+    return jnp.einsum("blkgd,bskd->bkgls", qg, k) / jnp.sqrt(hd).astype(jnp.float32)
+
+
+def _gqa_out(weights, v, p):
+    """weights: (B, KV, G, L, S); v: (B, S, KV, hd) -> (B, L, D)."""
+    b, kvh, g, l, s = weights.shape
+    ctx = jnp.einsum("bkgls,bskd->blkgd", weights, v)
+    ctx = ctx.reshape(b, l, kvh * g, v.shape[-1])
+    return jnp.einsum("blhd,hdk->blk", ctx, p["wo"])
+
+
+def _flash_scaled(q, k, v, cfg: ModelConfig, causal: bool, scale: float) -> jax.Array:
+    """Pallas flash attention on (B, L, H, d)-layout tensors."""
+    from repro.kernels.flash_attention import flash_attention
+
+    interpret = jax.default_backend() == "cpu"
+    qt = jnp.swapaxes(q, 1, 2)  # (B, H, L, dk)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(
+        qt, kt, vt, causal, scale,
+        cfg.flash_block_q, cfg.flash_block_k, interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _flash(q, k, v, cfg: ModelConfig, causal: bool) -> jax.Array:
+    return _flash_scaled(q, k, v, cfg, causal, q.shape[-1] ** -0.5)
+
+
+def apply_attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, L, D)
+    positions: jax.Array,  # (B, L) or (L,)
+    *,
+    causal: bool = True,
+    kv_src: Optional[jax.Array] = None,  # cross-attention context (B, T, D)
+    use_rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence attention (train / prefill). Returns (y, cache_kv)."""
+    kv_in = x if kv_src is None else kv_src
+    q, k, v = _project_qkv(p, cfg, x, kv_in)
+    if use_rope and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_impl == "flash":
+        ctx = _flash(q, k, v, cfg, causal and kv_src is None)
+        y = jnp.einsum("blhd,hdk->blk", ctx.astype(x.dtype), p["wo"])
+        return y, {"k": k, "v": v}
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    if causal and kv_src is None:
+        l, s = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((l, s), bool), k=s - l)
+        scores = jnp.where(mask, scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = _gqa_out(weights, v, p)
+    return y, {"k": k, "v": v}
+
+
+def apply_attention_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # {"k": (B, S, KV, hd), "v": ...}
+    pos: jax.Array,  # scalar int32 — current position
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Single-token cached decode; writes the new K/V at `pos`."""
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if use_rope:
+        posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    scores = _gqa_scores(q, k).astype(jnp.float32)  # (B, KV, G, 1, S)
+    s = k.shape[1]
+    valid = (jnp.arange(s) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = _gqa_out(weights, v, p)
+    return y, {"k": k, "v": v}
+
+
+def apply_cross_attention_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, ctx_cache: dict
+) -> jax.Array:
+    """Decode-time cross-attention against a fixed precomputed context."""
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    scores = _gqa_scores(q, ctx_cache["k"]).astype(jnp.float32)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    return _gqa_out(weights, ctx_cache["v"], p)
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    shp = (batch, max_len, kv, hd)
+    dt = dtype_of(cfg)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dt),
+        "v": jax.ShapeDtypeStruct(shp, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ql, kl, rh = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": ninit(ks[0], (d, ql), d**-0.5, dtype),
+        "q_norm": init_rmsnorm(ql, dtype),
+        "wq_b": ninit(ks[1], (ql, h, hd + rh), ql**-0.5, dtype),
+        "wkv_a": ninit(ks[2], (d, kl + rh), d**-0.5, dtype),
+        "kv_norm": init_rmsnorm(kl, dtype),
+        "wk_b": ninit(ks[3], (kl, h, hd), kl**-0.5, dtype),
+        "wv_b": ninit(ks[4], (kl, h, hd), kl**-0.5, dtype),
+        "wo": ninit(ks[5], (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def mla_specs(ctx: ShardCtx, cfg: ModelConfig) -> dict:
+    h_sh = ctx.heads(cfg.n_heads)
+    dd = ctx.data(cfg.d_model)
+    return {
+        "wq_a": P(dd, None),
+        "q_norm": rmsnorm_specs(),
+        "wq_b": P(None, h_sh, None),
+        "wkv_a": P(dd, None),
+        "kv_norm": rmsnorm_specs(),
+        "wk_b": P(None, h_sh, None),
+        "wv_b": P(None, h_sh, None),
+        "wo": P(h_sh, None, dd),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    cq = rms_norm(p["q_norm"], jnp.einsum("bld,dq->blq", x, p["wq_a"]))
+    q = jnp.einsum("blq,qhk->blhk", cq, p["wq_b"])
+    q_nope, q_rope = jnp.split(q, [cfg.head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(p, cfg, x, positions):
+    kv = jnp.einsum("bld,dk->blk", x, p["wkv_a"])
+    ckv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    ckv = rms_norm(p["kv_norm"], ckv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def apply_mla(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Full-sequence MLA (train / prefill), expanded form. Returns
+    (y, cache) with the COMPRESSED cache {"ckv", "krope"}."""
+    hd, rh = cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv, k_rope = _mla_latents(p, cfg, x, positions)
+    k_nope = jnp.einsum("blk,khd->blhd", ckv, p["wk_b"])
+    v = jnp.einsum("blk,khd->blhd", ckv, p["wv_b"])
+    scale = (hd + rh) ** -0.5
+    if cfg.attn_impl == "flash":
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B, L, H, hd+rh)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (rh,))],
+            axis=-1,
+        )
+        ctx = _flash_scaled(q_full, k_full, v, cfg, True, scale)
+        y = jnp.einsum("blhd,hdk->blk", ctx.astype(x.dtype), p["wo"])
+        return y, {"ckv": ckv, "krope": k_rope}
+    scores = (
+        jnp.einsum("blhd,bshd->bhls", q_nope, k_nope)
+        + jnp.einsum("blhr,bsr->bhls", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    l, s = scores.shape[-2], scores.shape[-1]
+    mask = jnp.tril(jnp.ones((l, s), bool), k=s - l)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhls,bshd->blhd", w, v)
+    y = jnp.einsum("blhd,hdk->blk", ctx, p["wo"])
+    return y, {"ckv": ckv, "krope": k_rope}
+
+
+def apply_mla_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Compressed-cache MLA decode via projection absorption: attention runs
+    in the 512-dim latent space; per-head K/V are never materialized."""
+    hd, rh = cfg.head_dim, cfg.rope_head_dim
+    posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, posv)  # (B, 1, H, hd/rh)
+    ckv_new, krope_new = _mla_latents(p, cfg, x, posv)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
+    )
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1
+    )
+    # absorb W_uk into the query: q_eff = W_uk^T q_nope  (B, 1, H, kv_lora)
+    q_eff = jnp.einsum("blhd,khd->blhk", q_nope, p["wk_b"])
+    scale = 1.0 / jnp.sqrt(hd + rh).astype(jnp.float32)
+    scores = (
+        jnp.einsum("blhk,bsk->bhls", q_eff, ckv)
+        + jnp.einsum("blhr,bsr->bhls", q_rope, krope)
+    ).astype(jnp.float32) * scale
+    s = ckv.shape[1]
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhls,bsk->blhk", w, ckv)  # latent context
+    v = jnp.einsum("blhk,khd->blhd", ctx, p["wv_b"])  # absorb W_uv
+    y = jnp.einsum("blhd,hdk->blk", v, p["wo"])
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = dtype_of(cfg)
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jax.ShapeDtypeStruct((batch, max_len, cfg.rope_head_dim), dt),
+    }

@@ -1,0 +1,170 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers, sharding helpers.
+
+Parameters are plain nested dicts of jax.Arrays; every ``init_*`` has a
+matching ``*_specs`` returning an identically-shaped tree of PartitionSpecs.
+Sharding rule: a tensor dim is sharded over an axis only when divisible —
+otherwise replicated (see ``shard_if``) — so architectures whose head counts
+don't divide the TP axis (qwen2: 12 heads, whisper: 20) still compile on the
+16-way model axis with replicated attention weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# mesh axis names (fixed by launch/mesh.py)
+POD, DATA, MODEL = "pod", "data", "model"
+DP = (POD, DATA)  # data-parallel axes (pod may be absent; specs still valid)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def shard_if(dim: int, size: int, axis: str) -> Optional[str]:
+    """Shard `dim` over `axis` (of `size` devices) only when divisible."""
+    return axis if dim % size == 0 and dim >= size else None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-dependent context for building PartitionSpec trees."""
+
+    model_size: int = 16
+    fsdp: bool = False
+
+    def heads(self, n: int) -> Optional[str]:
+        return shard_if(n, self.model_size, MODEL)
+
+    def ff(self, n: int) -> Optional[str]:
+        return shard_if(n, self.model_size, MODEL)
+
+    def data(self, n: int) -> Optional[str]:
+        # FSDP shards a replicated-over-model dim over the data axis
+        return DATA if self.fsdp and n % 16 == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def ninit(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zinit(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_specs() -> dict:
+    return {"scale": P(None)}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, hd); positions: broadcastable to (..., L)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d**-0.5
+    s_out = d_ff**-0.5
+    return {
+        "w_gate": ninit(k1, (d, d_ff), s_in, dtype),
+        "w_up": ninit(k2, (d, d_ff), s_in, dtype),
+        "w_down": ninit(k3, (d_ff, d), s_out, dtype),
+    }
+
+
+def mlp_specs(ctx: ShardCtx, d: int, d_ff: int) -> dict:
+    m = ctx.ff(d_ff)
+    dd = ctx.data(d)
+    return {
+        "w_gate": P(dd, m),
+        "w_up": P(dd, m),
+        "w_down": P(m, dd),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", gate * up, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": ninit(k1, (cfg.vocab, cfg.d_model), 0.02, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = ninit(k2, (cfg.d_model, cfg.vocab), cfg.d_model**-0.5, dtype)
+    return p
+
+
+def embed_specs(ctx: ShardCtx, cfg: ModelConfig) -> dict:
+    v_shard = ctx.heads(cfg.vocab)  # vocab over model axis
+    p = {"tok": P(v_shard, ctx.data(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["head"] = P(ctx.data(cfg.d_model), v_shard)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return jnp.einsum("...d,dv->...v", h, w)

@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) block, used by zamba2-1.2b.
+
+Chunked SSD algorithm (Dao & Gu 2024, "ssd_minimal" form): within-chunk
+contributions are an MXU matmul against the masked decay kernel; cross-chunk
+state is a short scan over chunks. Scalar-per-head decay makes the log-space
+factorization exact (exponent differences are clamped only on masked
+entries). Single-token decode keeps (conv_state, ssm_state) and is O(1) in
+sequence length — this is what makes the long_500k cell runnable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx, dtype_of, init_rmsnorm, ninit, rms_norm, rmsnorm_specs
+
+CONV_W = 4  # causal depthwise conv window
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    n = cfg.ssm_state
+    p = cfg.ssm_head_dim
+    h = d_inner // p
+    conv_ch = d_inner + 2 * n
+    return d_inner, n, p, h, conv_ch
+
+
+def init_mamba2_block(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, n, pdim, h, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    s = d**-0.5
+    return {
+        "norm": init_rmsnorm(d, dtype),
+        "in_proj": ninit(ks[0], (d, 2 * d_inner + 2 * n + h), s, dtype),
+        "conv_w": ninit(ks[1], (CONV_W, conv_ch), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": ninit(ks[2], (d_inner, d), d_inner**-0.5, dtype),
+    }
+
+
+def mamba2_block_specs(ctx: ShardCtx, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, n, pdim, h, conv_ch = _dims(cfg)
+    dd = ctx.data(d)
+    return {
+        "norm": rmsnorm_specs(),
+        "in_proj": P(dd, None),
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "dt_bias": P(None),
+        "gate_norm": rmsnorm_specs(),
+        "out_proj": P(None, dd),
+    }
+
+
+def _causal_conv_seq(w, b, x, init_state):
+    """Depthwise causal conv. x: (B, L, C); init_state: (B, CONV_W-1, C).
+
+    One depthwise conv instruction (one read of x) instead of CONV_W shifted
+    full-tensor slices — the §Perf iteration that removed the dominant
+    HBM-traffic term of the hybrid/ssm train cells (see EXPERIMENTS.md)."""
+    padded = jnp.concatenate([init_state, x], axis=1)
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        padded,
+        w[:, None, :],  # (W, 1, C) depthwise filters
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    new_state = padded[:, -(CONV_W - 1) :]
+    return jax.nn.silu(out + b), new_state
+
+
+def _causal_conv_step(w, b, x1, state):
+    """x1: (B, C); state: (B, CONV_W-1, C)."""
+    window = jnp.concatenate([state, x1[:, None]], axis=1)  # (B, CONV_W, C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return jax.nn.silu(out + b), window[:, 1:]
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, s0, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H); a_neg: (H,) negative decay rates;
+    bmat/cmat: (B, L, N); s0: (B, H, P, N). Returns (y, s_final).
+    """
+    f32 = jnp.float32
+    b, l, h, pdim = x.shape
+    n = bmat.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    x = x.astype(f32).reshape(b, nc, chunk, h, pdim)
+    dt = dt.astype(f32).reshape(b, nc, chunk, h)
+    bmat = bmat.astype(f32).reshape(b, nc, chunk, n)
+    cmat = cmat.astype(f32).reshape(b, nc, chunk, n)
+
+    loga = dt * a_neg[None, None, None]  # (b, nc, T, h), <= 0
+    lc = jnp.cumsum(loga, axis=2)  # inclusive
+    xdt = x * dt[..., None]
+
+    # intra-chunk: M[t, s] = (C_t . B_s) * exp(lc_t - lc_s), s <= t
+    cb = jnp.einsum("bctn,bcsn->bcts", cmat, bmat)
+    ldiff = lc[:, :, :, None, :] - lc[:, :, None, :, :]  # (b, nc, t, s, h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.minimum(ldiff, 0.0)) * mask[None, None, :, :, None]
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, decay, xdt)
+
+    # chunk states: S_c = sum_s exp(lc_T - lc_s) B_s (x dt)_s
+    total = lc[:, :, -1]  # (b, nc, h)
+    k_decay = jnp.exp(jnp.minimum(total[:, :, None] - lc, 0.0))  # (b, nc, T, h)
+    chunk_state = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bmat, k_decay, xdt)
+
+    def carry(s, inp):
+        dc, cs = inp  # (b, h), (b, h, p, n)
+        s_new = jnp.exp(dc)[..., None, None] * s + cs
+        return s_new, s
+
+    s_fin, s_prev = jax.lax.scan(
+        carry,
+        s0.astype(f32),
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)  # state before each chunk
+
+    # inclusive decay: h_t applies a_t to the carried state before C_t reads it
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", cmat, jnp.exp(lc), s_prev)
+    y = (y_intra + y_inter).reshape(b, l, h, pdim)
+    return y, s_fin
+
+
+def ssd_scan(x, dt, a_neg, bmat, cmat, s0):
+    """Exact per-step oracle."""
+    f32 = jnp.float32
+
+    def step(s, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a_t = jnp.exp(dt_t * a_neg[None])  # (B,H)
+        s_new = a_t[..., None, None] * s + jnp.einsum(
+            "bhp,bn->bhpn", x_t * dt_t[..., None], b_t
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s_new, c_t)
+        return s_new, y
+
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(bmat.astype(f32), 1, 0),
+        jnp.moveaxis(cmat.astype(f32), 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    d_inner, n, pdim, h, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def apply_mamba2_block(
+    p: dict,
+    cfg: ModelConfig,
+    x_in: jax.Array,  # (B, L, D)
+    state: dict,  # {"conv": (B, CONV_W-1, C), "ssm": (B, H, P, N)}
+    *,
+    chunked: bool = True,
+) -> tuple[jax.Array, dict]:
+    d_inner, n, pdim, h, conv_ch = _dims(cfg)
+    b, l, _ = x_in.shape
+    xn = rms_norm(p["norm"], x_in)
+    proj = jnp.einsum("bld,de->ble", xn, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv_seq(p["conv_w"], p["conv_b"], xbc, state["conv"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, l, h, pdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a_neg = -jnp.exp(p["a_log"])
+    if chunked and l % cfg.ssm_chunk == 0 and l > 1:
+        y, s_fin = ssd_chunked(xs, dt, a_neg, bmat, cmat, state["ssm"], cfg.ssm_chunk)
+    else:
+        y, s_fin = ssd_scan(xs, dt, a_neg, bmat, cmat, state["ssm"])
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner).astype(x_in.dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    return x_in + out, {"conv": conv_state, "ssm": s_fin}
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, n, pdim, h, conv_ch = _dims(cfg)
+    dt = dtype_of(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, CONV_W - 1, conv_ch), dt),
+        "ssm": jax.ShapeDtypeStruct((batch, h, pdim, n), jnp.float32),
+    }

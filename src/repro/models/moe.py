@@ -1,0 +1,203 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (Megablocks-style,
+TPU-adapted): tokens are sorted by expert id, scattered into a dense
+(E, C, D) buffer, processed with one batched einsum per projection (experts
+sharded over the model axis = expert parallelism), and combined by gather +
+weighted scatter-add. No (N, E, C) one-hot tensors (GShard) — the dispatch is
+O(N·k) memory.
+
+Used by kimi-k2 (384 routed, top-8) and deepseek-v3 (1 shared + 256 routed,
+top-8). Returns the load-balancing auxiliary loss (Switch-style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx, dtype_of, init_mlp, mlp_specs, ninit, apply_mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": ninit(ks[0], (d, e), d**-0.5, jnp.float32),
+        "w_gate": ninit(ks[1], (e, d, f), d**-0.5, dtype),
+        "w_up": ninit(ks[2], (e, d, f), d**-0.5, dtype),
+        "w_down": ninit(ks[3], (e, f, d), f**-0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_specs(ctx: ShardCtx, cfg: ModelConfig) -> dict:
+    e_sh = ctx.heads(cfg.n_experts)  # experts over the model axis (EP)
+    dd = ctx.data(cfg.d_model)
+    p = {
+        "router": P(dd, None),
+        "w_gate": P(e_sh, dd, None),
+        "w_up": P(e_sh, dd, None),
+        "w_down": P(e_sh, None, dd),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs(ctx, cfg.d_model, cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, L, D) -> (y, aux_loss)."""
+    b, l, d = x.shape
+    n = b * l
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    c = capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    # --- routing ---
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, k)  # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(0)
+    assign = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(assign * me)
+
+    # --- sort-based dispatch ---
+    flat_e = expert_ids.reshape(-1)  # (N*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(n * k, dtype=jnp.int32) - group_start
+    slot = jnp.where(pos_in_e < c, pos_in_e, c)  # c -> dropped
+    tok = order // k  # source token per assignment
+
+    buf = jnp.zeros((e, c, d), x.dtype)
+    buf = buf.at[sorted_e, slot].set(xf[tok], mode="drop")
+
+    # --- expert FFN (batched over experts; E sharded over "model") ---
+    h_gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jnp.einsum("ecf,efd->ecd", h_gate * h_up, p["w_down"])
+
+    # --- combine ---
+    kept = slot < c
+    slot_safe = jnp.minimum(slot, c - 1)
+    out_per_assign = h[sorted_e, slot_safe]  # (N*k, D)
+    gate_sorted = gate.reshape(-1)[order]
+    contrib = jnp.where(
+        kept[:, None], out_per_assign * gate_sorted[:, None].astype(x.dtype), 0.0
+    )
+    y = jnp.zeros((n, d), x.dtype).at[tok].add(contrib)
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], xf)
+    return y.reshape(b, l, d), aux
+
+
+# ---------------------------------------------------------------------------
+# manual expert parallelism (§Perf iteration)
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_ep(
+    p: dict, cfg: ModelConfig, x: jax.Array, axis: str = "model"
+) -> tuple[jax.Array, jax.Array]:
+    """Expert parallelism with explicit shard_map over the model axis.
+
+    GSPMD partitions the sort/scatter dispatch pathologically: the
+    token-assignment dimension gets replicated across the expert shards and
+    the positional scatters turn into full-width u32 all-reduces (measured
+    ~200TB/step HBM traffic for deepseek-v3 train_4k — see EXPERIMENTS.md
+    §Perf). Here each model-rank routes the (model-replicated) token block,
+    keeps only assignments that target its local experts, dispatches LOCALLY
+    (unsharded scatter -> no partitioner pathology), and a single psum over
+    the model axis combines expert outputs. Per-layer comm = one activation
+    psum, the same as a Megatron TP all-reduce.
+    """
+    e = cfg.n_experts
+    mesh = jax.sharding.get_abstract_mesh()
+    all_axes = tuple(mesh.axis_names)
+    dp_axes = tuple(a for a in all_axes if a != axis)
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    def local(xb, router, w_gate, w_up, w_down, _shared):
+        # xb: (B/dp, L, D) model-replicated; expert weights: local (E/m, D, F)
+        rank = jax.lax.axis_index(axis)
+        n_ranks = jax.lax.axis_size(axis)
+        e_loc = e // n_ranks
+        b, l, d = xb.shape
+        n = b * l
+        k = cfg.experts_per_token
+        c = capacity(n, cfg)
+        xf = xb.reshape(n, d)
+
+        logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert_ids = jax.lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(0)
+        assign = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (n * k)
+        aux = e * jnp.sum(assign * me)
+
+        # keep only assignments routed to MY experts
+        flat_e = expert_ids.reshape(-1)
+        mine = (flat_e >= rank * e_loc) & (flat_e < (rank + 1) * e_loc)
+        local_e = jnp.where(mine, flat_e - rank * e_loc, e_loc)  # e_loc -> dropped
+        order = jnp.argsort(jnp.where(mine, local_e, e_loc), stable=True)
+        sorted_e = jnp.where(mine[order], local_e[order], e_loc)
+        group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos_in_e = jnp.arange(n * k, dtype=jnp.int32) - group_start
+        slot = jnp.where((pos_in_e < c) & (sorted_e < e_loc), pos_in_e, c)
+        tok = order // k
+
+        buf = jnp.zeros((e_loc, c, d), xb.dtype)
+        buf = buf.at[jnp.minimum(sorted_e, e_loc - 1), slot].set(
+            jnp.where((slot < c)[:, None], xf[tok], 0.0), mode="drop"
+        )
+        h_gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+        h_up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        h = jnp.einsum("ecf,efd->ecd", h_gate * h_up, w_down)
+
+        kept = slot < c
+        out_pa = h[jnp.minimum(sorted_e, e_loc - 1), jnp.minimum(slot, c - 1)]
+        gate_sorted = gate.reshape(-1)[order]
+        contrib = jnp.where(
+            kept[:, None], out_pa * gate_sorted[:, None].astype(xb.dtype), 0.0
+        )
+        y = jnp.zeros((n, d), xb.dtype).at[tok].add(contrib)
+        y = jax.lax.psum(y, axis)  # combine expert shards
+        aux = jax.lax.pmean(aux, all_axes)
+        return y.reshape(b, l, d), aux
+
+    x_spec = P(dp_spec, None, None)  # batch over DP, replicated over model
+    in_specs = (
+        x_spec,
+        P(),  # router (FSDP shards gathered at the boundary)
+        P(axis), P(axis), P(axis),  # expert weights: EP over the model axis
+        None,
+    )
+    fn = jax.shard_map(
+        local,
+        in_specs=in_specs,
+        out_specs=(x_spec, P()),
+        axis_names=set(all_axes),
+        check_vma=False,
+    )
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], None)
+    if cfg.n_shared_experts:
+        # shared expert stays OUTSIDE the manual region: auto-TP shards its
+        # d_ff over the model axis instead of replicating the flops 16x
+        y = y + apply_mlp(p["shared"], x)
+    return y, aux

@@ -1,0 +1,283 @@
+"""RWKV6 "Finch" — attention-free token mixing with data-dependent decay
+(arXiv:2404.05892).
+
+Two implementations of the WKV6 recurrence
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T,   y_t = r_t (S_{t-1} + Diag(u) k_t v_t^T)
+
+  * ``wkv6_scan``    — exact per-step lax.scan (oracle + decode step);
+  * ``wkv6_chunked`` — chunk-parallel MXU formulation used for training:
+    within a chunk the interaction matrix factorizes into two matmuls with
+    per-dim decay folded into r/k (mid-chunk-centered exponents, clamped at
+    ±40 — exact for all but numerically-zero contributions), inter-chunk
+    state carried by a scan over chunks. This is the hardware-adapted form:
+    GPU RWKV kernels serialize T=16 sub-chunks per thread block; on TPU the
+    (T x T) on-diagonal block becomes an MXU matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx, dtype_of, ninit
+
+EXP_CLAMP = 40.0
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_scan(r, k, v, w, u, s0):
+    """Exact recurrence. r/k/v/w: (B, L, H, K); u: (H, K); s0: (B, H, K, K).
+    Returns (y (B, L, H, K), s_final)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, K)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, K, V)
+        y = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, s + u.astype(f32)[None, :, :, None] * kv
+        )
+        s_new = w_t[..., None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single decode step. r/k/v/w: (B, H, K)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, s + u.astype(f32)[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return y, s_new
+
+
+def wkv6_chunked(r, k, v, w, u, s0, chunk: int = 64):
+    """Chunk-parallel WKV6 (see module docstring)."""
+    f32 = jnp.float32
+    b, l, h, kdim = r.shape
+    assert l % chunk == 0, f"L={l} not a multiple of chunk={chunk}"
+    nc = l // chunk
+    shp = (b, nc, chunk, h, kdim)
+    r, k, v, w = (x.astype(f32).reshape(shp) for x in (r, k, v, w))
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    lc = jnp.cumsum(logw, axis=2)  # inclusive per-chunk cumulative log decay
+    lexc = lc - logw  # exclusive
+    mid = lc[:, :, chunk // 2 : chunk // 2 + 1]  # per-dim centering
+
+    clamp = lambda x: jnp.clip(x, -EXP_CLAMP, EXP_CLAMP)
+    rq = r * jnp.exp(clamp(lexc - mid))  # (b, nc, T, h, K)
+    kk = k * jnp.exp(clamp(mid - lc))
+
+    # intra-chunk: A[t, s] = sum_d rq[t, d] kk[s, d], strictly lower + u-diag
+    a = jnp.einsum("bcthd,bcshd->bchts", rq, kk)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a = jnp.where(mask[None, None, None], a, 0.0)
+    diag = jnp.einsum("bcthd,hd,bcthd->bcth", r, u.astype(f32), k)
+    y_intra = jnp.einsum("bchts,bcshv->bcthv", a, v)
+    y_intra = y_intra + diag[..., None] * v
+
+    # inter-chunk state scan
+    total = lc[:, :, -1]  # (b, nc, h, K) total chunk log decay
+    k_scaled = k * jnp.exp(clamp(total[:, :, None] - lc))
+    chunk_kv = jnp.einsum("bcshk,bcshv->bchkv", k_scaled, v)
+    decay_chunk = jnp.exp(clamp(total))  # (b, nc, h, K)
+
+    def carry_step(s, inp):
+        dc, ckv = inp  # (b, h, K), (b, h, K, V)
+        s_new = dc[..., None] * s + ckv
+        return s_new, s
+
+    dc_t = jnp.moveaxis(decay_chunk, 1, 0)
+    ckv_t = jnp.moveaxis(chunk_kv, 1, 0)
+    s_fin, s_prevs = jax.lax.scan(carry_step, s0.astype(f32), (dc_t, ckv_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (b, nc, h, K, V) state before chunk
+
+    r_inter = r * jnp.exp(clamp(lexc))
+    y_inter = jnp.einsum("bcthk,bchkv->bcthv", r_inter, s_prevs)
+
+    y = (y_intra + y_inter).reshape(b, l, h, kdim)
+    return y, s_fin
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6_block(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    d = cfg.d_model
+    lora = cfg.wkv_lora
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    hidden = int(d * 3.5)
+    ks = jax.random.split(key, 12)
+    s = d**-0.5
+    return {
+        "ln1": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "ln2": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "tm": {
+            "mu_x": ninit(ks[0], (d,), 0.02, dtype),
+            "mu": ninit(ks[1], (5, d), 0.02, dtype),
+            "lora_a": ninit(ks[2], (d, 5 * lora), s, dtype),
+            "lora_b": ninit(ks[3], (5, lora, d), lora**-0.5, dtype),
+            "w0": ninit(ks[4], (d,), 0.02, jnp.float32) - 6.0,  # slow decay init
+            "u": ninit(ks[5], (h, hd), 0.02, jnp.float32),
+            "wr": ninit(ks[6], (d, d), s, dtype),
+            "wk": ninit(ks[7], (d, d), s, dtype),
+            "wv": ninit(ks[8], (d, d), s, dtype),
+            "wg": ninit(ks[9], (d, d), s, dtype),
+            "wo": ninit(ks[10], (d, d), s, dtype),
+            "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        },
+        "cm": {
+            "mu_k": ninit(ks[11], (d,), 0.02, dtype),
+            "mu_r": ninit(jax.random.fold_in(key, 99), (d,), 0.02, dtype),
+            "wk": ninit(jax.random.fold_in(key, 100), (d, hidden), s, dtype),
+            "wv": ninit(jax.random.fold_in(key, 101), (hidden, d), hidden**-0.5, dtype),
+            "wr": ninit(jax.random.fold_in(key, 102), (d, d), s, dtype),
+        },
+    }
+
+
+def rwkv6_block_specs(ctx: ShardCtx, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hidden = int(d * 3.5)
+    m_d = ctx.ff(d)
+    m_h = ctx.ff(hidden)
+    dd = ctx.data(d)
+    ln = {"scale": P(None), "bias": P(None)}
+    return {
+        "ln1": ln,
+        "ln2": ln,
+        "tm": {
+            "mu_x": P(None),
+            "mu": P(None, None),
+            "lora_a": P(dd, None),
+            "lora_b": P(None, None, None),
+            "w0": P(None),
+            "u": P(None, None),
+            "wr": P(dd, m_d),
+            "wk": P(dd, m_d),
+            "wv": P(dd, m_d),
+            "wg": P(dd, m_d),
+            "wo": P(m_d, dd),
+            "ln_x": ln,
+        },
+        "cm": {
+            "mu_k": P(None),
+            "mu_r": P(None),
+            "wk": P(dd, m_h),
+            "wv": P(m_h, dd),
+            "wr": P(dd, m_d),
+        },
+    }
+
+
+def _layer_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def _group_norm_heads(p, y, h, eps=1e-5):
+    """GroupNorm with one group per head over (B, L, H, K) flattened."""
+    b, l, _, kdim = y.shape
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(b, l, h * kdim)
+    return yn * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+
+
+def _ddlerp(tm, x, shifted):
+    """Finch data-dependent token-shift interpolation -> 5 mixed streams."""
+    dx = shifted - x
+    xxx = x + dx * tm["mu_x"]
+    lora = tm["lora_b"].shape[1]
+    a = jnp.tanh(jnp.einsum("bld,dr->blr", xxx, tm["lora_a"]))
+    a = a.reshape(*a.shape[:-1], 5, lora)
+    dyn = jnp.einsum("blfr,frd->blfd", a, tm["lora_b"])
+    mixed = x[:, :, None] + dx[:, :, None] * (tm["mu"][None, None] + dyn)
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def _decay(tm, xw):
+    w_raw = tm["w0"].astype(jnp.float32) + xw.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(w_raw, -20.0, 4.0)))
+
+
+def apply_rwkv6_block(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, L, D)
+    state: dict,  # {"tm_x": (B,D), "cm_x": (B,D), "wkv": (B,H,K,K)}
+    *,
+    chunked: bool = True,
+) -> tuple[jax.Array, dict]:
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    b, l, _ = x.shape
+
+    # ---- time mix ----
+    xin = _layer_norm(p["ln1"], x)
+    shifted = jnp.concatenate([state["tm_x"][:, None], xin[:, :-1]], axis=1)
+    tm = p["tm"]
+    xr, xk, xv, xg, xw = _ddlerp(tm, xin, shifted)
+    r = jnp.einsum("bld,de->ble", xr, tm["wr"]).reshape(b, l, h, hd)
+    k = jnp.einsum("bld,de->ble", xk, tm["wk"]).reshape(b, l, h, hd)
+    v = jnp.einsum("bld,de->ble", xv, tm["wv"]).reshape(b, l, h, hd)
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", xg, tm["wg"]))
+    w_decay_raw = jnp.einsum("bld,dr->blr", xw, tm["lora_a"][:, : cfg.wkv_lora])
+    w_dyn = jnp.einsum("blr,rd->bld", jnp.tanh(w_decay_raw), tm["lora_b"][4])
+    w = _decay(tm, w_dyn).reshape(b, l, h, hd)
+
+    if chunked and l % cfg.ssm_chunk == 0 and l > 1:
+        y, s_fin = wkv6_chunked(r, k, v, w, tm["u"], state["wkv"], cfg.ssm_chunk)
+    else:
+        y, s_fin = wkv6_scan(r, k, v, w, tm["u"], state["wkv"])
+    y = _group_norm_heads(tm["ln_x"], y, h).astype(x.dtype)
+    x = x + jnp.einsum("ble,ed->bld", y * g, tm["wo"])
+
+    # ---- channel mix ----
+    xin2 = _layer_norm(p["ln2"], x)
+    shifted2 = jnp.concatenate([state["cm_x"][:, None], xin2[:, :-1]], axis=1)
+    cm = p["cm"]
+    dx2 = shifted2 - xin2
+    xk2 = xin2 + dx2 * cm["mu_k"]
+    xr2 = xin2 + dx2 * cm["mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bld,df->blf", xk2, cm["wk"])))
+    rr = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr2, cm["wr"]))
+    x = x + rr * jnp.einsum("blf,fd->bld", kk, cm["wv"])
+
+    new_state = {"tm_x": xin[:, -1], "cm_x": xin2[:, -1], "wkv": s_fin}
+    return x, new_state
+
+
+def rwkv6_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    dt = dtype_of(cfg)
+    return {
+        "tm_x": jax.ShapeDtypeStruct((batch, d), dt),
+        "cm_x": jax.ShapeDtypeStruct((batch, d), dt),
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,915 @@
+"""Model assembly: init / sharding specs / forward / prefill / decode for all
+six architecture families.
+
+Layer stacks are *scanned* (lax.scan over stacked parameters) wherever the
+stack is homogeneous — essential for compile time at 61-100 layers — with
+jax.checkpoint (remat) applied to the scan body per the config policy.
+Heterogeneous patterns become uniform "super-blocks":
+
+  vlm     — scan over 20 groups of (4 self-attn layers + 1 cross-attn layer)
+  hybrid  — scan over groups of (attn_every mamba2 layers + shared attn block)
+  moe     — leading dense layers unrolled, MoE layers scanned
+  audio   — two scans (encoder stack, decoder stack with cross-attention)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe as moe_mod, rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    DATA,
+    MODEL,
+    POD,
+    ShardCtx,
+    apply_mlp,
+    dtype_of,
+    embed_specs,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    mlp_specs,
+    ninit,
+    rms_norm,
+    rmsnorm_specs,
+    unembed,
+)
+
+AUX_LOSS_COEF = 0.01
+MTP_LOSS_COEF = 0.3
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n: int):
+    """Initialize n copies of a sub-tree and stack leaves on axis 0."""
+    keys = jax.random.split(key, n)
+    trees = [fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec_tree):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _constrain(h, cfg: ModelConfig, mesh_axes: tuple, seq_dim: int = 1):
+    """Activation sharding: batch over DP axes (+ optional sequence parallel)."""
+    if not mesh_axes:
+        return h
+    dp = tuple(a for a in (POD, DATA) if a in mesh_axes)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    spec = [None] * h.ndim
+    spec[0] = dp_spec
+    if cfg.seq_shard and MODEL in mesh_axes and h.ndim >= 3:
+        spec[seq_dim] = MODEL
+    return jax.lax.with_sharding_constraint(h, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# dense / moe blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dtype = dtype_of(cfg)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_mla(k1, cfg) if cfg.use_mla else attn.init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dense_block_specs(ctx, cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(),
+        "attn": attn.mla_specs(ctx, cfg) if cfg.use_mla else attn.attention_specs(ctx, cfg),
+        "ln2": rmsnorm_specs(),
+        "mlp": mlp_specs(ctx, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_moe_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dtype = dtype_of(cfg)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_mla(k1, cfg) if cfg.use_mla else attn.init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "moe": moe_mod.init_moe(k2, cfg),
+    }
+
+
+def _moe_block_specs(ctx, cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(),
+        "attn": attn.mla_specs(ctx, cfg) if cfg.use_mla else attn.attention_specs(ctx, cfg),
+        "ln2": rmsnorm_specs(),
+        "moe": moe_mod.moe_specs(ctx, cfg),
+    }
+
+
+def _self_attn(p, cfg, h, positions, *, causal=True):
+    y, cache = (
+        attn.apply_mla(p, cfg, h, positions)
+        if cfg.use_mla
+        else attn.apply_attention(p, cfg, h, positions, causal=causal)
+    )
+    return y, cache
+
+
+def _block_seq(p, cfg, h, positions, *, causal=True, collect_cache=False):
+    """One dense/moe block over a full sequence. Returns (h, aux, cache)."""
+    y, cache = _self_attn(p["attn"], cfg, rms_norm(p["ln1"], h), positions, causal=causal)
+    h = h + y
+    hn = rms_norm(p["ln2"], h)
+    if "moe" in p:
+        moe_fn = (
+            moe_mod.apply_moe_ep if cfg.moe_impl == "ep_manual" else moe_mod.apply_moe
+        )
+        y2, aux = moe_fn(p["moe"], cfg, hn)
+    else:
+        y2, aux = apply_mlp(p["mlp"], hn), jnp.float32(0.0)
+    return h + y2, aux, (cache if collect_cache else None)
+
+
+def _block_decode(p, cfg, h, cache, pos):
+    hn = rms_norm(p["ln1"], h)
+    if cfg.use_mla:
+        y, new_cache = attn.apply_mla_decode(p["attn"], cfg, hn, cache, pos)
+    else:
+        y, new_cache = attn.apply_attention_decode(p["attn"], cfg, hn, cache, pos)
+    h = h + y
+    hn = rms_norm(p["ln2"], h)
+    if "moe" in p:
+        moe_fn = (
+            moe_mod.apply_moe_ep if cfg.moe_impl == "ep_manual" else moe_mod.apply_moe
+        )
+        y2, _ = moe_fn(p["moe"], cfg, hn)
+    else:
+        y2 = apply_mlp(p["mlp"], hn)
+    return h + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# init + specs (public)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    k_embed, k_body, k_extra = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": init_embed(k_embed, cfg)}
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+
+    if cfg.family in ("dense",):
+        params["layers"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), k_body, cfg.n_layers
+        )
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_layers"] = _stack_init(
+                lambda k: _init_dense_block(k, cfg), jax.random.fold_in(k_body, 1), nd
+            )
+        params["layers"] = _stack_init(
+            lambda k: _init_moe_block(k, cfg), k_body, cfg.n_layers - nd
+        )
+        if cfg.mtp:
+            km = jax.random.fold_in(k_extra, 7)
+            params["mtp"] = {
+                "proj": ninit(km, (2 * cfg.d_model, cfg.d_model), (2 * cfg.d_model) ** -0.5, dtype),
+                "block": _init_dense_block(jax.random.fold_in(km, 1), cfg),
+                "norm": init_rmsnorm(cfg.d_model, dtype),
+            }
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: rwkv6.init_rwkv6_block(k, cfg), k_body, cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_init(
+            lambda k: mamba2.init_mamba2_block(k, cfg), k_body, cfg.n_layers
+        )
+        params["shared_attn"] = _init_dense_block(k_extra, cfg)
+    elif cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self_per = cfg.cross_attn_every - 1
+        params["groups"] = _stack_init(
+            lambda k: {
+                "self": _stack_init(
+                    lambda kk: _init_dense_block(kk, cfg), k, n_self_per
+                ),
+                "cross": _init_dense_block(jax.random.fold_in(k, 1), cfg),
+            },
+            k_body,
+            n_cross,
+        )
+    elif cfg.family == "audio":
+        params["encoder"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), jax.random.fold_in(k_body, 1),
+            cfg.encoder_layers,
+        )
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, dtype)
+        params["layers"] = _stack_init(
+            lambda k: {
+                **_init_dense_block(k, cfg),
+                "ln_x": init_rmsnorm(cfg.d_model, dtype),
+                "cross": attn.init_attention(jax.random.fold_in(k, 2), cfg),
+            },
+            k_body,
+            cfg.n_layers,
+        )
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_specs(cfg: ModelConfig, ctx: Optional[ShardCtx] = None) -> dict:
+    ctx = ctx or ShardCtx(fsdp=cfg.fsdp)
+    specs: dict[str, Any] = {"embed": embed_specs(ctx, cfg)}
+    specs["final_norm"] = rmsnorm_specs()
+    if cfg.family == "dense":
+        specs["layers"] = _stack_specs(_dense_block_specs(ctx, cfg))
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            specs["dense_layers"] = _stack_specs(_dense_block_specs(ctx, cfg))
+        specs["layers"] = _stack_specs(_moe_block_specs(ctx, cfg))
+        if cfg.mtp:
+            specs["mtp"] = {
+                "proj": P(None, None),
+                "block": _dense_block_specs(ctx, cfg),
+                "norm": rmsnorm_specs(),
+            }
+    elif cfg.family == "ssm":
+        specs["layers"] = _stack_specs(rwkv6.rwkv6_block_specs(ctx, cfg))
+    elif cfg.family == "hybrid":
+        specs["layers"] = _stack_specs(mamba2.mamba2_block_specs(ctx, cfg))
+        specs["shared_attn"] = _dense_block_specs(ctx, cfg)
+    elif cfg.family == "vlm":
+        specs["groups"] = _stack_specs(
+            {
+                "self": _stack_specs(_dense_block_specs(ctx, cfg)),
+                "cross": _dense_block_specs(ctx, cfg),
+            }
+        )
+    elif cfg.family == "audio":
+        specs["encoder"] = _stack_specs(_dense_block_specs(ctx, cfg))
+        specs["enc_norm"] = rmsnorm_specs()
+        specs["layers"] = _stack_specs(
+            {
+                **_dense_block_specs(ctx, cfg),
+                "ln_x": rmsnorm_specs(),
+                "cross": attn.attention_specs(ctx, cfg),
+            }
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (training / eval over a full sequence)
+# ---------------------------------------------------------------------------
+
+
+def make_forward(cfg: ModelConfig, mesh_axes: tuple = ()):
+    """Returns fn(params, tokens, frontend=None) -> (logits, aux_loss).
+
+    tokens: (B, L) int32. frontend: (B, T, D) patch/frame embeddings for
+    vlm/audio (stub modality frontends per the assignment).
+    """
+
+    def fwd(params, tokens, frontend=None):
+        b, l = tokens.shape
+        positions = jnp.arange(l, dtype=jnp.int32)[None]
+        h = embed_tokens(params["embed"], tokens)
+        h = _constrain(h, cfg, mesh_axes)
+        aux = jnp.float32(0.0)
+
+        if cfg.family in ("dense", "moe"):
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                for i in range(cfg.first_dense_layers):
+                    pl_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    h, a_i, _ = _block_seq(pl_i, cfg, h, positions)
+                    aux += a_i
+
+            def body(carry, layer_p):
+                h, aux = carry
+                h, a_i, _ = _block_seq(layer_p, cfg, h, positions)
+                h = _constrain(h, cfg, mesh_axes)
+                return (h, aux + a_i), None
+
+            (h, aux), _ = jax.lax.scan(
+                _remat(body, cfg), (h, aux), params["layers"]
+            )
+        elif cfg.family == "ssm":
+
+            def body(carry, layer_p):
+                h, aux = carry
+                st = _zero_state_rwkv(cfg, b)
+                h, _ = rwkv6.apply_rwkv6_block(layer_p, cfg, h, st)
+                h = _constrain(h, cfg, mesh_axes)
+                return (h, aux), None
+
+            (h, aux), _ = jax.lax.scan(_remat(body, cfg), (h, aux), params["layers"])
+        elif cfg.family == "hybrid":
+            h, aux = _hybrid_forward(params, cfg, h, positions, b, mesh_axes)
+        elif cfg.family == "vlm":
+            assert frontend is not None, "vlm needs patch embeddings"
+
+            def body(carry, group_p):
+                h, aux = carry
+
+                def self_body(hc, lp):
+                    hh, _, _ = _block_seq(lp, cfg, hc, positions)
+                    return hh, None
+
+                h, _ = jax.lax.scan(self_body, h, group_p["self"])
+                cp = group_p["cross"]
+                y, _ = attn.apply_attention(
+                    cp["attn"], cfg, rms_norm(cp["ln1"], h), positions,
+                    causal=False, kv_src=frontend,
+                )
+                h = h + y
+                h = h + apply_mlp(cp["mlp"], rms_norm(cp["ln2"], h))
+                h = _constrain(h, cfg, mesh_axes)
+                return (h, aux), None
+
+            (h, aux), _ = jax.lax.scan(_remat(body, cfg), (h, aux), params["groups"])
+        elif cfg.family == "audio":
+            assert frontend is not None, "audio needs frame embeddings"
+            enc = _encode_audio(params, cfg, frontend, mesh_axes)
+
+            def body(carry, layer_p):
+                h, aux = carry
+                h, _, _ = _block_seq(layer_p, cfg, h, positions)
+                y, _ = attn.apply_attention(
+                    layer_p["cross"], cfg, rms_norm(layer_p["ln_x"], h),
+                    positions, causal=False, kv_src=enc,
+                )
+                h = h + y
+                h = _constrain(h, cfg, mesh_axes)
+                return (h, aux), None
+
+            (h, aux), _ = jax.lax.scan(_remat(body, cfg), (h, aux), params["layers"])
+
+        h = rms_norm(params["final_norm"], h)
+        logits = unembed(params["embed"], h, cfg)
+
+        if cfg.family == "moe" and cfg.mtp:
+            # multi-token prediction: one extra block over [h_t ; emb(t_{t+1})]
+            emb_next = jnp.roll(embed_tokens(params["embed"], tokens), -1, axis=1)
+            mtp_in = jnp.einsum(
+                "blf,fd->bld",
+                jnp.concatenate([h.astype(dtype_of(cfg)), emb_next], axis=-1),
+                params["mtp"]["proj"],
+            )
+            h2, _, _ = _block_seq(params["mtp"]["block"], cfg, mtp_in, positions)
+            h2 = rms_norm(params["mtp"]["norm"], h2)
+            logits_mtp = unembed(params["embed"], h2, cfg)
+            return logits, aux, logits_mtp
+        return logits, aux, None
+
+    return fwd
+
+
+def _encode_audio(params, cfg, frames, mesh_axes):
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)[None]
+    h = frames
+
+    def body(h, layer_p):
+        h, _, _ = _block_seq(layer_p, cfg, h, positions, causal=False)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat(body, cfg), h, params["encoder"])
+    return rms_norm(params["enc_norm"], h)
+
+
+def _hybrid_forward(params, cfg, h, positions, b, mesh_axes):
+    ae = cfg.attn_every
+    n_groups = cfg.n_layers // ae
+    rem = cfg.n_layers - n_groups * ae
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * ae].reshape((n_groups, ae) + a.shape[1:]),
+        params["layers"],
+    )
+    shared = params["shared_attn"]
+
+    def group_body(h, group_p):
+        def mamba_body(hc, lp):
+            st = _zero_state_mamba(cfg, b)
+            hh, _ = mamba2.apply_mamba2_block(lp, cfg, hc, st)
+            return hh, None
+
+        h, _ = jax.lax.scan(mamba_body, h, group_p)
+        h2, _, _ = _block_seq(shared, cfg, h, positions)
+        h2 = _constrain(h2, cfg, mesh_axes)
+        return h2, None
+
+    h, _ = jax.lax.scan(_remat(group_body, cfg), h, grouped)
+    for i in range(rem):
+        lp = jax.tree.map(lambda a: a[n_groups * ae + i], params["layers"])
+        st = _zero_state_mamba(cfg, b)
+        h, _ = mamba2.apply_mamba2_block(lp, cfg, h, st)
+    return h, jnp.float32(0.0)
+
+
+def _zero_state_rwkv(cfg, b):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), rwkv6.rwkv6_state_shape(cfg, b)
+    )
+
+
+def _zero_state_mamba(cfg, b):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), mamba2.mamba2_state_shape(cfg, b)
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig, mesh_axes: tuple = ()):
+    fwd = make_forward(cfg, mesh_axes)
+
+    def ce(logits, labels, mask):
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        frontend = batch.get("frontend")
+        logits, aux, logits_mtp = fwd(params, tokens, frontend)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        loss = ce(logits, labels, mask)
+        if aux is not None:
+            loss = loss + AUX_LOSS_COEF * aux
+        if logits_mtp is not None:
+            labels2 = jnp.roll(tokens, -2, axis=1)
+            mask2 = mask.at[:, -2].set(0.0)
+            loss = loss + MTP_LOSS_COEF * ce(logits_mtp, labels2, mask2)
+        return loss
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# serving: cache shapes / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_shape(cfg, batch, max_len):
+    if cfg.use_mla:
+        return attn.mla_cache_shape(cfg, batch, max_len)
+    return attn.kv_cache_shape(cfg, batch, max_len)
+
+
+def _stackshape(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+    )
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct tree of the decode cache."""
+    a = _attn_cache_shape(cfg, batch, max_len)
+    if cfg.family == "dense":
+        return {"layers": _stackshape(a, cfg.n_layers)}
+    if cfg.family == "moe":
+        out = {"layers": _stackshape(a, cfg.n_layers - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = _stackshape(a, cfg.first_dense_layers)
+        return out
+    if cfg.family == "ssm":
+        return {"layers": _stackshape(rwkv6.rwkv6_state_shape(cfg, batch), cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": _stackshape(mamba2.mamba2_state_shape(cfg, batch), cfg.n_layers),
+            "shared": _stackshape(a, n_groups),
+        }
+    if cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        t = cfg.n_frontend_tokens
+        dt = dtype_of(cfg)
+        cross = {
+            "k": jax.ShapeDtypeStruct((batch, t, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((batch, t, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+        return {
+            "self": _stackshape(_stackshape(a, n_self), n_groups),
+            "cross": _stackshape(cross, n_groups),
+        }
+    if cfg.family == "audio":
+        t = cfg.n_frontend_tokens
+        dt = dtype_of(cfg)
+        cross = {
+            "k": jax.ShapeDtypeStruct((batch, t, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((batch, t, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+        return {
+            "self": _stackshape(a, cfg.n_layers),
+            "cross": _stackshape(cross, cfg.n_layers),
+        }
+    raise ValueError(cfg.family)
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    dp_size: int = 32,
+    model_size: int = 16,
+    multi_pod: bool = True,
+) -> dict:
+    """Mesh-aware PartitionSpec tree matching ``cache_shape``.
+
+    Batch shards over the DP axes when divisible. KV heads shard over the
+    model axis when divisible; otherwise the cache SEQUENCE dim shards over
+    model (sequence-sharded KV cache — attention contracts the sharded dim
+    and XLA inserts the partial-softmax reduction), which is what keeps the
+    32k/500k caches of low-kv-head models within per-device HBM. SSM states
+    shard their head dim over model.
+    """
+    dp = (POD, DATA) if multi_pod else (DATA,)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    b_sh = dp_spec if batch % dp_size == 0 and batch >= dp_size else None
+    kv_ok = cfg.n_kv_heads % model_size == 0 and cfg.n_kv_heads >= model_size
+    seq_ok = max_len % model_size == 0
+
+    def kv_spec(extra_lead: int):
+        # (B, S, KV, hd) with extra_lead stacked layer dims in front
+        lead = (None,) * extra_lead
+        if kv_ok:
+            return P(*lead, b_sh, None, MODEL, None)
+        if seq_ok:
+            return P(*lead, b_sh, MODEL, None, None)
+        return P(*lead, b_sh, None, None, None)
+
+    def seq2_spec(extra_lead: int, last_div: int):
+        # (B, S, X) latent caches (mla): shard S over model when divisible
+        lead = (None,) * extra_lead
+        if seq_ok:
+            return P(*lead, b_sh, MODEL, None)
+        if last_div % model_size == 0:
+            return P(*lead, b_sh, None, MODEL)
+        return P(*lead, b_sh, None, None)
+
+    def map_attn(extra_lead: int):
+        if cfg.use_mla:
+            return {
+                "ckv": seq2_spec(extra_lead, cfg.kv_lora_rank),
+                "krope": P(*((None,) * extra_lead), b_sh, MODEL if seq_ok else None, None),
+            }
+        return {"k": kv_spec(extra_lead), "v": kv_spec(extra_lead)}
+
+    d = cfg.d_model
+    d_sh = MODEL if d % model_size == 0 else None
+    if cfg.family == "dense":
+        return {"layers": map_attn(1)}
+    if cfg.family == "moe":
+        out = {"layers": map_attn(1)}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = map_attn(1)
+        return out
+    if cfg.family == "ssm":
+        h = d // cfg.ssm_head_dim
+        h_sh = MODEL if h % model_size == 0 else None
+        return {
+            "layers": {
+                "tm_x": P(None, b_sh, d_sh),
+                "cm_x": P(None, b_sh, d_sh),
+                "wkv": P(None, b_sh, h_sh, None, None),
+            }
+        }
+    if cfg.family == "hybrid":
+        d_inner = 2 * d
+        h = d_inner // cfg.ssm_head_dim
+        h_sh = MODEL if h % model_size == 0 else None
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        return {
+            "mamba": {
+                "conv": P(None, b_sh, None, MODEL if conv_ch % model_size == 0 else None),
+                "ssm": P(None, b_sh, h_sh, None, None),
+            },
+            "shared": map_attn(1),
+        }
+    if cfg.family == "vlm":
+        t = cfg.n_frontend_tokens
+        t_sh = MODEL if t % model_size == 0 and not kv_ok else (MODEL if kv_ok else None)
+        cross = {
+            "k": P(None, b_sh, None, MODEL, None) if kv_ok else P(None, b_sh, MODEL if t % model_size == 0 else None, None, None),
+            "v": P(None, b_sh, None, MODEL, None) if kv_ok else P(None, b_sh, MODEL if t % model_size == 0 else None, None, None),
+        }
+        return {"self": map_attn(2), "cross": cross}
+    if cfg.family == "audio":
+        t = cfg.n_frontend_tokens
+        cross_seq = MODEL if t % model_size == 0 and not kv_ok else None
+        cross = {
+            "k": P(None, b_sh, None, MODEL, None) if kv_ok else P(None, b_sh, cross_seq, None, None),
+            "v": P(None, b_sh, None, MODEL, None) if kv_ok else P(None, b_sh, cross_seq, None, None),
+        }
+        return {"self": map_attn(1), "cross": cross}
+    raise ValueError(cfg.family)
+
+
+def _pad_cache_len(cache_l, max_len, axis=1):
+    def pad(a):
+        if a.shape[axis] == max_len:
+            return a
+        pw = [(0, 0)] * a.ndim
+        pw[axis] = (0, max_len - a.shape[axis])
+        return jnp.pad(a, pw)
+    return jax.tree.map(pad, cache_l)
+
+
+def make_prefill(cfg: ModelConfig, max_len: int, mesh_axes: tuple = ()):
+    """Returns fn(params, tokens, frontend=None) -> (last_logits, cache).
+
+    For attention families the cache holds K/V for positions [0, L) padded to
+    max_len; for ssm/hybrid it holds the recurrent state after the prompt.
+    """
+
+    def prefill(params, tokens, frontend=None):
+        b, l = tokens.shape
+        positions = jnp.arange(l, dtype=jnp.int32)[None]
+        h = embed_tokens(params["embed"], tokens)
+        h = _constrain(h, cfg, mesh_axes)
+        cache: dict[str, Any] = {}
+
+        if cfg.family in ("dense", "moe"):
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                dcaches = []
+                for i in range(cfg.first_dense_layers):
+                    pl_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    h, _, c = _block_seq(pl_i, cfg, h, positions, collect_cache=True)
+                    dcaches.append(_pad_cache_len(c, max_len))
+                cache["dense_layers"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *dcaches
+                )
+
+            def body(h, layer_p):
+                h, _, c = _block_seq(layer_p, cfg, h, positions, collect_cache=True)
+                h = _constrain(h, cfg, mesh_axes)
+                return h, _pad_cache_len(c, max_len)
+
+            h, caches = jax.lax.scan(body, h, params["layers"])
+            cache["layers"] = caches
+        elif cfg.family == "ssm":
+
+            def body(h, layer_p):
+                st = _zero_state_rwkv(cfg, b)
+                h, st = rwkv6.apply_rwkv6_block(layer_p, cfg, h, st)
+                h = _constrain(h, cfg, mesh_axes)
+                return h, st
+
+            h, states = jax.lax.scan(body, h, params["layers"])
+            cache["layers"] = states
+        elif cfg.family == "hybrid":
+            h, mamba_states, shared_caches = _hybrid_prefill(
+                params, cfg, h, positions, b, max_len, mesh_axes
+            )
+            cache["mamba"] = mamba_states
+            cache["shared"] = shared_caches
+        elif cfg.family == "vlm":
+
+            def body(h, group_p):
+                def self_body(hc, lp):
+                    hh, _, c = _block_seq(lp, cfg, hc, positions, collect_cache=True)
+                    return hh, _pad_cache_len(c, max_len)
+
+                h, self_caches = jax.lax.scan(self_body, h, group_p["self"])
+                cp = group_p["cross"]
+                y, cross_c = attn.apply_attention(
+                    cp["attn"], cfg, rms_norm(cp["ln1"], h), positions,
+                    causal=False, kv_src=frontend,
+                )
+                h = h + y
+                h = h + apply_mlp(cp["mlp"], rms_norm(cp["ln2"], h))
+                h = _constrain(h, cfg, mesh_axes)
+                return h, {"self": self_caches, "cross": cross_c}
+
+            h, gc = jax.lax.scan(body, h, params["groups"])
+            cache["self"] = gc["self"]
+            cache["cross"] = gc["cross"]
+        elif cfg.family == "audio":
+            enc = _encode_audio(params, cfg, frontend, mesh_axes)
+
+            def body(h, layer_p):
+                h, _, c = _block_seq(layer_p, cfg, h, positions, collect_cache=True)
+                y, cross_c = attn.apply_attention(
+                    layer_p["cross"], cfg, rms_norm(layer_p["ln_x"], h),
+                    positions, causal=False, kv_src=enc,
+                )
+                h = h + y
+                h = _constrain(h, cfg, mesh_axes)
+                return h, {"self": _pad_cache_len(c, max_len), "cross": cross_c}
+
+            h, lc = jax.lax.scan(body, h, params["layers"])
+            cache["self"] = lc["self"]
+            cache["cross"] = lc["cross"]
+
+        h = rms_norm(params["final_norm"], h[:, -1:])
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, cache
+
+    return prefill
+
+
+def _hybrid_prefill(params, cfg, h, positions, b, max_len, mesh_axes):
+    ae = cfg.attn_every
+    n_groups = cfg.n_layers // ae
+    rem = cfg.n_layers - n_groups * ae
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * ae].reshape((n_groups, ae) + a.shape[1:]),
+        params["layers"],
+    )
+    shared = params["shared_attn"]
+
+    def group_body(h, group_p):
+        def mamba_body(hc, lp):
+            st = _zero_state_mamba(cfg, b)
+            hh, st = mamba2.apply_mamba2_block(lp, cfg, hc, st)
+            return hh, st
+
+        h, states = jax.lax.scan(mamba_body, h, group_p)
+        h, _, c = _block_seq(shared, cfg, h, positions, collect_cache=True)
+        h = _constrain(h, cfg, mesh_axes)
+        return h, {"states": states, "attn": _pad_cache_len(c, max_len)}
+
+    h, gc = jax.lax.scan(group_body, h, grouped)
+    mamba_states = jax.tree.map(
+        lambda a: a.reshape((n_groups * ae,) + a.shape[2:]), gc["states"]
+    )
+    rem_states = []
+    for i in range(rem):
+        lp = jax.tree.map(lambda a: a[n_groups * ae + i], params["layers"])
+        st = _zero_state_mamba(cfg, b)
+        h, st = mamba2.apply_mamba2_block(lp, cfg, h, st)
+        rem_states.append(st)
+    if rem_states:
+        rem_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rem_states)
+        mamba_states = jax.tree.map(
+            lambda a, r: jnp.concatenate([a, r], axis=0), mamba_states, rem_stacked
+        )
+    return h, mamba_states, gc["attn"]
+
+
+def make_decode_step(cfg: ModelConfig, mesh_axes: tuple = ()):
+    """Returns fn(params, token (B,), cache, pos) -> (logits (B, V), cache)."""
+
+    def decode(params, token, cache, pos):
+        b = token.shape[0]
+        h = embed_tokens(params["embed"], token[:, None])
+        new_cache: dict[str, Any] = {}
+
+        if cfg.family in ("dense", "moe"):
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                dcs = []
+                for i in range(cfg.first_dense_layers):
+                    pl_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    lc_i = jax.tree.map(lambda a: a[i], cache["dense_layers"])
+                    h, c = _block_decode(pl_i, cfg, h, lc_i, pos)
+                    dcs.append(c)
+                new_cache["dense_layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dcs)
+
+            def body(h, xs):
+                lp, lc = xs
+                h, c = _block_decode(lp, cfg, h, lc, pos)
+                return h, c
+
+            h, cs = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+            new_cache["layers"] = cs
+        elif cfg.family == "ssm":
+
+            def body(h, xs):
+                lp, st = xs
+                h, st = rwkv6.apply_rwkv6_block(lp, cfg, h, st, chunked=False)
+                return h, st
+
+            h, states = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+            new_cache["layers"] = states
+        elif cfg.family == "hybrid":
+            h, new_cache = _hybrid_decode(params, cfg, h, cache, pos)
+        elif cfg.family == "vlm":
+
+            def body(h, xs):
+                gp, sc, cc = xs
+
+                def self_body(hc, inner):
+                    lp, lc = inner
+                    hh, c = _block_decode(lp, cfg, hc, lc, pos)
+                    return hh, c
+
+                h, self_cs = jax.lax.scan(self_body, h, (gp["self"], sc))
+                cp = gp["cross"]
+                y = attn.apply_cross_attention_decode(
+                    cp["attn"], cfg, rms_norm(cp["ln1"], h), cc
+                )
+                h = h + y
+                h = h + apply_mlp(cp["mlp"], rms_norm(cp["ln2"], h))
+                return h, self_cs
+
+            h, self_cs = jax.lax.scan(
+                body, h, (params["groups"], cache["self"], cache["cross"])
+            )
+            new_cache = {"self": self_cs, "cross": cache["cross"]}
+        elif cfg.family == "audio":
+
+            def body(h, xs):
+                lp, sc, cc = xs
+                h, c = _block_decode(lp, cfg, h, sc, pos)
+                y = attn.apply_cross_attention_decode(
+                    lp["cross"], cfg, rms_norm(lp["ln_x"], h), cc
+                )
+                h = h + y
+                return h, c
+
+            h, cs = jax.lax.scan(
+                body, h, (params["layers"], cache["self"], cache["cross"])
+            )
+            new_cache = {"self": cs, "cross": cache["cross"]}
+
+        h = rms_norm(params["final_norm"], h)
+        logits = unembed(params["embed"], h, cfg)[:, 0]
+        return logits, new_cache
+
+    return decode
+
+
+def _hybrid_decode(params, cfg, h, cache, pos):
+    ae = cfg.attn_every
+    n_groups = cfg.n_layers // ae
+    rem = cfg.n_layers - n_groups * ae
+    grouped_p = jax.tree.map(
+        lambda a: a[: n_groups * ae].reshape((n_groups, ae) + a.shape[1:]),
+        params["layers"],
+    )
+    grouped_s = jax.tree.map(
+        lambda a: a[: n_groups * ae].reshape((n_groups, ae) + a.shape[1:]),
+        cache["mamba"],
+    )
+    shared = params["shared_attn"]
+
+    def group_body(h, xs):
+        gp, gs, ac = xs
+
+        def mamba_body(hc, inner):
+            lp, st = inner
+            hh, st = mamba2.apply_mamba2_block(lp, cfg, hc, st, chunked=False)
+            return hh, st
+
+        h, states = jax.lax.scan(mamba_body, h, (gp, gs))
+        h, c = _block_decode(shared, cfg, h, ac, pos)
+        return h, {"states": states, "attn": c}
+
+    h, gc = jax.lax.scan(group_body, h, (grouped_p, grouped_s, cache["shared"]))
+    mamba_states = jax.tree.map(
+        lambda a: a.reshape((n_groups * ae,) + a.shape[2:]), gc["states"]
+    )
+    rem_states = []
+    for i in range(rem):
+        li = n_groups * ae + i
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        st = jax.tree.map(lambda a: a[li], cache["mamba"])
+        h, st = mamba2.apply_mamba2_block(lp, cfg, h, st, chunked=False)
+        rem_states.append(st)
+    if rem_states:
+        rem_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rem_states)
+        mamba_states = jax.tree.map(
+            lambda a, r: jnp.concatenate([a, r], axis=0), mamba_states, rem_stacked
+        )
+    return h, {"mamba": mamba_states, "shared": gc["attn"]}

@@ -1,0 +1,85 @@
+"""Retrieve-then-generate: the Allan-Poe hybrid index as a first-class
+feature of the serving path (DESIGN.md §3).
+
+A RAG request carries the query's fused vectors (dense from the embedder,
+sparse from SPLADE/BM25 analogues — here synthetic), optional required
+keywords and entities. The pipeline is:
+
+  1. hybrid search on the (optionally segment-sharded) index;
+  2. retrieved doc ids -> context token prefixes (a real deployment detok-
+     enizes documents; the synthetic corpus maps doc ids to token spans);
+  3. batched generation conditioned on [context ; prompt].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import HybridIndex
+from repro.core.search import SearchParams, SearchResult, search
+from repro.core.usms import FusedVectors, PathWeights
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class RagConfig:
+    top_k: int = 4
+    ctx_tokens_per_doc: int = 32
+    weights: PathWeights = dataclasses.field(
+        default_factory=PathWeights.three_path
+    )
+    search: SearchParams = SearchParams(k=4, iters=32, pool_size=64)
+
+
+class RagPipeline:
+    def __init__(
+        self,
+        engine: ServingEngine,
+        index: HybridIndex,
+        doc_tokens: jax.Array,  # (N_docs, ctx_tokens_per_doc) int32
+        cfg: RagConfig,
+    ):
+        self.engine = engine
+        self.index = index
+        self.doc_tokens = doc_tokens
+        self.cfg = cfg
+
+    def retrieve(
+        self,
+        queries: FusedVectors,
+        *,
+        keywords: Optional[jax.Array] = None,
+        entities: Optional[jax.Array] = None,
+    ) -> SearchResult:
+        params = dataclasses.replace(self.cfg.search, k=self.cfg.top_k)
+        return search(
+            self.index, queries, self.cfg.weights, params,
+            keywords=keywords, entities=entities,
+        )
+
+    def build_context(self, result: SearchResult) -> jax.Array:
+        """Concatenate retrieved docs' token spans -> (B, top_k * ctx_len)."""
+        ids = jnp.clip(result.ids[:, : self.cfg.top_k], 0, self.doc_tokens.shape[0] - 1)
+        ctx = self.doc_tokens[ids]  # (B, k, ctx_len)
+        b = ctx.shape[0]
+        return ctx.reshape(b, -1)
+
+    def answer(
+        self,
+        queries: FusedVectors,
+        prompts: jax.Array,  # (B, Lp)
+        n_tokens: int,
+        *,
+        keywords: Optional[jax.Array] = None,
+        entities: Optional[jax.Array] = None,
+    ) -> tuple[jax.Array, SearchResult]:
+        res = self.retrieve(queries, keywords=keywords, entities=entities)
+        ctx = self.build_context(res)
+        full_prompt = jnp.concatenate([ctx, prompts], axis=1)
+        out = self.engine.generate(full_prompt, n_tokens)
+        return out, res

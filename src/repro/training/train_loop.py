@@ -1,0 +1,166 @@
+"""Sharded training step: microbatch gradient accumulation, remat'd model
+forward, AdamW, optional int8-compressed DP all-reduce.
+
+Two modes share one code path:
+
+  * GSPMD mode (default): the whole step is one pjit program; DP gradient
+    reduction is inserted by XLA from the sharding specs. Gradient
+    accumulation over microbatches runs as a lax.scan, which also lets XLA
+    overlap the backward of microbatch i with the reduce-scatter of i-1.
+  * manual-DP mode (gradient compression on): the loss/grad is computed
+    under shard_map manual over the DP axes, the DP mean runs through the
+    int8 error-feedback collective (grad_compression.py), and TP stays
+    automatic (GSPMD) inside the shard_map body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.layers import DATA, MODEL, POD, ShardCtx
+from repro.training import optimizer as opt
+from repro.training.grad_compression import compressed_psum_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.OptConfig = opt.OptConfig()
+    microbatches: int = 1
+    grad_compression: bool = False
+
+
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dp = dp_axes_of(mesh)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def make_train_state(cfg: ModelConfig, tcfg: TrainConfig, key, mesh: Optional[Mesh]):
+    """Initialize (params, opt_state) with the model's shardings applied."""
+    specs = tfm.param_specs(cfg, ShardCtx(
+        model_size=mesh.shape[MODEL] if mesh and MODEL in mesh.axis_names else 16,
+        fsdp=cfg.fsdp,
+    ))
+    if mesh is None:
+        params = tfm.init_params(key, cfg)
+        return {"params": params, "opt": opt.init_opt_state(params, tcfg.opt)}, specs
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    params = jax.jit(
+        lambda k: tfm.init_params(k, cfg), out_shardings=shardings
+    )(key)
+    opt_shardings = {
+        "m": shardings,
+        "v": shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+    opt_state = jax.jit(
+        lambda p: opt.init_opt_state(p, tcfg.opt), out_shardings=opt_shardings
+    )(params)
+    return {"params": params, "opt": opt_state}, specs
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """Microbatched grad accumulation via lax.scan (B must divide n_micro)."""
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(a):
+        b = a.shape[0]
+        return a.reshape((n_micro, b // n_micro) + a.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (loss_acc + loss, g_acc), None
+
+    (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.float32(0.0), g0), micro)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh: Optional[Mesh],
+    param_specs_tree,
+):
+    """Returns jitted fn(state, batch) -> (state, metrics)."""
+    mesh_axes = tuple(mesh.axis_names) if mesh is not None else ()
+    loss_fn = tfm.make_loss_fn(cfg, mesh_axes)
+
+    if not tcfg.grad_compression or mesh is None:
+
+        def step(state, batch):
+            loss, grads = _accumulate_grads(
+                loss_fn, state["params"], batch, tcfg.microbatches
+            )
+            new_p, new_opt, metrics = opt.adamw_update(
+                grads, state["opt"], state["params"], tcfg.opt
+            )
+            metrics["loss"] = loss
+            return {"params": new_p, "opt": new_opt}, metrics
+
+        if mesh is None:
+            return jax.jit(step, donate_argnums=0)
+        bspec = batch_spec(mesh)
+        in_shard = (
+            None,  # state shardings are carried by the arrays themselves
+            jax.tree.map(lambda _: NamedSharding(mesh, bspec), {"tokens": 0}),
+        )
+        return jax.jit(step, donate_argnums=0)
+
+    # ---- manual-DP mode with int8-compressed gradient all-reduce ----
+    dp = dp_axes_of(mesh)
+    bspec = batch_spec(mesh)
+
+    def sharded_grads(params, batch, residual):
+        def local(params, batch, residual):
+            loss, grads = _accumulate_grads(loss_fn, params, batch, tcfg.microbatches)
+            mean_grads, new_res = compressed_psum_mean(grads, dp, residual)
+            loss = jax.lax.pmean(loss, dp)
+            return loss, mean_grads, new_res
+
+        # manual over DP only; TP stays automatic inside
+        pspec = jax.tree.map(lambda _: P(), params)
+        rspec = jax.tree.map(lambda _: P(), residual)
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(pspec, jax.tree.map(lambda _: bspec, batch), rspec),
+            out_specs=(P(), pspec, rspec),
+            axis_names=set(dp),
+            check_vma=False,
+        )(params, batch, residual)
+
+    def step(state, batch):
+        residual = state.get("residual")
+        if residual is None:
+            residual = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+        loss, grads, new_res = sharded_grads(state["params"], batch, residual)
+        new_p, new_opt, metrics = opt.adamw_update(
+            grads, state["opt"], state["params"], tcfg.opt
+        )
+        metrics["loss"] = loss
+        return {"params": new_p, "opt": new_opt, "residual": new_res}, metrics
+
+    return jax.jit(step, donate_argnums=0)

@@ -1,0 +1,14 @@
+import os
+
+# Keep the default single CPU device for smoke tests / benches. Distributed
+# tests that need fake devices spawn subprocesses with their own XLA_FLAGS
+# (see tests/_subproc.py). Never set device-count flags here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

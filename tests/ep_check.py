@@ -1,0 +1,72 @@
+"""Subprocess check: moe_impl=ep_manual == moe_impl=gspmd numerically
+(8 fake devices, (2,2,2) pod/data/model mesh)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tfm
+from repro.models.layers import ShardCtx
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    base = dataclasses.replace(
+        get_smoke_config("kimi-k2-1t-a32b"),
+        dtype="float32",
+        capacity_factor=8.0,  # no-drop so both dispatch schemes agree exactly
+        n_experts=8,
+    )
+    ep = dataclasses.replace(base, moe_impl="ep_manual")
+    params = tfm.init_params(jax.random.key(0), base)
+    # make routing decisive: near-tie top-k picks can flip between the two
+    # implementations' (numerically different) router matmuls, which is
+    # selection instability, not an EP bug — widen the logit gaps
+    params["layers"]["moe"]["router"] = params["layers"]["moe"]["router"] * 10.0
+    specs = tfm.param_specs(base, ShardCtx(model_size=2))
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    params = jax.tree.map(lambda a, sh: jax.device_put(a, sh), params, shardings)
+    tokens = jax.random.randint(jax.random.key(1), (4, 16), 0, base.vocab, jnp.int32)
+    tokens = jax.device_put(tokens, NamedSharding(mesh, P(("pod", "data"), None)))
+
+    with jax.set_mesh(mesh):
+        out_g, _, _ = jax.jit(tfm.make_forward(base, mesh.axis_names))(params, tokens)
+        out_e, _, _ = jax.jit(tfm.make_forward(ep, mesh.axis_names))(params, tokens)
+        np.testing.assert_allclose(
+            np.asarray(out_g), np.asarray(out_e), rtol=2e-4, atol=2e-4
+        )
+        # gradients agree too. aux load-balancing loss is per-DP-shard in
+        # ep_manual (the standard distributed-MoE semantics) vs global in the
+        # GSPMD program — a documented semantic difference, excluded here to
+        # isolate the dispatch path.
+        tfm.AUX_LOSS_COEF = 0.0
+        loss_g = tfm.make_loss_fn(base, mesh.axis_names)
+        loss_e = tfm.make_loss_fn(ep, mesh.axis_names)
+        g1 = jax.jit(jax.grad(loss_g))(params, {"tokens": tokens})
+        g2 = jax.jit(jax.grad(loss_e))(params, {"tokens": tokens})
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            # top-k routing can flip on near-tie logits between the two
+            # (numerically different) matmul partitionings — a property of
+            # MoE top-k, not of the EP implementation. Require near-total
+            # element agreement and a bounded worst case instead of exact
+            # equality.
+            aa, bb = np.asarray(a, np.float32), np.asarray(b, np.float32)
+            close = np.isclose(aa, bb, rtol=1e-2, atol=1e-3)
+            frac = close.mean()
+            assert frac > 0.99, f"only {frac:.4f} of grad elements agree"
+            assert np.abs(aa - bb).max() < 0.1
+    print("EP_CHECK_PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Shared test helpers: random fused-vector generators honoring the ELL
+padding contract (idx == PAD_IDX  <=>  val == 0, unique idx per row)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+
+
+def random_sparse(rng, shape, nnz_cap, vocab, dtype=np.float32, min_nnz=0):
+    """Random ELL sparse batch. shape: leading dims, e.g. (B,) or (B, C)."""
+    n = int(np.prod(shape))
+    idx = np.full((n, nnz_cap), PAD_IDX, np.int32)
+    val = np.zeros((n, nnz_cap), np.float32)
+    for r in range(n):
+        k = rng.integers(min_nnz, nnz_cap + 1)
+        if k > 0:
+            idx[r, :k] = rng.choice(vocab, size=k, replace=False)
+            val[r, :k] = rng.normal(size=k)
+            # contract: padded slots have val exactly 0, valid slots nonzero
+            val[r, :k] = np.where(val[r, :k] == 0.0, 1.0, val[r, :k])
+    return SparseVec(
+        idx.reshape(*shape, nnz_cap),
+        val.reshape(*shape, nnz_cap).astype(dtype),
+    )
+
+
+def random_fused(rng, shape, d_dense=64, ps=16, pf=8, vs=997, vf=251, dtype=np.float32):
+    dense = rng.normal(size=(*shape, d_dense)).astype(dtype)
+    return FusedVectors(
+        dense,
+        random_sparse(rng, shape, ps, vs, dtype),
+        random_sparse(rng, shape, pf, vf, dtype),
+    )

@@ -1,0 +1,153 @@
+"""Checkpoint/restart + fault tolerance: atomic commit, retention, restart
+determinism under injected failures, straggler detection, elastic meshes."""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import all_steps
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import transformer as tfm
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    StragglerMonitor,
+    elastic_mesh_shape,
+    run_supervised,
+)
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16), "d": jnp.int32(7)},
+    }
+    save_checkpoint(tmp_path, 5, tree)
+    assert latest_step(tmp_path) == 5
+    out = restore_checkpoint(tmp_path, 5, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert x.dtype == y.dtype
+
+
+def test_checkpoint_retention_and_markers(tmp_path):
+    tree = {"w": jnp.zeros((4,))}
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    assert all_steps(tmp_path) == [4, 5]
+    # stale tmp dirs are never visible as committed steps
+    (tmp_path / ".tmp_junk").mkdir()
+    assert all_steps(tmp_path) == [4, 5]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(tmp_path, 1, {"w": jnp.zeros((5,))})
+
+
+def _tiny_setup():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"), vocab=128)
+    tcfg = TrainConfig(opt=opt.OptConfig(lr=1e-3, warmup_steps=2, total_steps=50))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4))
+    step_fn = make_train_step(cfg, tcfg, None, None)
+
+    def make_state():
+        params = tfm.init_params(jax.random.key(0), cfg)
+        return {"params": params, "opt": opt.init_opt_state(params, tcfg.opt)}
+
+    return make_state, step_fn, pipe
+
+
+def test_restart_determinism(tmp_path):
+    """Crashing at steps 7 and 13 and restarting from checkpoints must yield
+    the exact same loss trajectory as an uninterrupted run (deterministic
+    data skip + bit-exact restore)."""
+    make_state, step_fn, pipe = _tiny_setup()
+
+    ref = run_supervised(
+        n_steps=20, make_state=make_state, train_step=step_fn,
+        batch_fn=pipe.batch, ckpt_dir=str(tmp_path / "ref"), ckpt_every=5,
+    )
+    assert ref.restarts == 0
+
+    inj = FailureInjector(fail_at={7, 13})
+    rep = run_supervised(
+        n_steps=20, make_state=make_state, train_step=step_fn,
+        batch_fn=pipe.batch, ckpt_dir=str(tmp_path / "crash"), ckpt_every=5,
+        injector=inj,
+    )
+    assert rep.restarts == 2
+    assert rep.steps_done == 20
+    # compare the last losses (the crashed run replays some steps; its final
+    # states must coincide with the reference)
+    np.testing.assert_allclose(rep.losses[-1], ref.losses[-1], rtol=1e-6)
+    np.testing.assert_allclose(rep.losses[-3], ref.losses[-3], rtol=1e-6)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(window=16, threshold=1.5)
+    for step in range(16):
+        for host in range(4):
+            mon.record(host, 1.0 if host != 2 else 2.2)
+    assert mon.stragglers() == [2]
+    assert 0.9 < mon.p50() < 2.0
+
+
+def test_elastic_mesh_shapes():
+    # full fleet: 512 devices, TP=16 -> (2, 16, 16)
+    shape, axes = elastic_mesh_shape(512, 16, pod_size=16)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    # lose one pod: 256 devices -> (16, 16) single-pod mesh
+    shape, axes = elastic_mesh_shape(256, 16, pod_size=16)
+    assert shape == (16, 16) and axes == ("data", "model")
+    # lose half a pod's hosts: 384 devices -> (24, 16)
+    shape, axes = elastic_mesh_shape(384, 16)
+    assert shape == (24, 16)
+    with pytest.raises(AssertionError):
+        elastic_mesh_shape(250, 16)
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """A checkpoint written under one mesh restores under a different mesh
+    (runs in a subprocess with 8 fake devices)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = f"{repo / 'src'}:{repo}"
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+wa = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
+save_checkpoint(r"{tmp_path}", 3, {{"w": wa}})
+shard_b = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
+out = restore_checkpoint(r"{tmp_path}", 3, {{"w": w}}, shardings=shard_b)
+np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(w))
+assert out["w"].sharding.spec == P("model", "data")
+print("ELASTIC_OK")
+"""
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "ELASTIC_OK" in proc.stdout

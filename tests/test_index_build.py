@@ -1,0 +1,188 @@
+"""Construction pipeline: NN-Descent quality, pruning invariants, recycling."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knn_graph, pruning
+from repro.core.index import BuildConfig, build_index
+from repro.core.knn_graph import KnnConfig, build_knn_graph, dedup_mask, reverse_neighbors
+from repro.core.pruning import PruneConfig, detour_counts, ip_keep_scan, unique_take
+from repro.core.usms import PAD_IDX, PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.kernels import ops
+
+
+def small_corpus(n=512, seed=0):
+    return make_corpus(
+        CorpusConfig(
+            n_docs=n, n_queries=16, n_topics=16, d_dense=32,
+            nnz_sparse=16, nnz_lexical=8, seed=seed,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_mask():
+    ids = jnp.array([3, 1, 3, PAD_IDX, 1, 7], jnp.int32)
+    mask = np.asarray(dedup_mask(ids))
+    # one True per distinct non-pad id
+    kept = ids[np.nonzero(mask)]
+    assert sorted(np.asarray(kept).tolist()) == [1, 3, 7]
+    assert not mask[3]
+
+
+def test_reverse_neighbors():
+    nbrs = jnp.array([[1, 2], [0, 2], [0, PAD_IDX]], jnp.int32)
+    rev = np.asarray(reverse_neighbors(nbrs, cap=4))
+    assert set(rev[0][rev[0] >= 0].tolist()) == {1, 2}
+    assert set(rev[1][rev[1] >= 0].tolist()) == {0}
+    assert set(rev[2][rev[2] >= 0].tolist()) == {0, 1}
+
+
+def test_unique_take():
+    ids = jnp.array([5, 5, 2, PAD_IDX, 2, 9, 1], jnp.int32)
+    sc = jnp.zeros(7)
+    out = np.asarray(unique_take(ids, sc, 4))
+    assert out.tolist() == [5, 2, 9, 1]
+
+
+def test_detour_counts_simple():
+    # 3 candidates sorted by sim desc: sims to u = [.9, .8, .7]
+    cand = jnp.array([0.9, 0.8, 0.7])
+    # pair[i, j] = sim(v_i, v_j); v_2 reachable from v_0 with sim .95 > .7
+    pair = jnp.array([[1.0, 0.1, 0.95], [0.1, 1.0, 0.2], [0.95, 0.2, 1.0]])
+    routes = np.asarray(detour_counts(cand, pair))
+    assert routes.tolist() == [0, 0, 1]
+
+
+def test_ip_keep_scan_norm_rule():
+    # candidate 1 has small self-IP; kept 0 dominates it -> pruned
+    order = jnp.array([0, 1, 2])
+    pair = jnp.array([[4.0, 3.0, 0.1], [3.0, 2.0, 0.1], [0.1, 0.1, 5.0]])
+    self_ip = jnp.array([4.0, 2.0, 5.0])  # IP(v, v)
+    valid = jnp.ones(3, bool)
+    kept = np.asarray(ip_keep_scan(order, pair, self_ip, valid, cap=3))
+    assert kept[0] and kept[2]
+    assert not kept[1]  # IP(v0, v1)=3.0 >= IP(v1, v1)=2.0 -> pruned
+
+
+# ---------------------------------------------------------------------------
+# NN-Descent
+# ---------------------------------------------------------------------------
+
+
+def test_nn_descent_recall():
+    corpus = small_corpus()
+    cfg = KnnConfig(k=16, iters=5, node_chunk=512)
+    ids, scores = build_knn_graph(corpus.docs, cfg, jax.random.key(0))
+    n = corpus.docs.n
+    assert ids.shape == (n, 16)
+    # ground truth: brute-force fused top-k (exclude self)
+    full = ops.pairwise_scores_chunked(corpus.docs, corpus.docs)
+    full = full.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
+    _, truth = jax.lax.top_k(full, 16)
+    rec = knn_graph.knn_recall(ids, truth)
+    assert rec > 0.80, f"NN-Descent recall too low: {rec}"
+    # rows are sorted by score desc
+    s = np.asarray(scores)
+    assert (np.diff(s, axis=1) <= 1e-5).all()
+    # no self-loops, no duplicates
+    idn = np.asarray(ids)
+    assert not (idn == np.arange(n)[:, None]).any()
+    for r in idn[:32]:
+        v = r[r >= 0]
+        assert len(set(v.tolist())) == len(v)
+
+
+def test_nn_descent_improves_over_iterations():
+    corpus = small_corpus(n=256, seed=1)
+    n = corpus.docs.n
+    full = ops.pairwise_scores_chunked(corpus.docs, corpus.docs)
+    full = full.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
+    _, truth = jax.lax.top_k(full, 8)
+    recalls = []
+    for iters in (0, 2, 5):
+        ids, _ = build_knn_graph(
+            corpus.docs, KnnConfig(k=8, iters=iters, node_chunk=256), jax.random.key(0)
+        )
+        recalls.append(knn_graph.knn_recall(ids, truth))
+    assert recalls[1] > recalls[0]
+    assert recalls[2] >= recalls[1] - 0.02
+
+
+# ---------------------------------------------------------------------------
+# pruning + full build
+# ---------------------------------------------------------------------------
+
+
+def test_full_build_invariants():
+    corpus = small_corpus()
+    cfg = BuildConfig(
+        knn=KnnConfig(k=16, iters=4, node_chunk=512),
+        prune=PruneConfig(degree=12, keyword_degree=6, node_chunk=256),
+    )
+    index = build_index(
+        corpus.docs,
+        cfg,
+        kg_triplets=corpus.kg.triplets,
+        doc_entities=corpus.doc_entities,
+        n_entities=corpus.kg.n_entities,
+    )
+    n = corpus.docs.n
+    sem = np.asarray(index.semantic_edges)
+    assert sem.shape == (n, 12)
+    # unique, no self, in-range
+    for u in range(0, n, 37):
+        row = sem[u][sem[u] >= 0]
+        assert len(set(row.tolist())) == len(row)
+        assert u not in row.tolist()
+        assert (row < n).all()
+    # every node has at least one edge (connectivity floor)
+    assert ((sem >= 0).sum(1) > 0).all()
+    # keyword edges disjoint from semantic edges per node
+    kw = np.asarray(index.keyword_edges)
+    for u in range(0, n, 53):
+        s = set(sem[u][sem[u] >= 0].tolist())
+        kwu = kw[u][kw[u] >= 0]
+        assert (kwu < n).all()
+    # logical edges reference real docs and valid entities
+    log = np.asarray(index.logical_edges)
+    valid = log[..., 0] >= 0
+    assert (log[..., 0][valid] < n).all()
+    # entry points are valid unique node ids and include the top fused-norm node
+    sip = np.asarray(index.self_ip)
+    entries = np.asarray(index.entry_points)
+    assert ((entries >= 0) & (entries < n)).all()
+    assert len(set(entries.tolist())) == len(entries)
+    assert int(np.argmax(sip)) in entries.tolist()
+
+
+def test_keyword_recycling_preserves_navigation():
+    """Flagged keyword edges must contribute keywords shared with the source
+    node that the kept semantic neighbors do not cover."""
+    corpus = small_corpus(n=256, seed=3)
+    knn_ids, knn_scores = build_knn_graph(
+        corpus.docs, KnnConfig(k=16, iters=4, node_chunk=256), jax.random.key(0)
+    )
+    cfg = PruneConfig(degree=8, keyword_degree=8, node_chunk=256)
+    sem, kw = pruning.rng_ip_prune(corpus.docs, knn_ids, knn_scores, cfg)
+    kwn = np.asarray(kw)
+    f_idx = np.asarray(corpus.docs.lexical.idx)
+    checked = 0
+    for u in range(256):
+        for v in kwn[u][kwn[u] >= 0]:
+            ku = set(f_idx[u][f_idx[u] >= 0].tolist())
+            kv = set(f_idx[v][f_idx[v] >= 0].tolist())
+            shared = ku & kv
+            assert shared, f"keyword edge {u}->{v} shares no keywords"
+            checked += 1
+    assert checked > 0, "no keyword edges recycled at all"

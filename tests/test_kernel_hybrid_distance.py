@@ -1,0 +1,171 @@
+"""Pallas hybrid-distance kernel vs pure-jnp oracle.
+
+Sweeps shapes/dtypes (interpret=True on CPU) and drives the padding / Theorem-1
+invariants with hypothesis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import usms
+from repro.core.usms import PAD_IDX, FusedVectors, PathWeights, SparseVec
+from repro.kernels import ops, ref
+from tests.helpers import random_fused, random_sparse
+
+
+SHAPES = [
+    # (B, C, Dd, Ps, Pf)
+    (1, 1, 8, 4, 2),
+    (2, 7, 16, 8, 4),
+    (3, 128, 64, 16, 8),
+    (4, 130, 128, 32, 16),  # C not a multiple of the tile
+    (8, 256, 256, 64, 32),  # production-like nnz caps
+    (1, 129, 33, 5, 3),  # awkward unaligned dims
+]
+
+
+@pytest.mark.parametrize("b,c,dd,ps,pf", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_matches_oracle(b, c, dd, ps, pf, dtype):
+    rng = np.random.default_rng(hash((b, c, dd, ps, pf)) % 2**31)
+    q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, dtype=np.float32)
+    cands = random_fused(rng, (b, c), d_dense=dd, ps=ps, pf=pf, dtype=np.float32)
+    if dtype == jnp.bfloat16:
+        cast = lambda f: FusedVectors(
+            f.dense.astype(jnp.bfloat16),
+            SparseVec(f.learned.idx, f.learned.val.astype(jnp.bfloat16)),
+            SparseVec(f.lexical.idx, f.lexical.val.astype(jnp.bfloat16)),
+        )
+        q, cands = cast(q), cast(cands)
+    got = ops.hybrid_scores(q, cands, c_tile=64, interpret=True)
+    want = ref.hybrid_scores_ref(q, cands)
+    assert got.shape == (b, c)
+    assert got.dtype == jnp.float32
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_kernel_various_tiles():
+    rng = np.random.default_rng(7)
+    q = random_fused(rng, (2,), d_dense=32, ps=8, pf=4)
+    cands = random_fused(rng, (2, 96), d_dense=32, ps=8, pf=4)
+    want = ref.hybrid_scores_ref(q, cands)
+    for c_tile in (8, 32, 128, 256):
+        got = ops.hybrid_scores(q, cands, c_tile=c_tile, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_scores_vs_ids_masks_padding():
+    rng = np.random.default_rng(3)
+    corpus = random_fused(rng, (50,), d_dense=16, ps=4, pf=4)
+    q = random_fused(rng, (2,), d_dense=16, ps=4, pf=4)
+    ids = np.array([[0, 3, PAD_IDX, 7], [49, PAD_IDX, PAD_IDX, 1]], np.int32)
+    scores = ops.hybrid_scores_vs_ids(q, corpus, jnp.asarray(ids))
+    assert np.isneginf(np.asarray(scores)[0, 2])
+    assert np.isneginf(np.asarray(scores)[1, 1])
+    # valid entries match a direct gather+score
+    cands = corpus.take(jnp.asarray(ids).reshape(-1))
+    cands = jax.tree.map(lambda a: a.reshape(2, 4, *a.shape[1:]), cands)
+    want = ref.hybrid_scores_ref(q, cands)
+    valid = ids >= 0
+    np.testing.assert_allclose(
+        np.asarray(scores)[valid], np.asarray(want)[valid], rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def fused_pair(draw):
+    b = draw(st.integers(1, 3))
+    c = draw(st.integers(1, 9))
+    dd = draw(st.sampled_from([4, 16, 33]))
+    ps = draw(st.sampled_from([2, 5, 8]))
+    pf = draw(st.sampled_from([1, 4]))
+    seed = draw(st.integers(0, 2**20))
+    rng = np.random.default_rng(seed)
+    q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=97, vf=31)
+    cands = random_fused(rng, (b, c), d_dense=dd, ps=ps, pf=pf, vs=97, vf=31)
+    return q, cands
+
+
+@settings(max_examples=25, deadline=None)
+@given(fused_pair())
+def test_property_kernel_equals_oracle(pair):
+    q, cands = pair
+    got = ops.hybrid_scores(q, cands, c_tile=8, interpret=True)
+    want = ref.hybrid_scores_ref(q, cands)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    fused_pair(),
+    st.tuples(
+        st.floats(0.0, 4.0), st.floats(0.0, 4.0), st.floats(0.0, 4.0)
+    ),
+)
+def test_property_theorem1_weighted_mips(pair, weights):
+    """Theorem 1: hybrid score with weights == inner product of the
+    weight-scaled concatenated query with the concatenated document."""
+    q, cands = pair
+    wd, ws, wf = weights
+    w = PathWeights.make(wd, ws, wf)
+    qw = usms.weighted_query(q, w)
+    got = ops.hybrid_scores(qw, cands, c_tile=8, interpret=True)
+
+    # oracle: materialize concatenated dense vectors and take inner products
+    vs, vf_ = 97, 31
+    qcat = usms.concat_dense(qw, vs, vf_)  # (B, Dtot)
+    b, c = cands.dense.shape[:2]
+    flat = jax.tree.map(lambda a: a.reshape((b * c,) + a.shape[2:]), cands)
+    dcat = usms.concat_dense(flat, vs, vf_).reshape(b, c, -1)
+    want = jnp.einsum("bd,bcd->bc", qcat, dcat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(fused_pair())
+def test_property_sparse_ip_equals_dense_scatter(pair):
+    """sparse_ip(a, b) == <scatter(a), scatter(b)> for the ELL format."""
+    q, cands = pair
+    vs = 97
+    got = ref.sparse_ip_ref(
+        q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val
+    )
+    qd = usms.sparse_to_dense(q.learned, vs)
+    b, c = cands.learned.idx.shape[:2]
+    dd = usms.sparse_to_dense(
+        SparseVec(
+            cands.learned.idx.reshape(b * c, -1), cands.learned.val.reshape(b * c, -1)
+        ),
+        vs,
+    ).reshape(b, c, vs)
+    want = jnp.einsum("bv,bcv->bc", qd, dd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_weights_isolate_paths():
+    """Setting one weight to 1 and the rest to 0 reproduces single-path IP."""
+    rng = np.random.default_rng(11)
+    q = random_fused(rng, (2,), d_dense=16, ps=4, pf=4)
+    cands = random_fused(rng, (2, 5), d_dense=16, ps=4, pf=4)
+    dense_only = ops.hybrid_scores(
+        usms.weighted_query(q, PathWeights.make(1.0, 0.0, 0.0)), cands, c_tile=8, interpret=True
+    )
+    want = jnp.einsum("bd,bcd->bc", q.dense, cands.dense)
+    np.testing.assert_allclose(np.asarray(dense_only), np.asarray(want), rtol=1e-5, atol=1e-5)
+    sparse_only = ops.hybrid_scores(
+        usms.weighted_query(q, PathWeights.make(0.0, 1.0, 0.0)), cands, c_tile=8, interpret=True
+    )
+    want_s = ref.sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
+    np.testing.assert_allclose(np.asarray(sparse_only), np.asarray(want_s), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on search invariants: for random corpora and
+random path weights, results are sorted, unique, valid, and monotone in
+search effort."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PAD_IDX, PathWeights, weighted_query
+from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    corpus = make_corpus(
+        CorpusConfig(n_docs=512, n_queries=8, n_topics=16, d_dense=32,
+                     nnz_sparse=12, nnz_lexical=8, seed=23)
+    )
+    index = build_index(
+        corpus.docs,
+        BuildConfig(
+            knn=KnnConfig(k=16, iters=4, node_chunk=512),
+            prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=256),
+            path_refine_iters=1,
+        ),
+    )
+    return corpus, index
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.floats(0.0, 2.0), st.floats(0.0, 2.0), st.floats(0.0, 2.0),
+    st.sampled_from([1, 2, 4]),
+)
+def test_property_results_valid_for_any_weights(small_index, wd, ws, wf, expand):
+    corpus, index = small_index
+    if wd + ws + wf == 0.0:
+        wd = 1.0
+    w = PathWeights.make(wd, ws, wf)
+    params = SearchParams(k=10, iters=24 // expand, pool_size=48, expand=expand)
+    res = search(index, corpus.queries, w, params)
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    n = corpus.docs.n
+    for row_i, row_s in zip(ids, scores):
+        valid = row_i[row_i >= 0]
+        # in-range, unique
+        assert (valid < n).all()
+        assert len(set(valid.tolist())) == len(valid)
+        # sorted descending among valid entries
+        vs = row_s[row_i >= 0]
+        assert (np.diff(vs) <= 1e-5).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**20))
+def test_property_scores_are_true_hybrid_scores(small_index, seed):
+    """Returned scores equal the hybrid score of the returned doc (no KG)."""
+    corpus, index = small_index
+    rng = np.random.default_rng(seed)
+    w = PathWeights.make(*rng.uniform(0.1, 1.5, size=3))
+    params = SearchParams(k=5, iters=24, pool_size=48)
+    res = search(index, corpus.queries, w, params)
+    qw = weighted_query(corpus.queries, w)
+    want = ops.hybrid_scores_vs_ids(qw, corpus.docs, res.ids)
+    got = np.asarray(res.scores)
+    mask = np.asarray(res.ids) >= 0
+    np.testing.assert_allclose(
+        got[mask], np.asarray(want)[mask], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_more_effort_never_hurts_much(small_index):
+    """Recall is (weakly) monotone in search effort."""
+    corpus, index = small_index
+    w = PathWeights.three_path()
+    qw = weighted_query(corpus.queries, w)
+    truth = jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1]
+    recs = []
+    for iters, pool in [(8, 32), (24, 48), (48, 64)]:
+        res = search(index, corpus.queries, w, SearchParams(k=10, iters=iters, pool_size=pool))
+        recs.append(recall_at_k(np.asarray(res.ids), np.asarray(truth)))
+    assert recs[1] >= recs[0] - 0.02
+    assert recs[2] >= recs[1] - 0.02

@@ -1,0 +1,113 @@
+"""Chunk-parallel SSM cores vs exact per-step scans (WKV6 + Mamba2 SSD) —
+the hardware-adapted chunked forms must match the recurrence oracles."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, rwkv6
+
+
+def _wkv_inputs(rng, b, l, h, k, w_lo=0.5, w_hi=0.999):
+    r = jnp.asarray(rng.normal(size=(b, l, h, k)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, l, h, k)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, l, h, k)), jnp.float32)
+    w = jnp.asarray(rng.uniform(w_lo, w_hi, size=(b, l, h, k)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, k)), jnp.float32)
+    return r, kk, v, w, u
+
+
+@pytest.mark.parametrize("chunk,l", [(8, 32), (16, 64), (16, 16)])
+def test_wkv6_chunked_matches_scan(chunk, l):
+    rng = np.random.default_rng(l)
+    b, h, k = 2, 3, 8
+    r, kk, v, w, u = _wkv_inputs(rng, b, l, h, k)
+    s0 = jnp.asarray(rng.normal(size=(b, h, k, k)), jnp.float32)
+    y1, s1 = rwkv6.wkv6_scan(r, kk, v, w, u, s0)
+    y2, s2 = rwkv6.wkv6_chunked(r, kk, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_strong_decay_stable():
+    """Strong decay (w -> 0.05) must not produce inf/nan in the chunked path."""
+    rng = np.random.default_rng(3)
+    r, kk, v, w, u = _wkv_inputs(rng, 1, 32, 2, 8, w_lo=0.05, w_hi=0.3)
+    s0 = jnp.zeros((1, 2, 8, 8))
+    y, s = rwkv6.wkv6_chunked(r, kk, v, w, u, s0, chunk=16)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(s)).all()
+    y1, s1 = rwkv6.wkv6_scan(r, kk, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y1), rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_step_matches_scan():
+    rng = np.random.default_rng(5)
+    r, kk, v, w, u = _wkv_inputs(rng, 2, 8, 2, 4)
+    s = jnp.zeros((2, 2, 4, 4))
+    ys = []
+    for t in range(8):
+        y, s = rwkv6.wkv6_step(r[:, t], kk[:, t], v[:, t], w[:, t], u, s)
+        ys.append(y)
+    y_steps = jnp.stack(ys, axis=1)
+    y_scan, s_scan = rwkv6.wkv6_scan(r, kk, v, w, u, jnp.zeros((2, 2, 4, 4)))
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_scan), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_scan), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk,l", [(8, 32), (16, 64)])
+def test_ssd_chunked_matches_scan(chunk, l):
+    rng = np.random.default_rng(l + 1)
+    b, h, p, n = 2, 3, 8, 8
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.5, 0.2, size=(b, l, h))), jnp.float32)
+    a_neg = -jnp.asarray(np.abs(rng.normal(1.0, 0.5, size=(h,))), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, p, n)), jnp.float32)
+    y1, s1 = mamba2.ssd_scan(x, dt, a_neg, bm, cm, s0)
+    y2, s2 = mamba2.ssd_chunked(x, dt, a_neg, bm, cm, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**20), st.sampled_from([8, 16]), st.sampled_from([16, 32]))
+def test_property_ssd_causal(seed, chunk, l):
+    """Changing inputs at time t must not affect outputs before t."""
+    rng = np.random.default_rng(seed)
+    b, h, p, n = 1, 2, 4, 4
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.5, 0.2, size=(b, l, h))), jnp.float32)
+    a_neg = -jnp.ones((h,), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    s0 = jnp.zeros((b, h, p, n))
+    y1, _ = mamba2.ssd_chunked(x, dt, a_neg, bm, cm, s0, chunk=chunk)
+    t = l // 2
+    x2 = x.at[:, t:].set(100.0)
+    y2, _ = mamba2.ssd_chunked(x2, dt, a_neg, bm, cm, s0, chunk=chunk)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, :t]), np.asarray(y2[:, :t]), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**20))
+def test_property_wkv6_causal(seed):
+    rng = np.random.default_rng(seed)
+    b, l, h, k = 1, 32, 2, 4
+    r, kk, v, w, u = _wkv_inputs(rng, b, l, h, k)
+    s0 = jnp.zeros((b, h, k, k))
+    y1, _ = rwkv6.wkv6_chunked(r, kk, v, w, u, s0, chunk=8)
+    t = 16
+    kk2 = kk.at[:, t:].set(50.0)
+    y2, _ = rwkv6.wkv6_chunked(r, kk2, v, w, u, s0, chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, :t]), np.asarray(y2[:, :t]), rtol=1e-5, atol=1e-5
+    )
