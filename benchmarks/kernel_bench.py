@@ -1,8 +1,18 @@
 """Hybrid distance kernel micro-bench: interpret-mode correctness timing on
 CPU + the analytic TPU roofline character of the kernel (it is the
-distance-computation hot spot the paper's warp kernel targets)."""
+distance-computation hot spot the paper's warp kernel targets).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--dry-run]
+"""
 
 from __future__ import annotations
+
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # script mode: python benchmarks/kernel_bench.py
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path[:0] = [str(_root), str(_root / "src")]
 
 import numpy as np
 
@@ -16,10 +26,10 @@ from tests.helpers import random_fused
 from benchmarks.common import timed
 
 
-def run():
+def run(dry_run: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    b, c, dd, ps, pf = 8, 512, 1024, 64, 32
+    b, c, dd, ps, pf = (2, 64, 64, 8, 4) if dry_run else (8, 512, 1024, 64, 32)
     q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
     cands = random_fused(rng, (b, c), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
 
@@ -50,3 +60,21 @@ def run():
         f"arith_intensity={ai:.1f}flops/B;bound={'memory' if t_memory > t_compute else 'compute'}",
     ))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--dry-run", action="store_true",
+        help="tiny shapes; verifies the kernel entry points run (CI smoke)",
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(dry_run=args.dry_run):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

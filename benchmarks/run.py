@@ -27,6 +27,7 @@ def main() -> None:
         fig12_weights,
         fig14_scale,
         kernel_bench,
+        serving_bench,
         table2_build,
         table3_kg,
         table5_insert,
@@ -43,6 +44,7 @@ def main() -> None:
         "table5": lambda: table5_insert.run(*((2048, 32) if q else (4096, 64))),
         "fig14": lambda: fig14_scale.run((1024, 2048) if q else (2048, 4096, 8192, 16384)),
         "kernel": kernel_bench.run,
+        "serving": lambda: serving_bench.run(*((1024, 64) if q else (4096, 256))),
     }
     if args.only:
         keep = set(args.only.split(","))

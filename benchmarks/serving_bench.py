@@ -1,0 +1,163 @@
+"""Serving-path benchmark: sustained QPS and p50/p99 request latency of the
+micro-batched ``HybridSearchService`` across bucket sizes and path-weight
+mixes — the online counterpart of fig8's offline batched-search numbers.
+
+Per configuration, a closed-loop client replays a request stream (every
+request a random one of several ``PathWeights`` combinations, so every batch
+is weight-heterogeneous and still hits ONE cached executable) and measures
+per-request submit->result latency and wall-clock QPS after a warmup flush
+that absorbs compilation.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--quick] [--dry-run]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):  # script mode: python benchmarks/serving_bench.py
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path[:0] = [str(_root), str(_root / "src")]
+
+import numpy as np
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams
+from repro.core.usms import PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.serving.batcher import BatcherConfig, SearchRequest
+from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+
+WEIGHT_MIXES = [
+    ("dense", PathWeights.make(1.0, 0.0, 0.0)),
+    ("sparse+full", PathWeights.make(0.0, 1.0, 1.0)),
+    ("three-path", PathWeights.make(1.0, 1.0, 1.0)),
+    ("skewed", PathWeights.make(0.6, 0.3, 0.1)),
+]
+
+
+def _drive(service, queries, n_requests, rng, k):
+    """Closed-loop client: submit the stream, recording per-request latency
+    (submit -> result delivery, i.e. queue wait + batch execution)."""
+    b = queries.dense.shape[0]
+    t_submit = np.zeros(n_requests)
+    t_done = np.zeros(n_requests)
+    pendings = []
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        req = SearchRequest(
+            query=queries[int(rng.integers(b))],
+            weights=WEIGHT_MIXES[int(rng.integers(len(WEIGHT_MIXES)))][1],
+            k=k,
+        )
+        t_submit[i] = time.perf_counter()
+        pendings.append(service.submit(req))
+        # requests completed by a size-triggered flush get their finish time
+        for j in range(i + 1):
+            if t_done[j] == 0.0 and pendings[j].done:
+                t_done[j] = time.perf_counter()
+    service.flush()
+    now = time.perf_counter()
+    t_done[t_done == 0.0] = now
+    wall = now - t0
+    lat_ms = (t_done[:n_requests] - t_submit[:n_requests]) * 1e3
+    return wall, lat_ms
+
+
+def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
+    rows = []
+    if dry_run:
+        n_docs, n_requests = 512, 32
+    rng = np.random.default_rng(7)
+    corpus = make_corpus(
+        CorpusConfig(
+            n_docs=n_docs, n_queries=64, n_topics=max(n_docs // 64, 8),
+            d_dense=64, nnz_sparse=16, nnz_lexical=8, seed=7,
+        )
+    )
+    index = build_index(
+        corpus.docs,
+        BuildConfig(
+            knn=KnnConfig(k=16, iters=3, node_chunk=min(n_docs, 2048)),
+            prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=512),
+            path_refine_iters=0,
+        ),
+    )
+    params = SearchParams(k=10, iters=32, pool_size=64)
+
+    for bucket in (8, 32):
+        service = HybridSearchService(
+            index,
+            params,
+            ServiceConfig(
+                batcher=BatcherConfig(
+                    flush_size=bucket, max_batch=bucket, flush_deadline_s=0.05
+                )
+            ),
+        )
+        # warmup: one full bucket through every shape so compile time is
+        # excluded from the steady-state measurement
+        _drive(service, corpus.queries, bucket, np.random.default_rng(0), params.k)
+        wall, lat_ms = _drive(service, corpus.queries, n_requests, rng, params.k)
+        qps = n_requests / wall
+        rows.append(
+            (
+                f"serving.qps_bucket{bucket}",
+                wall * 1e6 / n_requests,
+                f"qps={qps:.0f};p50_ms={np.percentile(lat_ms, 50):.1f};"
+                f"p99_ms={np.percentile(lat_ms, 99):.1f};"
+                f"executables={len(service.executable_cache)};"
+                f"weight_mixes={len(WEIGHT_MIXES)}",
+            )
+        )
+
+    # per-mix latency at the larger bucket: one homogeneous stream per path
+    # combination, all through the SAME service (and executable)
+    service = HybridSearchService(
+        index,
+        params,
+        ServiceConfig(batcher=BatcherConfig(flush_size=32, max_batch=32)),
+    )
+    _drive(service, corpus.queries, 32, np.random.default_rng(0), params.k)
+    for name, w in WEIGHT_MIXES:
+        pend = []
+        t0 = time.perf_counter()
+        for i in range(32):
+            pend.append(
+                service.submit(
+                    SearchRequest(query=corpus.queries[i % 64], weights=w, k=params.k)
+                )
+            )
+        service.flush()
+        dt = time.perf_counter() - t0
+        rows.append(
+            (
+                f"serving.path_{name}",
+                dt * 1e6 / 32,
+                f"qps={32 / dt:.0f};executables={len(service.executable_cache)}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller corpus")
+    ap.add_argument(
+        "--dry-run", action="store_true", help="tiny smoke run (CI entry-point check)"
+    )
+    args = ap.parse_args()
+    kw = {}
+    if args.quick:
+        kw = dict(n_docs=1024, n_requests=64)
+    print("name,us_per_call,derived")
+    for r in run(dry_run=args.dry_run, **kw):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,9 @@
 """End-to-end driver (the paper's kind: retrieval serving): build the hybrid
 index over a corpus, then serve batched retrieval-augmented generation
-requests — hybrid search -> context assembly -> batched decode.
+requests — hybrid search -> context assembly -> batched decode. Retrieval
+runs through ``HybridSearchService``, so RAG traffic is micro-batched into
+shape-bucketed executables and would share the index snapshot with any other
+search client.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -19,7 +22,9 @@ from repro.core.search import SearchParams
 from repro.core.usms import PathWeights
 from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
 from repro.models import transformer as tfm
+from repro.serving.batcher import BatcherConfig
 from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
 from repro.serving.rag import RagConfig, RagPipeline
 
 
@@ -47,10 +52,16 @@ def main():
 
     rng = np.random.default_rng(0)
     doc_tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(n_docs, 16)), jnp.int32)
+    search_params = SearchParams(k=3, iters=40, pool_size=64)
+    service = HybridSearchService(
+        index, search_params,
+        ServiceConfig(batcher=BatcherConfig(flush_size=n_requests,
+                                            max_batch=n_requests)),
+    )
     rag = RagPipeline(
         engine, index, doc_tokens,
-        RagConfig(top_k=3, ctx_tokens_per_doc=16,
-                  search=SearchParams(k=3, iters=40, pool_size=64)),
+        RagConfig(top_k=3, ctx_tokens_per_doc=16, search=search_params),
+        service=service,
     )
 
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, size=(n_requests, 8)), jnp.int32)
@@ -63,6 +74,9 @@ def main():
           f"in {dt:.1f}s  ({n_requests * 24 / dt:.1f} tok/s)")
     print(f"retrieval recall of planted docs: {rec:.2f}")
     print(f"output shape: {out.shape} (context 3x16 + prompt 8 + 24 generated)")
+    print(f"service: {service.stats.batches} batches, "
+          f"{service.stats.compiles} compiled executables, "
+          f"{service.stats.requests} requests")
 
 
 if __name__ == "__main__":

@@ -3,12 +3,13 @@
 from repro.core.index import BuildConfig, HybridIndex, build_index, insert, mark_deleted
 from repro.core.knn_graph import KnnConfig, build_knn_graph
 from repro.core.pruning import PruneConfig, rng_ip_prune
-from repro.core.search import SearchParams, SearchResult, search
+from repro.core.search import SearchParams, SearchResult, search, search_padded
 from repro.core.usms import (
     PAD_IDX,
     FusedVectors,
     PathWeights,
     SparseVec,
+    stack_weights,
     weighted_query,
 )
 
@@ -25,9 +26,11 @@ __all__ = [
     "SearchParams",
     "SearchResult",
     "search",
+    "search_padded",
     "PAD_IDX",
     "FusedVectors",
     "PathWeights",
     "SparseVec",
+    "stack_weights",
     "weighted_query",
 ]

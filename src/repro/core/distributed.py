@@ -31,11 +31,27 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.index import BuildConfig, HybridIndex, build_index
-from repro.core.search import SearchParams, SearchResult, _search_batch
+from repro.core.search import SearchParams, SearchResult, search_padded
 from repro.core.usms import PAD_IDX, FusedVectors, PathWeights
 
 SEGMENT_AXES = ("pod", "data")  # axes that shard segments (present subset used)
 QUERY_AXIS = "model"  # axis that shards the query batch
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of jax.experimental around 0.5, and its
+    replication-check kwarg was renamed check_rep -> check_vma along the way;
+    support every combination (the container pins an older jax than the TPU
+    fleet)."""
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, **kw, check_vma=False)
+        except TypeError:  # public jax.shard_map, pre-rename kwarg
+            return jax.shard_map(f, **kw, check_rep=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, **kw, check_rep=False)
 
 
 @partial(
@@ -126,14 +142,17 @@ def _present_axes(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
     return tuple(a for a in axes if a in mesh.axis_names)
 
 
-def make_distributed_search(
+def make_distributed_search_padded(
     mesh: Mesh,
-    weights: PathWeights,
     params: SearchParams,
 ):
-    """Build the jitted shard_map search for a given mesh.
+    """Build the jitted shard_map search for a given mesh, shape-stable form.
 
-    Returns fn(seg_index, queries) -> SearchResult with globally-merged ids.
+    Returns fn(seg_index, queries, weights, keywords, entities) ->
+    SearchResult with globally-merged ids. Weights/keywords/entities travel
+    as traced data per call (weight leaves must be (B,) arrays so they shard
+    with the query batch), so one executable serves every path combination —
+    this is the entry point the serving layer fronts sharded indexes with.
     Queries are sharded over the "model" axis (if present); the segmented
     index is sharded over ("pod", "data").
     """
@@ -143,18 +162,17 @@ def make_distributed_search(
     q_spec = P(q_axes[0]) if q_axes else P()
     NEG_FILL = jnp.float32(-1e30)
 
-    def local_search(seg_index: SegmentedIndex, queries: FusedVectors):
+    def local_search(
+        seg_index: SegmentedIndex,
+        queries: FusedVectors,
+        weights: PathWeights,
+        keywords: jax.Array,
+        entities: jax.Array,
+    ):
         # shard_map gives each device a (segments_per_device=1, ...) block
         idx = jax.tree.map(lambda a: a[0], seg_index.index)
         gids = seg_index.global_ids[0]
-        res = _search_batch(
-            idx,
-            queries,
-            weights,
-            jnp.full((queries.dense.shape[0], 1), PAD_IDX, jnp.int32),
-            jnp.full((queries.dense.shape[0], 1), PAD_IDX, jnp.int32),
-            params,
-        )
+        res = search_padded(idx, queries, weights, keywords, entities, params)
         # local -> global ids
         g = jnp.where(
             res.ids >= 0, gids[jnp.clip(res.ids, 0, gids.shape[0] - 1)], PAD_IDX
@@ -185,7 +203,7 @@ def make_distributed_search(
             expanded = jax.lax.psum(expanded, all_axes)
         return ids, jnp.where(jnp.isfinite(top), top, NEG_FILL), expanded
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         local_search,
         mesh=mesh,
         in_specs=(
@@ -194,17 +212,49 @@ def make_distributed_search(
                 global_ids=seg_spec,
             ),
             jax.tree.map(lambda _: q_spec, _queries_struct()),
+            jax.tree.map(lambda _: q_spec, _weights_struct()),
+            q_spec,
+            q_spec,
         ),
         out_specs=(P(), P(), P()),
-        check_vma=False,
     )
 
     @jax.jit
-    def run(seg_index: SegmentedIndex, queries: FusedVectors) -> SearchResult:
-        ids, scores, expanded = shard_fn(seg_index, queries)
+    def run(
+        seg_index: SegmentedIndex,
+        queries: FusedVectors,
+        weights: PathWeights,
+        keywords: jax.Array,
+        entities: jax.Array,
+    ) -> SearchResult:
+        ids, scores, expanded = shard_fn(
+            seg_index, queries, weights, keywords, entities
+        )
         return SearchResult(ids, scores, jnp.broadcast_to(expanded, (ids.shape[0],)))
 
     return run
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    weights: PathWeights,
+    params: SearchParams,
+):
+    """Fixed-weights convenience wrapper over the shape-stable form.
+
+    Returns fn(seg_index, queries) -> SearchResult with globally-merged ids.
+    """
+    run = make_distributed_search_padded(mesh, params)
+
+    def fn(seg_index: SegmentedIndex, queries: FusedVectors) -> SearchResult:
+        b = queries.dense.shape[0]
+        w = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,)), weights
+        )
+        pad = jnp.full((b, 1), PAD_IDX, jnp.int32)
+        return run(seg_index, queries, w, pad, pad)
+
+    return fn
 
 
 def _index_struct():
@@ -229,6 +279,11 @@ def _queries_struct():
 
     z = 0
     return FusedVectors(dense=z, learned=SparseVec(z, z), lexical=SparseVec(z, z))
+
+
+def _weights_struct():
+    z = 0
+    return PathWeights(dense=z, sparse=z, full=z, kg=z)
 
 
 def place_segmented_index(
@@ -269,7 +324,7 @@ def make_distributed_descent_round(mesh: Mesh, cfg):
         return ids[None], sc[None]
 
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             local_round,
             mesh=mesh,
             in_specs=(
@@ -279,6 +334,5 @@ def make_distributed_descent_round(mesh: Mesh, cfg):
                 spec,
             ),
             out_specs=(spec, spec),
-            check_vma=False,
         )
     )

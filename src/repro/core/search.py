@@ -275,19 +275,35 @@ def _search_one(
 
 
 @partial(jax.jit, static_argnames=("params",))
-def _search_batch(
+def search_padded(
     index: HybridIndex,
     queries: FusedVectors,
     weights: PathWeights,
-    q_keywords: jax.Array,
-    q_entities: jax.Array,
+    keywords: jax.Array,  # (B, Kw) required keywords, PAD_IDX padded
+    entities: jax.Array,  # (B, Eq) query entities, PAD_IDX padded
     params: SearchParams,
 ) -> SearchResult:
+    """Shape-stable batched search: every operand is a concrete array with a
+    static pad cap and no data-dependent Python branching, so one traced
+    executable serves every request mix of a given shape bucket.
+
+    ``weights`` leaves may be scalars (whole-batch weights) or (B,) arrays
+    (per-query weights): either way they enter as traced data per Theorem 1,
+    so changing weights never recompiles. This is the entry point the serving
+    layer AOT-compiles per (bucket shape, SearchParams); ``search()`` is the
+    convenience wrapper that fabricates the pad arrays.
+    """
+    b = queries.dense.shape[0]
     qw = weighted_query(queries, weights)
+    w_kg = jnp.broadcast_to(jnp.asarray(weights.kg, jnp.float32), (b,))
     ids, scores, expanded = jax.vmap(
-        lambda q, kw, en: _search_one(index, q, kw, en, weights.kg, params)
-    )(qw, q_keywords, q_entities)
+        lambda q, kw, en, wk: _search_one(index, q, kw, en, wk, params)
+    )(qw, keywords, entities, w_kg)
     return SearchResult(ids, scores, expanded)
+
+
+# retained name for callers of the private batched entry point
+_search_batch = search_padded
 
 
 def search(
@@ -301,10 +317,13 @@ def search(
 ) -> SearchResult:
     """Batched hybrid search with any path combination (public API)."""
     b = queries.dense.shape[0]
-    if keywords is None:
-        keywords = jnp.full((b, 1), PAD_IDX, jnp.int32)
-    if entities is None:
-        entities = jnp.full((b, 1), PAD_IDX, jnp.int32)
-    return _search_batch(
-        index, queries, weights, jnp.asarray(keywords), jnp.asarray(entities), params
+
+    def as_padded(a):  # fabricate the PAD array only when absent/empty
+        a = None if a is None else jnp.asarray(a, jnp.int32)
+        if a is None or a.shape[1] == 0:
+            return jnp.full((b, 1), PAD_IDX, jnp.int32)
+        return a
+
+    return search_padded(
+        index, queries, weights, as_padded(keywords), as_padded(entities), params
     )

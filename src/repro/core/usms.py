@@ -112,13 +112,37 @@ class PathWeights:
         return cls.make(1.0, 1.0, 1.0, 0.0)
 
 
+def stack_weights(ws) -> "PathWeights":
+    """Stack per-request PathWeights into one batched PathWeights whose
+    leaves are (B,) arrays — heterogeneous fusion weights ride through one
+    executable as traced data (Theorem 1)."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]), *ws
+    )
+
+
+def _expand_weight(w: jax.Array, target_ndim: int) -> jax.Array:
+    """Right-pad a scalar or (B,)-batched weight with singleton axes so it
+    broadcasts against (..., D)-shaped query components."""
+    w = jnp.asarray(w, jnp.float32)
+    return w.reshape(w.shape + (1,) * (target_ndim - w.ndim))
+
+
 def weighted_query(q: FusedVectors, w: PathWeights) -> FusedVectors:
     """Theorem 1: scale query components by path weights so the hybrid score
-    becomes a single inner product in the USMS."""
+    becomes a single inner product in the USMS. Weight leaves may be scalars
+    (one weight vector for the whole batch) or (B,) arrays (per-query
+    weights, as micro-batched serving requires)."""
     return FusedVectors(
-        q.dense * w.dense,
-        SparseVec(q.learned.idx, q.learned.val * w.sparse),
-        SparseVec(q.lexical.idx, q.lexical.val * w.full),
+        q.dense * _expand_weight(w.dense, q.dense.ndim),
+        SparseVec(
+            q.learned.idx,
+            q.learned.val * _expand_weight(w.sparse, q.learned.val.ndim),
+        ),
+        SparseVec(
+            q.lexical.idx,
+            q.lexical.val * _expand_weight(w.full, q.lexical.val.ndim),
+        ),
     )
 
 

@@ -1,0 +1,199 @@
+"""Micro-batching for the hybrid-search serving path.
+
+The paper's throughput story (§5, 1.5x-186.4x) assumes the GPU sees *batches*
+of queries, not one-at-a-time calls. This module turns a stream of
+heterogeneous requests (any ``PathWeights``, optional keywords/entities, any
+``k``) into fixed-shape batches:
+
+  * the batch dimension is padded up to a power of two (``Bucket.batch``) so
+    a handful of executables covers every arrival pattern;
+  * keyword / entity widths are padded to power-of-two bucket caps, so a
+    request with 3 keywords and one with none land in the same executable;
+  * a bounded FIFO queue decouples arrival from execution, flushing when
+    ``flush_size`` requests are pending (throughput mode) or when the oldest
+    request has waited ``flush_deadline_s`` (latency bound).
+
+The batcher is deliberately passive: it never runs a search itself. The
+service (``hybrid_service.HybridSearchService``) drains ready batches and
+owns the executable cache. Deadlines are evaluated on ``submit`` and on
+explicit ``poll`` — a real deployment pumps ``poll`` from a timer thread
+(ROADMAP open item), which keeps this module free of threading.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.usms import FusedVectors, PathWeights
+
+
+class QueueFullError(RuntimeError):
+    """Raised when the bounded request queue rejects a submit (the admission
+    -control hook: callers shed load or retry with backoff)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_queue: int = 1024  # bounded FIFO capacity (admission control)
+    flush_size: int = 32  # flush as soon as this many requests are pending
+    flush_deadline_s: float = 0.01  # ... or the oldest request is this stale
+    max_batch: int = 64  # largest bucket batch (power of two)
+    kw_cap: int = 8  # largest keyword width bucket
+    ent_cap: int = 4  # largest entity width bucket
+
+    def __post_init__(self):
+        if self.flush_size > self.max_batch:
+            raise ValueError("flush_size must be <= max_batch")
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A fixed executable shape: (padded batch, keyword width, entity width).
+
+    Hashable — it is the shape part of the executable-cache key."""
+
+    batch: int
+    kw_width: int
+    ent_width: int
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One user query. ``query`` leaves are unbatched (dense (Dd,), sparse
+    (P,)); ``weights`` leaves are scalars; keywords/entities are 1-D id
+    arrays (or None)."""
+
+    query: FusedVectors
+    weights: PathWeights
+    k: int = 10
+    keywords: Optional[np.ndarray] = None
+    entities: Optional[np.ndarray] = None
+
+
+class PendingResult:
+    """Future-like handle filled when the request's batch executes."""
+
+    __slots__ = ("_ids", "_scores", "_expanded", "_error", "_event", "_service")
+
+    def __init__(self, service=None):
+        self._ids = None
+        self._scores = None
+        self._expanded = 0
+        self._error: Optional[BaseException] = None
+        self._event = threading.Event()
+        self._service = service
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def expanded(self) -> int:
+        """Nodes the beam search expanded for this query (work measure)."""
+        return self._expanded
+
+    def _fulfill(self, ids: np.ndarray, scores: np.ndarray, expanded: int) -> None:
+        self._ids, self._scores, self._expanded = ids, scores, expanded
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def result(self, timeout: float = 600.0) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, scores) for this request, length == request.k. Forces a
+        flush of the owning service if the request is still queued, then
+        waits for delivery — the batch may be mid-execution on another
+        thread (the timer-thread deployment mode)."""
+        if not self.done and self._service is not None:
+            try:
+                self._service.flush()
+            except Exception:
+                # flush re-raises the drain's first batch error, which may
+                # belong to a DIFFERENT request's batch; our own outcome —
+                # result or error — arrives through _fulfill/_fail below
+                pass
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"search request not completed in {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._ids, self._scores
+
+
+@dataclasses.dataclass
+class _Entry:
+    request: SearchRequest
+    pending: PendingResult
+    arrival_s: float
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def bucket_for(entries: list[_Entry], cfg: BatcherConfig) -> Bucket:
+    """Smallest power-of-two bucket covering a batch of requests."""
+    b = min(_next_pow2(len(entries)), cfg.max_batch)
+    kw = max(
+        (len(e.request.keywords) for e in entries if e.request.keywords is not None),
+        default=0,
+    )
+    en = max(
+        (len(e.request.entities) for e in entries if e.request.entities is not None),
+        default=0,
+    )
+    return Bucket(
+        batch=b,
+        kw_width=min(max(_next_pow2(kw), 1), cfg.kw_cap),
+        ent_width=min(max(_next_pow2(en), 1), cfg.ent_cap),
+    )
+
+
+class MicroBatcher:
+    """Bounded FIFO of pending requests with size/deadline flush triggers."""
+
+    def __init__(self, cfg: BatcherConfig):
+        self.cfg = cfg
+        self._queue: deque[_Entry] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def enqueue(
+        self, request: SearchRequest, pending: PendingResult, now: Optional[float] = None
+    ) -> None:
+        if len(self._queue) >= self.cfg.max_queue:
+            raise QueueFullError(
+                f"request queue full ({self.cfg.max_queue}); shed load or retry"
+            )
+        now = time.monotonic() if now is None else now
+        self._queue.append(_Entry(request, pending, now))
+
+    def due(self, now: Optional[float] = None) -> bool:
+        """True when a flush trigger has fired (size or deadline)."""
+        if len(self._queue) >= self.cfg.flush_size:
+            return True
+        if not self._queue:
+            return False
+        now = time.monotonic() if now is None else now
+        return now - self._queue[0].arrival_s >= self.cfg.flush_deadline_s
+
+    def take_ready(
+        self, now: Optional[float] = None, force: bool = False
+    ) -> list[tuple[Bucket, list[_Entry]]]:
+        """Pop batches whose trigger fired (all pending ones if ``force``),
+        in FIFO order, each at most ``max_batch`` requests with its bucket."""
+        out: list[tuple[Bucket, list[_Entry]]] = []
+        while self._queue and (force or self.due(now)):
+            entries = [
+                self._queue.popleft()
+                for _ in range(min(len(self._queue), self.cfg.max_batch))
+            ]
+            out.append((bucket_for(entries, self.cfg), entries))
+        return out

@@ -1,0 +1,410 @@
+"""Batched hybrid-search serving engine with a compiled-executable cache.
+
+``HybridSearchService`` is the online request path the paper's throughput
+claims (§5) presume but the one-shot ``search()`` API does not provide:
+
+  * heterogeneous requests (any ``PathWeights``, optional keywords/entities,
+    any ``k <= params.k``) are micro-batched into fixed shape-buckets by
+    ``serving.batcher`` — batch padded to a power of two, keyword/entity
+    widths padded to bucket caps;
+  * every bucket hits an AOT-compiled executable cached on
+    ``(index shape, bucket shape, SearchParams)``. Path weights enter as
+    (B,) traced arrays per Theorem 1, so one executable serves every weight
+    combination with zero retrace — the whole point of the paper's dynamic
+    fusion framework (§4.2);
+  * streaming updates go through ``insert()``/``mark_deleted()`` behind a
+    copy-on-write snapshot swap: writers build the next immutable index off
+    to the side and publish it atomically, so in-flight searches never
+    observe a half-updated index;
+  * the same service fronts a single-device ``HybridIndex`` and a sharded
+    ``SegmentedIndex`` (via ``make_distributed_search_padded``) — the
+    request path is identical, only the executable factory differs.
+
+Deadlines are evaluated on ``submit``/``poll`` (see batcher docstring); a
+deployment pumps ``poll`` from a timer thread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import SegmentedIndex, make_distributed_search_padded
+from repro.core.index import BuildConfig, HybridIndex
+from repro.core.index import insert as index_insert
+from repro.core.index import mark_deleted as index_mark_deleted
+from repro.core.search import SearchParams, SearchResult, search_padded
+from repro.core.usms import (
+    PAD_IDX,
+    FusedVectors,
+    PathWeights,
+    SparseVec,
+    stack_weights,
+)
+from repro.serving.batcher import (
+    BatcherConfig,
+    Bucket,
+    MicroBatcher,
+    PendingResult,
+    QueueFullError,
+    SearchRequest,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    batcher: BatcherConfig = BatcherConfig()
+    keep_stale_executables: bool = False  # keep executables for old index shapes
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    compiles: int = 0
+    padded_slots: int = 0  # wasted batch slots (padding overhead measure)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Snapshot:
+    """An immutable, fully-materialized index the read path can hold across
+    a whole batch — the copy-on-write unit."""
+
+    index: Union[HybridIndex, SegmentedIndex]
+    version: int
+
+
+class HybridSearchService:
+    """Micro-batched serving front-end over a hybrid index snapshot."""
+
+    def __init__(
+        self,
+        index: Union[HybridIndex, SegmentedIndex],
+        params: SearchParams,
+        config: Optional[ServiceConfig] = None,
+        *,
+        mesh=None,
+        build_cfg: Optional[BuildConfig] = None,
+    ):
+        self.params = params
+        self.config = config or ServiceConfig()
+        self.stats = ServiceStats()
+        self._snap = _Snapshot(index, version=0)
+        self._write_lock = threading.Lock()  # serializes snapshot writers
+        # queue lock: enqueue/take_ready only, never held across a batch run,
+        # so a timer thread pumping poll() can coexist with request threads
+        # without submit() stalling behind a compile or device execution
+        self._queue_lock = threading.Lock()
+        # cache lock: every _exec_cache read/write/prune plus batch stats
+        self._cache_lock = threading.Lock()
+        self._batcher = MicroBatcher(self.config.batcher)
+        self._exec_cache: dict = {}
+        self._segmented = isinstance(index, SegmentedIndex)
+        if self._segmented:
+            if mesh is None:
+                raise ValueError("a SegmentedIndex service requires a mesh")
+            self._dist_fn = make_distributed_search_padded(mesh, params)
+        self._build_cfg = build_cfg
+
+    # -- snapshot management (copy-on-write swap) ---------------------------
+
+    @property
+    def snapshot_version(self) -> int:
+        return self._snap.version
+
+    @property
+    def index(self) -> Union[HybridIndex, SegmentedIndex]:
+        return self._snap.index
+
+    def _publish(self, new_index) -> None:
+        # materialize before publishing so readers never block on (or fail
+        # inside) a half-computed donor buffer
+        jax.block_until_ready(jax.tree.leaves(new_index))
+        self._snap = _Snapshot(new_index, self._snap.version + 1)
+        if not self.config.keep_stale_executables:
+            key_now = self._index_key(new_index)
+            with self._cache_lock:
+                self._exec_cache = {
+                    k: v for k, v in self._exec_cache.items() if k[0] == key_now
+                }
+
+    def insert(
+        self,
+        new_docs: FusedVectors,
+        *,
+        key: Optional[jax.Array] = None,
+        new_doc_entities: Optional[np.ndarray] = None,
+    ) -> int:
+        """Absorb streaming inserts; returns the new snapshot version.
+        In-flight searches keep the snapshot they started with."""
+        if self._segmented:
+            raise NotImplementedError(
+                "streaming insert into a SegmentedIndex is a ROADMAP item "
+                "(route new docs to a growing segment)"
+            )
+        if self._build_cfg is None:
+            raise ValueError("insert requires build_cfg at service construction")
+        with self._write_lock:
+            new_index = index_insert(
+                self._snap.index,
+                new_docs,
+                self._build_cfg,
+                key=key,
+                new_doc_entities=new_doc_entities,
+            )
+            self._publish(new_index)
+            return self._snap.version  # read under the lock: OUR version
+
+    def mark_deleted(self, ids) -> int:
+        """Mark-delete docs; returns the new snapshot version. The index
+        shape is unchanged, so cached executables keep serving."""
+        if self._segmented:
+            raise NotImplementedError(
+                "deletion on a SegmentedIndex needs global->segment id "
+                "routing (ROADMAP item)"
+            )
+        with self._write_lock:
+            new_index = index_mark_deleted(
+                self._snap.index, jnp.asarray(ids, jnp.int32)
+            )
+            self._publish(new_index)
+            return self._snap.version  # read under the lock: OUR version
+
+    # -- executable cache ---------------------------------------------------
+
+    @staticmethod
+    def _index_key(index) -> tuple:
+        if isinstance(index, SegmentedIndex):
+            return ("seg", index.n_segments, int(index.index.semantic_edges.shape[1]))
+        return ("single", index.n)
+
+    @property
+    def executable_cache(self) -> dict:
+        """(index key, Bucket, SearchParams) -> AOT-compiled executable."""
+        return self._exec_cache
+
+    def _get_executable(self, snap: _Snapshot, bucket: Bucket, args):
+        key = (self._index_key(snap.index), bucket, self.params)
+        with self._cache_lock:
+            exe = self._exec_cache.get(key)
+        if exe is not None:
+            return exe
+        # compile outside the lock: a cold bucket must not stall warm-bucket
+        # batches or snapshot publishes behind a multi-second XLA compile
+        if self._segmented:
+            lowered = self._dist_fn.lower(snap.index, *args)
+        else:
+            lowered = search_padded.lower(snap.index, *args, self.params)
+        exe = lowered.compile()
+        with self._cache_lock:
+            winner = self._exec_cache.get(key)
+            if winner is not None:
+                return winner  # another thread compiled the same bucket first
+            # a writer may have swapped the snapshot while we compiled;
+            # don't re-add an executable its prune already evicted
+            if (
+                self.config.keep_stale_executables
+                or key[0] == self._index_key(self._snap.index)
+            ):
+                self._exec_cache[key] = exe
+            self.stats.compiles += 1
+        return exe
+
+    # -- request path -------------------------------------------------------
+
+    def _validate(self, request: SearchRequest) -> None:
+        bcfg = self.config.batcher
+        if request.k > self.params.k:
+            raise ValueError(
+                f"request.k={request.k} exceeds the service cap params.k={self.params.k}"
+            )
+        if request.keywords is not None:
+            if not self.params.use_keywords:
+                raise ValueError("service params have use_keywords=False")
+            if len(request.keywords) > bcfg.kw_cap:
+                raise ValueError(
+                    f"{len(request.keywords)} keywords exceed kw_cap={bcfg.kw_cap}"
+                )
+        if request.entities is not None:
+            if not self.params.use_kg:
+                raise ValueError("service params have use_kg=False")
+            if len(request.entities) > bcfg.ent_cap:
+                raise ValueError(
+                    f"{len(request.entities)} entities exceed ent_cap={bcfg.ent_cap}"
+                )
+
+    def submit(self, request: SearchRequest) -> PendingResult:
+        """Enqueue one request; runs any batch whose flush trigger fired."""
+        self._validate(request)
+        pending = PendingResult(service=self)
+        with self._queue_lock:
+            self._batcher.enqueue(request, pending)
+            self.stats.requests += 1
+        try:
+            self._drain()
+        except Exception:
+            # a failing batch (ours or a sibling's) has already failed its
+            # own waiters; the returned handle is the error channel here —
+            # raising would discard it while the request may still be queued
+            pass
+        return pending
+
+    def poll(self) -> int:
+        """Run deadline-due batches (call from a timer loop); returns the
+        number of batches executed. A failing batch raises here after its
+        waiters have been failed — timer loops should catch and keep
+        pumping; every affected result() re-raises the real error."""
+        return self._drain()
+
+    def flush(self) -> int:
+        """Force-run every pending batch; returns the number executed."""
+        return self._drain(force=True)
+
+    def _drain(self, force: bool = False) -> int:
+        with self._queue_lock:
+            ready = self._batcher.take_ready(force=force)
+        # entries are dequeued: run each batch outside the queue lock so
+        # concurrent submits only wait for the enqueue, not the execution.
+        # Every dequeued batch must resolve its waiters even if an earlier
+        # sibling batch failed, so run them all before re-raising.
+        first_err: Optional[BaseException] = None
+        for bucket, entries in ready:
+            try:
+                self._run_batch(bucket, entries)
+            except Exception as err:  # waiters already failed by _run_batch
+                first_err = first_err or err
+        if first_err is not None:
+            raise first_err
+        return len(ready)
+
+    def _run_batch(self, bucket: Bucket, entries) -> None:
+        try:
+            snap = self._snap  # one snapshot for the whole batch
+            args = self._assemble(bucket, entries)
+            exe = self._get_executable(snap, bucket, args)
+            res = exe(snap.index, *args)
+            ids = np.asarray(res.ids)
+            scores = np.asarray(res.scores)
+            expanded = np.asarray(res.expanded)
+        except Exception as err:
+            # entries are already dequeued: propagate to every waiter so no
+            # result() blocks forever, then surface to the driving thread
+            for e in entries:
+                e.pending._fail(err)
+            raise
+        for i, e in enumerate(entries):
+            e.pending._fulfill(
+                ids[i, : e.request.k], scores[i, : e.request.k], int(expanded[i])
+            )
+        with self._cache_lock:
+            self.stats.batches += 1
+            self.stats.padded_slots += bucket.batch - len(entries)
+
+    def _assemble(self, bucket: Bucket, entries):
+        """Pack requests into the bucket's fixed shapes. Pad rows carry zero
+        weights and PAD ids; their results are discarded on delivery."""
+        m = len(entries)
+        b = bucket.batch
+        queries = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *[e.request.query for e in entries],
+        )
+        if m < b:
+            padn = b - m
+            grow = lambda a, fill: jnp.concatenate(
+                [a, jnp.full((padn,) + a.shape[1:], fill, a.dtype)]
+            )
+            queries = FusedVectors(
+                grow(queries.dense, 0),
+                SparseVec(grow(queries.learned.idx, PAD_IDX), grow(queries.learned.val, 0)),
+                SparseVec(grow(queries.lexical.idx, PAD_IDX), grow(queries.lexical.val, 0)),
+            )
+        zero_w = PathWeights.make(0.0, 0.0, 0.0, 0.0)
+        weights = stack_weights(
+            [e.request.weights for e in entries] + [zero_w] * (b - m)
+        )
+        kw = np.full((b, bucket.kw_width), PAD_IDX, np.int32)
+        en = np.full((b, bucket.ent_width), PAD_IDX, np.int32)
+        for i, e in enumerate(entries):
+            if e.request.keywords is not None and len(e.request.keywords):
+                kws = np.asarray(e.request.keywords, np.int32)
+                kw[i, : len(kws)] = kws
+            if e.request.entities is not None and len(e.request.entities):
+                ens = np.asarray(e.request.entities, np.int32)
+                en[i, : len(ens)] = ens
+        return queries, weights, jnp.asarray(kw), jnp.asarray(en)
+
+    # -- synchronous convenience -------------------------------------------
+
+    def search(
+        self,
+        queries: FusedVectors,
+        weights: Union[PathWeights, Sequence[PathWeights]],
+        *,
+        keywords: Optional[np.ndarray] = None,
+        entities: Optional[np.ndarray] = None,
+        k: Optional[int] = None,
+    ) -> SearchResult:
+        """Submit a whole batch and flush: per-row requests (row i of
+        ``queries`` with weights[i] if a sequence was given), results
+        reassembled into a SearchResult. Mirrors core.search.search but runs
+        through the batched request path. 2-D keyword/entity arrays may be
+        PAD_IDX padded (the core search() convention); pad slots are
+        stripped per row before the requests are formed."""
+
+        def row_ids(arr, i):
+            if arr is None:
+                return None
+            row = np.asarray(arr)[i]
+            row = row[row >= 0]
+            return row if len(row) else None
+
+        b = queries.dense.shape[0]
+        k = self.params.k if k is None else k
+        if isinstance(weights, PathWeights):
+            if np.ndim(weights.dense) >= 1:  # batched (B,)-leaf form
+                get_w = lambda i: jax.tree.map(lambda x: x[i], weights)
+            else:
+                get_w = lambda i: weights
+        else:
+            get_w = lambda i: weights[i]
+        reqs = [
+            SearchRequest(
+                query=queries[i],
+                weights=get_w(i),
+                k=k,
+                keywords=row_ids(keywords, i),
+                entities=row_ids(entities, i),
+            )
+            for i in range(b)
+        ]
+        # validate the whole batch before enqueuing anything: one bad row
+        # must not strand its predecessors as orphaned queue entries
+        for req in reqs:
+            self._validate(req)
+        pendings = []
+        for req in reqs:
+            try:
+                pendings.append(self.submit(req))
+            except QueueFullError:
+                # drain to make room rather than stranding the rows already
+                # queued; force-flush empties the bounded queue entirely
+                self.flush()
+                pendings.append(self.submit(req))
+        try:
+            self.flush()
+        except Exception:
+            pass  # per-row errors surface from each result() below
+        ids = np.stack([p.result()[0] for p in pendings])
+        scores = np.stack([p.result()[1] for p in pendings])
+        return SearchResult(
+            ids=jnp.asarray(ids),
+            scores=jnp.asarray(scores),
+            expanded=jnp.asarray([p.expanded for p in pendings], jnp.int32),
+        )

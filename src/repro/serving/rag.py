@@ -5,7 +5,10 @@ A RAG request carries the query's fused vectors (dense from the embedder,
 sparse from SPLADE/BM25 analogues — here synthetic), optional required
 keywords and entities. The pipeline is:
 
-  1. hybrid search on the (optionally segment-sharded) index;
+  1. hybrid search on the (optionally segment-sharded) index — either a
+     direct ``search()`` call or, when a ``HybridSearchService`` is attached,
+     through the micro-batched serving path so RAG traffic shares executables
+     (and the snapshot-swapped index) with every other search client;
   2. retrieved doc ids -> context token prefixes (a real deployment detok-
      enizes documents; the synthetic corpus maps doc ids to token spans);
   3. batched generation conditioned on [context ; prompt].
@@ -24,6 +27,7 @@ from repro.core.index import HybridIndex
 from repro.core.search import SearchParams, SearchResult, search
 from repro.core.usms import FusedVectors, PathWeights
 from repro.serving.engine import ServingEngine
+from repro.serving.hybrid_service import HybridSearchService
 
 
 @dataclasses.dataclass
@@ -43,11 +47,27 @@ class RagPipeline:
         index: HybridIndex,
         doc_tokens: jax.Array,  # (N_docs, ctx_tokens_per_doc) int32
         cfg: RagConfig,
+        *,
+        service: Optional[HybridSearchService] = None,
     ):
         self.engine = engine
         self.index = index
         self.doc_tokens = doc_tokens
         self.cfg = cfg
+        self.service = service
+        if service is not None:
+            # retrieval runs with the service's SearchParams; refuse a config
+            # that silently diverges from it (k may differ: the service caps
+            # per-request k, cfg.top_k just has to fit under it)
+            if dataclasses.replace(cfg.search, k=service.params.k) != service.params:
+                raise ValueError(
+                    "RagConfig.search and the attached service's SearchParams "
+                    f"disagree: {cfg.search} vs {service.params}"
+                )
+            if cfg.top_k > service.params.k:
+                raise ValueError(
+                    f"top_k={cfg.top_k} exceeds the service cap k={service.params.k}"
+                )
 
     def retrieve(
         self,
@@ -56,6 +76,15 @@ class RagPipeline:
         keywords: Optional[jax.Array] = None,
         entities: Optional[jax.Array] = None,
     ) -> SearchResult:
+        if self.service is not None:
+            # mirror the direct path's semantics: keyword/entity operands are
+            # inert when the params disable those paths, not request errors
+            return self.service.search(
+                queries, self.cfg.weights,
+                keywords=keywords if self.service.params.use_keywords else None,
+                entities=entities if self.service.params.use_kg else None,
+                k=self.cfg.top_k,
+            )
         params = dataclasses.replace(self.cfg.search, k=self.cfg.top_k)
         return search(
             self.index, queries, self.cfg.weights, params,

@@ -1,0 +1,361 @@
+"""HybridSearchService: bucket padding correctness, compiled-executable
+cache behavior, micro-batcher flush semantics, and copy-on-write snapshot
+swaps under interleaved insert/search."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PAD_IDX, PathWeights, stack_weights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.serving.batcher import (
+    BatcherConfig,
+    MicroBatcher,
+    PendingResult,
+    QueueFullError,
+    SearchRequest,
+    bucket_for,
+)
+from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+
+BUILD_CFG = BuildConfig(
+    knn=KnnConfig(k=12, iters=3, node_chunk=512),
+    prune=PruneConfig(degree=12, keyword_degree=4, node_chunk=256),
+    path_refine_iters=0,
+)
+PARAMS = SearchParams(k=8, iters=16, pool_size=48, use_keywords=True)
+
+THREE_WEIGHTS = [
+    PathWeights.make(1.0, 0.0, 0.0),
+    PathWeights.make(0.0, 1.0, 1.0),
+    PathWeights.make(0.5, 0.25, 1.0),
+]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=384, n_queries=16, n_topics=12, d_dense=24,
+                     nnz_sparse=10, nnz_lexical=8, seed=31)
+    )
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_index(corpus.docs[:352], BUILD_CFG)
+
+
+def _service(index, **batcher_kw):
+    kw = dict(flush_size=8, max_batch=8, kw_cap=4, ent_cap=2,
+              flush_deadline_s=60.0)
+    kw.update(batcher_kw)
+    return HybridSearchService(
+        index, PARAMS, ServiceConfig(batcher=BatcherConfig(**kw)),
+        build_cfg=BUILD_CFG,
+    )
+
+
+def test_bucket_padding_matches_direct_search(corpus, index):
+    """A heterogeneous padded batch returns exactly what per-request direct
+    search() returns: padding rows/width never leak into results."""
+    svc = _service(index)
+    reqs = []
+    for i in range(6):  # 6 requests -> padded to the 8-slot bucket
+        kws = None
+        if i % 3 == 0:  # some requests carry required keywords
+            kws = np.asarray(corpus.docs.lexical.idx[i, :2])
+            kws = kws[kws >= 0]
+        reqs.append(SearchRequest(
+            query=corpus.queries[i],
+            weights=THREE_WEIGHTS[i % 3],
+            k=5,
+            keywords=kws if kws is not None and len(kws) else None,
+        ))
+    pendings = [svc.submit(r) for r in reqs]
+    svc.flush()
+    assert svc.stats.padded_slots == 2
+    for i, (r, p) in enumerate(zip(reqs, pendings)):
+        ids, scores = p.result()
+        assert ids.shape == (5,)
+        kw2d = None if r.keywords is None else np.asarray(r.keywords)[None, :]
+        ref = search(index, corpus.queries[i:i + 1], r.weights, PARAMS,
+                     keywords=kw2d)
+        np.testing.assert_array_equal(ids, np.asarray(ref.ids[0, :5]))
+        np.testing.assert_allclose(scores, np.asarray(ref.scores[0, :5]),
+                                   rtol=1e-6)
+
+
+def test_one_executable_per_bucket_across_weights(corpus, index):
+    """≥3 distinct PathWeights combinations through one bucket shape hit ONE
+    compiled executable — weights are traced data (Theorem 1), so changing
+    them never recompiles."""
+    svc = _service(index)
+    for rep in range(3):
+        for w in THREE_WEIGHTS:
+            svc.submit(SearchRequest(query=corpus.queries[rep], weights=w, k=4))
+    svc.flush()
+    assert svc.stats.requests == 9
+    assert len(svc.executable_cache) == 2  # 8-slot bucket + forced 1-slot tail
+    # replay all weight mixes through the now-warm cache: zero new compiles
+    before = svc.stats.compiles
+    for w in THREE_WEIGHTS + [PathWeights.make(0.1, 0.9, 0.4)]:
+        for i in range(8):
+            svc.submit(SearchRequest(query=corpus.queries[i], weights=w, k=4))
+    svc.flush()
+    assert svc.stats.compiles == before
+    assert len(svc.executable_cache) == 2
+
+
+def test_bucket_shapes_get_separate_executables(corpus, index):
+    """Distinct shapes (batch bucket / keyword width) compile separately and
+    are all retained."""
+    svc = _service(index, flush_size=4, max_batch=8)
+    for i in range(4):  # 4-slot bucket, no keywords -> kw width 1
+        svc.submit(SearchRequest(query=corpus.queries[i],
+                                 weights=THREE_WEIGHTS[0], k=4))
+    svc.flush()
+    assert len(svc.executable_cache) == 1
+    kws = np.asarray([3, 5, 7])  # kw width bucket 4
+    for i in range(4):
+        svc.submit(SearchRequest(query=corpus.queries[i],
+                                 weights=THREE_WEIGHTS[1], k=4, keywords=kws))
+    svc.flush()
+    assert len(svc.executable_cache) == 2
+
+
+def test_flush_on_size_and_deadline(corpus, index):
+    svc = _service(index, flush_size=4, max_batch=4, flush_deadline_s=0.05)
+    pend = [svc.submit(SearchRequest(query=corpus.queries[i],
+                                     weights=THREE_WEIGHTS[0], k=3))
+            for i in range(3)]
+    assert not any(p.done for p in pend)  # below flush_size, fresh deadline
+    p4 = svc.submit(SearchRequest(query=corpus.queries[3],
+                                  weights=THREE_WEIGHTS[0], k=3))
+    assert all(p.done for p in pend + [p4])  # size trigger fired
+    # deadline trigger: a lone request (below flush_size) runs via poll()
+    # once its deadline lapses — the deadline is the ONLY trigger that can
+    # fire here, so completion itself proves the semantics; no timing
+    # assertions that could flake on a stalled CI scheduler
+    t0 = time.monotonic()
+    p5 = svc.submit(SearchRequest(query=corpus.queries[4],
+                                  weights=THREE_WEIGHTS[1], k=3))
+    while not p5.done and time.monotonic() - t0 < 10.0:
+        svc.poll()
+        time.sleep(0.005)
+    assert p5.done
+    assert time.monotonic() - t0 >= 0.05  # never ran before the deadline
+
+
+def test_bounded_queue_rejects_overflow(corpus, index):
+    svc = _service(index, max_queue=2, flush_size=8, max_batch=8)
+    svc.submit(SearchRequest(query=corpus.queries[0], weights=THREE_WEIGHTS[0], k=3))
+    svc.submit(SearchRequest(query=corpus.queries[1], weights=THREE_WEIGHTS[0], k=3))
+    with pytest.raises(QueueFullError):
+        svc.submit(SearchRequest(query=corpus.queries[2],
+                                 weights=THREE_WEIGHTS[0], k=3))
+    svc.flush()
+
+
+def test_request_validation(corpus, index):
+    svc = _service(index)
+    with pytest.raises(ValueError):  # k above the service cap
+        svc.submit(SearchRequest(query=corpus.queries[0],
+                                 weights=THREE_WEIGHTS[0], k=PARAMS.k + 1))
+    with pytest.raises(ValueError):  # keyword width above the bucket cap
+        svc.submit(SearchRequest(query=corpus.queries[0],
+                                 weights=THREE_WEIGHTS[0],
+                                 keywords=np.arange(5)))
+    with pytest.raises(ValueError):  # entities require use_kg params
+        svc.submit(SearchRequest(query=corpus.queries[0],
+                                 weights=THREE_WEIGHTS[0],
+                                 entities=np.asarray([1])))
+
+
+def test_snapshot_swap_interleaved_insert_search(corpus, index):
+    """Streaming inserts swap a consistent snapshot: every batch runs against
+    exactly one index version, and results always match a direct search on
+    the snapshot that served them."""
+    svc = _service(index, flush_size=2, max_batch=2)
+    w = PathWeights.make(1.0, 1.0, 1.0)
+    new_docs = corpus.docs[352:384]
+
+    r0 = svc.search(corpus.queries[:2], w, k=5)
+    assert svc.snapshot_version == 0
+
+    version = svc.insert(new_docs)
+    assert version == 1
+    assert svc.index.n == 384
+    # stale executables for the old index shape were dropped
+    assert all(k[0] == ("single", 384) for k in svc.executable_cache)
+
+    r1 = svc.search(corpus.queries[:2], w, k=5)
+    ref = search(svc.index, corpus.queries[:2], w, PARAMS)
+    np.testing.assert_array_equal(np.asarray(r1.ids),
+                                  np.asarray(ref.ids[:, :5]))
+    # old results were served by the old snapshot (n=352): all ids in range
+    assert np.asarray(r0.ids).max() < 352
+
+    # inserted docs are reachable: query with an inserted doc's own vector
+    probe = jax.tree.map(lambda a: a[:1], new_docs)
+    res = svc.search(probe, w, k=5)
+    assert 352 <= int(np.asarray(res.ids)[0, 0]) < 384
+
+
+def test_mark_deleted_swaps_without_recompiling(corpus, index):
+    svc = _service(index, flush_size=2, max_batch=2)
+    w = PathWeights.make(1.0, 0.5, 0.5)
+    r0 = svc.search(corpus.queries[:2], w, k=3)
+    compiles = svc.stats.compiles
+    top = int(np.asarray(r0.ids)[0, 0])
+    svc.mark_deleted(np.asarray([top]))
+    assert svc.snapshot_version == 1
+    r1 = svc.search(corpus.queries[:2], w, k=3)
+    assert top not in np.asarray(r1.ids)[0]
+    assert svc.stats.compiles == compiles  # same shapes, same executables
+
+
+def test_segmented_index_service(corpus):
+    """The same service front-end drives a sharded SegmentedIndex through
+    make_distributed_search_padded (single-device mesh smoke)."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import build_segmented_index, place_segmented_index
+
+    seg = build_segmented_index(corpus.docs[:352], 1, BUILD_CFG)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    seg = place_segmented_index(seg, mesh)
+    svc = HybridSearchService(
+        seg, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(flush_size=4, max_batch=4)),
+        mesh=mesh,
+    )
+    res = svc.search(
+        corpus.queries[:4], THREE_WEIGHTS + [PathWeights.make(1.0, 1.0, 1.0)], k=4
+    )
+    assert res.ids.shape == (4, 4)
+    assert len(svc.executable_cache) == 1
+    with pytest.raises(NotImplementedError):
+        svc.insert(corpus.docs[:1])
+    with pytest.raises(NotImplementedError):
+        svc.mark_deleted(np.asarray([0]))
+
+
+def test_failed_batch_fails_waiters_and_spares_siblings(corpus, index):
+    """A batch that dies mid-execution fails ITS waiters with the real error
+    (no hanging result() calls) while sibling batches from the same drain
+    still run and deliver."""
+    svc = _service(index, flush_size=2, max_batch=2)
+    # stage 3 entries without triggering submit()'s size flush, so flush()
+    # drains a 2-slot batch + a 1-slot batch in one _drain pass
+    pend = []
+    for i in range(3):
+        p = PendingResult(service=svc)
+        svc._batcher.enqueue(
+            SearchRequest(query=corpus.queries[i],
+                          weights=THREE_WEIGHTS[0], k=3), p)
+        pend.append(p)
+    orig = svc._assemble
+    state = {"calls": 0}
+
+    def boom(bucket, entries):
+        state["calls"] += 1
+        if state["calls"] == 1:
+            raise RuntimeError("injected batch failure")
+        return orig(bucket, entries)
+
+    svc._assemble = boom
+    with pytest.raises(RuntimeError, match="injected batch failure"):
+        svc.flush()
+    assert all(p.done for p in pend)  # nobody left hanging
+    with pytest.raises(RuntimeError, match="injected batch failure"):
+        pend[0].result()
+    assert pend[2].result()[0].shape == (3,)  # sibling batch still ran
+
+
+def test_service_search_strips_pad_keywords(corpus, index):
+    """2-D PAD_IDX-padded keyword arrays (the core search() convention) work
+    through the service: pad slots are stripped per row, never counted
+    against kw_cap, and results match the direct path."""
+    svc = _service(index, flush_size=4, max_batch=4)
+    w = PathWeights.make(1.0, 1.0, 1.0)
+    kw2d = np.full((4, 8), PAD_IDX, np.int32)  # wider than kw_cap=4 ...
+    lex = np.asarray(corpus.docs.lexical.idx[:4, :2])
+    kw2d[:, :2] = np.where(lex >= 0, lex, PAD_IDX)  # ... but <=2 real ids/row
+    res = svc.search(corpus.queries[:4], w, keywords=kw2d, k=5)
+    ref = search(index, corpus.queries[:4], w, PARAMS, keywords=kw2d)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids[:, :5]))
+    assert (np.asarray(res.expanded) > 0).all()  # real work measure delivered
+
+
+def test_service_search_accepts_batched_weight_leaves(corpus, index):
+    """service.search mirrors core search() for the batched PathWeights form
+    too: one PathWeights with (B,) leaves is split per row."""
+    svc = _service(index, flush_size=4, max_batch=4)
+    wb = stack_weights(THREE_WEIGHTS + [PathWeights.make(0.2, 0.8, 0.5)])
+    res = svc.search(corpus.queries[:4], wb, k=4)
+    ref = search(index, corpus.queries[:4], wb, PARAMS)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids[:, :4]))
+
+
+def test_concurrent_submit_and_poll(corpus, index):
+    """submit() from worker threads while a timer thread pumps poll():
+    every request is delivered exactly once, none lost or split."""
+    import threading
+
+    svc = _service(index, flush_size=4, max_batch=8, flush_deadline_s=0.001,
+                   max_queue=4096)
+    results = [None] * 48
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            svc.poll()
+            time.sleep(0.001)
+
+    def client(base):
+        for i in range(16):
+            p = svc.submit(SearchRequest(
+                query=corpus.queries[(base + i) % 16],
+                weights=THREE_WEIGHTS[i % 3], k=3))
+            results[base + i] = p
+
+    pumper = threading.Thread(target=pump)
+    pumper.start()
+    workers = [threading.Thread(target=client, args=(b,)) for b in (0, 16, 32)]
+    for t in workers:
+        t.start()
+    for t in workers:
+        t.join()
+    svc.flush()
+    stop.set()
+    pumper.join()
+    assert all(p.done for p in results)
+    assert svc.stats.requests == 48
+    for p in results:
+        assert p.result()[0].shape == (3,)
+
+
+def test_batcher_bucket_shapes():
+    cfg = BatcherConfig(flush_size=8, max_batch=16, kw_cap=8, ent_cap=4)
+    mb = MicroBatcher(cfg)
+    for i in range(5):
+        mb.enqueue(
+            SearchRequest(
+                query=None, weights=None,
+                keywords=np.arange(3) if i == 0 else None,
+            ),
+            PendingResult(),
+            now=float(i),
+        )
+    [(bucket, entries)] = mb.take_ready(force=True)
+    assert len(entries) == 5
+    assert (bucket.batch, bucket.kw_width, bucket.ent_width) == (8, 4, 1)
+    assert len(mb) == 0

@@ -84,3 +84,20 @@ def test_rag_pipeline_end_to_end(engine):
     # retrieval quality: planted relevant docs should appear in the results
     rec = recall_at_k(np.asarray(res.ids), corpus.query_relevant[:, :1])
     assert rec >= 0.5, rec
+
+    # the same pipeline retrieving through the micro-batched serving layer
+    # returns identical docs (padding/bucketing never changes results)
+    from repro.serving.batcher import BatcherConfig
+    from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+
+    service = HybridSearchService(
+        index,
+        dataclasses.replace(rag.cfg.search, k=rag.cfg.top_k),
+        ServiceConfig(batcher=BatcherConfig(flush_size=8, max_batch=8)),
+    )
+    rag_svc = RagPipeline(eng, index, doc_tokens, rag.cfg, service=service)
+    res_svc = rag_svc.retrieve(queries)
+    np.testing.assert_array_equal(
+        np.asarray(res_svc.ids), np.asarray(res.ids[:, : rag.cfg.top_k])
+    )
+    assert service.stats.batches == 1 and len(service.executable_cache) == 1
