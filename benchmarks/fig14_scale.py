@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import default_build, simple_corpus, timed
 from repro.core import build_index

@@ -3,12 +3,9 @@ corpora, hybrid paths at equal weights."""
 
 from __future__ import annotations
 
-import dataclasses
-import time
 
 import numpy as np
 
-import jax
 
 from benchmarks.common import (
     IVFFusion,

@@ -18,8 +18,7 @@ import numpy as np
 
 import jax
 
-from repro.core.usms import PathWeights, weighted_query
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 from tests.helpers import random_fused
 

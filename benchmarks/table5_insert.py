@@ -9,7 +9,7 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import default_build, simple_corpus, timed
+from benchmarks.common import default_build, simple_corpus
 from repro.core import build_index, insert
 from repro.core.search import SearchParams, search
 from repro.core.usms import PathWeights, weighted_query

@@ -11,7 +11,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import BuildConfig, KnnConfig, PruneConfig
 from repro.core.distributed import (

@@ -6,12 +6,10 @@ hundred steps with checkpointing and restart-exact data skip.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
 
-from repro.configs import get_config
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig

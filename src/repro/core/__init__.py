@@ -1,6 +1,7 @@
 """Allan-Poe core: the paper's all-in-one hybrid graph index in JAX."""
 
-from repro.core.index import BuildConfig, HybridIndex, build_index, insert, mark_deleted
+from repro.core.build_pipeline import build_graph, build_index, insert, nn_descent
+from repro.core.index import BuildConfig, HybridIndex, mark_deleted
 from repro.core.knn_graph import KnnConfig, build_knn_graph
 from repro.core.pruning import PruneConfig, rng_ip_prune
 from repro.core.search import SearchParams, SearchResult, search, search_padded
@@ -16,7 +17,9 @@ from repro.core.usms import (
 __all__ = [
     "BuildConfig",
     "HybridIndex",
+    "build_graph",
     "build_index",
+    "nn_descent",
     "insert",
     "mark_deleted",
     "KnnConfig",

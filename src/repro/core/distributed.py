@@ -30,9 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.index import BuildConfig, HybridIndex, build_index
+from repro.core.build_pipeline import GraphArrays, _build_graph_program, build_index
+from repro.core.index import BuildConfig, HybridIndex
+from repro.core.logical_edges import LogicalEdges, build_logical_edges
 from repro.core.search import SearchParams, SearchResult, search_padded
 from repro.core.usms import PAD_IDX, FusedVectors, PathWeights
+from repro.runtime import dispatch
 
 SEGMENT_AXES = ("pod", "data")  # axes that shard segments (present subset used)
 QUERY_AXIS = "model"  # axis that shards the query batch
@@ -142,6 +145,141 @@ def _present_axes(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
     return tuple(a for a in axes if a in mesh.axis_names)
 
 
+def _segment_spec(mesh: Mesh) -> P:
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    return P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+
+
+# ---------------------------------------------------------------------------
+# Segment-parallel construction (paper §4.1 at scale): every device builds
+# its segment's graph with the SAME device-resident program the single-device
+# path uses (core/build_pipeline.py). Graphs never cross segments, so the
+# build has zero collectives and scales linearly with devices.
+# ---------------------------------------------------------------------------
+
+
+_sharded_builder_cache: dict = {}
+
+
+def make_sharded_graph_builder(mesh: Mesh, cfg: BuildConfig):
+    """shard_map wrapper around the fused graph-build program.
+
+    Returns fn(stacked_corpus, seg_key_data) -> GraphArrays with leaves
+    (S, ...). Each device must own exactly one segment (S == product of the
+    segment mesh axes); keys travel as uint32 key data so they shard like
+    ordinary arrays. Builders are cached on (mesh, cfg) so repeated sharded
+    builds (periodic segment rebuilds) reuse the compiled program."""
+    cache_key = (mesh, cfg)
+    cached = _sharded_builder_cache.get(cache_key)
+    if cached is not None:
+        return cached
+    spec = _segment_spec(mesh)
+
+    def local_build(corpus_blk: FusedVectors, key_blk: jax.Array) -> GraphArrays:
+        corpus = jax.tree.map(lambda a: a[0], corpus_blk)
+        key = jax.random.wrap_key_data(key_blk[0])
+        g = _build_graph_program(corpus, key, cfg)
+        return jax.tree.map(lambda a: a[None], g)
+
+    graph_specs = GraphArrays(
+        knn_ids=spec,
+        knn_scores=spec,
+        semantic_edges=spec,
+        keyword_edges=spec,
+        entry_points=spec,
+        self_ip=spec,
+    )
+    builder = jax.jit(
+        _shard_map(
+            local_build,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: spec, _queries_struct()), spec),
+            out_specs=graph_specs,
+        )
+    )
+    _sharded_builder_cache[cache_key] = builder
+    return builder
+
+
+def build_index_sharded(
+    corpus: FusedVectors,
+    n_segments: int,
+    cfg: BuildConfig = BuildConfig(),
+    *,
+    mesh: Mesh,
+    key: Optional[jax.Array] = None,
+    kg_triplets: Optional[np.ndarray] = None,
+    doc_entities: Optional[np.ndarray] = None,
+    n_entities: int = 0,
+) -> SegmentedIndex:
+    """Build every segment's graph IN PARALLEL across the mesh (one
+    shard_map dispatch for all device-side stages), then assemble the
+    SegmentedIndex on the host (logical edges are host-side numpy).
+
+    Per-segment results match ``build_segmented_index`` (which runs the same
+    program sequentially): segment s is built from ``fold_in(key, s)``."""
+    key = key if key is not None else jax.random.key(0)
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    n_mesh_segs = int(np.prod([mesh.shape[a] for a in seg_axes])) if seg_axes else 1
+    if n_segments != n_mesh_segs:
+        raise ValueError(
+            f"n_segments={n_segments} must equal the segment-axes device "
+            f"count {n_mesh_segs} (one segment per device)"
+        )
+    parts, gids = shard_corpus(corpus, n_segments)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *parts)
+    seg_keys = jnp.stack(
+        [
+            jax.random.key_data(jax.random.fold_in(key, s))
+            for s in range(n_segments)
+        ]
+    )
+    sharding = NamedSharding(mesh, _segment_spec(mesh))
+    stacked = jax.tree.map(lambda a: jax.device_put(a, sharding), stacked)
+    seg_keys = jax.device_put(seg_keys, sharding)
+
+    builder = make_sharded_graph_builder(mesh, cfg)
+    dispatch.tick()
+    g = builder(stacked, seg_keys)  # GraphArrays, leaves (S, ...)
+
+    # host-side assembly: logical edges + alive masks per segment
+    per = gids.shape[1]
+    slices = segment_slices(corpus.n, n_segments)
+    logs = []
+    for s in range(n_segments):
+        if kg_triplets is not None and doc_entities is not None and n_entities > 0:
+            lo, hi = slices[s]
+            ents = np.full((per, doc_entities.shape[1]), PAD_IDX, np.int32)
+            ents[: hi - lo] = doc_entities[lo:hi]
+            logs.append(
+                build_logical_edges(
+                    kg_triplets,
+                    ents,
+                    n_entities,
+                    l_cap=cfg.logical_cap,
+                    m_cap=cfg.entity_doc_cap,
+                )
+            )
+        else:
+            logs.append(LogicalEdges.empty(per))
+    stack_log = lambda get: jnp.stack([jnp.asarray(get(l)) for l in logs], axis=0)
+    alive = jnp.asarray(gids >= 0)
+
+    index = HybridIndex(
+        corpus=stacked,
+        semantic_edges=g.semantic_edges,
+        keyword_edges=g.keyword_edges,
+        logical_edges=stack_log(lambda l: l.edges),
+        doc_entities=stack_log(lambda l: l.doc_entities),
+        entity_to_docs=stack_log(lambda l: l.entity_to_docs),
+        entity_adj=stack_log(lambda l: l.entity_adj),
+        entry_points=g.entry_points,
+        alive=alive,
+        self_ip=g.self_ip,
+    )
+    return SegmentedIndex(index=index, global_ids=jnp.asarray(gids))
+
+
 def make_distributed_search_padded(
     mesh: Mesh,
     params: SearchParams,
@@ -158,7 +296,7 @@ def make_distributed_search_padded(
     """
     seg_axes = _present_axes(mesh, SEGMENT_AXES)
     q_axes = _present_axes(mesh, (QUERY_AXIS,))
-    seg_spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+    seg_spec = _segment_spec(mesh)
     q_spec = P(q_axes[0]) if q_axes else P()
     NEG_FILL = jnp.float32(-1e30)
 
@@ -290,9 +428,7 @@ def place_segmented_index(
     seg_index: SegmentedIndex, mesh: Mesh
 ) -> SegmentedIndex:
     """Device_put the segmented index with segments over ("pod", "data")."""
-    seg_axes = _present_axes(mesh, SEGMENT_AXES)
-    spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
-    sharding = NamedSharding(mesh, spec)
+    sharding = NamedSharding(mesh, _segment_spec(mesh))
     return jax.tree.map(
         lambda a: jax.device_put(a, sharding) if hasattr(a, "shape") else a, seg_index
     )
@@ -310,8 +446,7 @@ def make_distributed_descent_round(mesh: Mesh, cfg):
     the construction path — the build scales linearly with devices."""
     from repro.core.knn_graph import _descent_round_chunk
 
-    seg_axes = _present_axes(mesh, SEGMENT_AXES)
-    spec = P(seg_axes if len(seg_axes) > 1 else (seg_axes[0] if seg_axes else None))
+    spec = _segment_spec(mesh)
 
     def local_round(corpus, nbr_ids, scores, rand_ids):
         corpus = jax.tree.map(lambda a: a[0], corpus)

@@ -1,34 +1,29 @@
-"""The all-in-one hybrid index: structure, build pipeline, and updates
-(paper §3, §4.1, Algorithm 1).
+"""The all-in-one hybrid index: structure and in-place updates
+(paper §3, §4.1).
 
 Isolated heterogeneous edge storage (paper §3.1): semantic edges, keyword
 edges and logical edges live in separate fixed-width tables so any path
 combination can be toggled at query time with zero reconstruction — the
 "pluggable" property the paper's flexibility principle requires.
+
+Layering: this module holds only the index *structure* (plus the shape-
+preserving ``mark_deleted``). Construction — ``build_index``, ``insert``,
+the device-resident fused programs — lives in ``core/build_pipeline.py``,
+which imports this module and ``core/search.py`` from above; nothing here
+imports the search or build layers, which is what keeps the old
+index <-> search import cycle broken.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import knn_graph, pruning
-from repro.core.knn_graph import KnnConfig, build_knn_graph
-from repro.core.logical_edges import LogicalEdges, build_logical_edges
-from repro.core.pruning import PruneConfig, rng_ip_prune, self_scores
-from repro.core.usms import (
-    PAD_IDX,
-    FusedVectors,
-    PathWeights,
-    SparseVec,
-    weighted_query,
-)
-from repro.kernels import ops
+from repro.core.knn_graph import KnnConfig
+from repro.core.pruning import PruneConfig
+from repro.core.usms import FusedVectors
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,209 +89,7 @@ class HybridIndex:
         }
 
 
-def build_index(
-    corpus: FusedVectors,
-    cfg: BuildConfig = BuildConfig(),
-    *,
-    key: Optional[jax.Array] = None,
-    kg_triplets: Optional[np.ndarray] = None,
-    doc_entities: Optional[np.ndarray] = None,
-    n_entities: int = 0,
-) -> HybridIndex:
-    """Full construction pipeline (Algorithm 1)."""
-    key = key if key is not None else jax.random.key(0)
-    n = corpus.n
-
-    # Step 1: NN-Descent k-NN graph over fused vectors
-    knn_ids, knn_scores = build_knn_graph(corpus, cfg.knn, key)
-
-    # Step 1b: per-path refinement — short NN-Descent under each single-path
-    # weighting, warm-started from the fused graph, to feed the d/2
-    # single-path slots (paper Step 2 "Pareto frontier" tail)
-    path_ids = None
-    if cfg.path_refine_iters > 0:
-        d = cfg.prune.degree
-        pk = max((d - 2 * max(d // 4, 1)) // 3 + 1, 2)
-        pcfg = dataclasses.replace(
-            cfg.knn, iters=cfg.path_refine_iters, k=max(pk, 12)
-        )
-        per_path = []
-        for i, w in enumerate(
-            (
-                PathWeights.make(1.0, 0.0, 0.0),
-                PathWeights.make(0.0, 1.0, 0.0),
-                PathWeights.make(0.0, 0.0, 1.0),
-            )
-        ):
-            pids, _ = build_knn_graph(
-                corpus,
-                pcfg,
-                jax.random.fold_in(key, i + 1),
-                queries=weighted_query(corpus, w),
-                init_ids=knn_ids,
-            )
-            per_path.append(pids[:, :pk])
-        path_ids = jnp.stack(per_path, axis=1)  # (N, 3, pk)
-
-    # Steps 2-3: RNG-IP joint pruning + keyword recycling
-    sem, kw = rng_ip_prune(corpus, knn_ids, knn_scores, cfg.prune, path_ids=path_ids)
-
-    # Step 4: logical edges
-    if kg_triplets is not None and doc_entities is not None and n_entities > 0:
-        log = build_logical_edges(
-            kg_triplets,
-            doc_entities,
-            n_entities,
-            l_cap=cfg.logical_cap,
-            m_cap=cfg.entity_doc_cap,
-        )
-    else:
-        log = LogicalEdges.empty(n)
-
-    # entry points: largest vector norms (paper §4.2.1). Because weights are
-    # dynamic, we take the union of the top-norm nodes under the fused metric
-    # AND under each single path, so entry quality holds for any weights.
-    sip = self_scores(corpus, use_kernel=cfg.prune.use_kernel)
-    n_entry = min(cfg.n_entry, n)
-    per = max(n_entry // 4, 1)
-    entry_parts = [jax.lax.top_k(sip, per)[1]]
-    for w in (
-        PathWeights.make(1.0, 0.0, 0.0),
-        PathWeights.make(0.0, 1.0, 0.0),
-        PathWeights.make(0.0, 0.0, 1.0),
-    ):
-        qw = weighted_query(corpus, w)
-        cands = jax.tree.map(lambda a: a[:, None], qw)
-        norms = ops.hybrid_scores(qw, cands, use_kernel=cfg.prune.use_kernel)[:, 0]
-        entry_parts.append(jax.lax.top_k(norms, per)[1])
-    cat = jnp.concatenate(entry_parts).astype(jnp.int32)
-    entries = pruning.unique_take(
-        cat, jnp.zeros(cat.shape, jnp.float32), n_entry
-    )
-    # backfill duplicates with the next-best fused-norm nodes
-    fill = jax.lax.top_k(sip, n_entry)[1].astype(jnp.int32)
-    entries = jnp.where(entries >= 0, entries, fill)
-
-    return HybridIndex(
-        corpus=corpus,
-        semantic_edges=sem,
-        keyword_edges=kw,
-        logical_edges=jnp.asarray(log.edges),
-        doc_entities=jnp.asarray(log.doc_entities),
-        entity_to_docs=jnp.asarray(log.entity_to_docs),
-        entity_adj=jnp.asarray(log.entity_adj),
-        entry_points=entries.astype(jnp.int32),
-        alive=jnp.ones((n,), bool),
-        self_ip=sip,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Updates (paper §4.1 "Updates of the Hybrid Index")
-# ---------------------------------------------------------------------------
-
-
 def mark_deleted(index: HybridIndex, ids: jax.Array) -> HybridIndex:
-    """Mark-deletion: nodes stay traversable, filtered from results."""
+    """Mark-deletion: nodes stay traversable, filtered from results
+    (paper §4.1 "Updates of the Hybrid Index")."""
     return dataclasses.replace(index, alive=index.alive.at[ids].set(False))
-
-
-def insert(
-    index: HybridIndex,
-    new_docs: FusedVectors,
-    cfg: BuildConfig,
-    *,
-    key: Optional[jax.Array] = None,
-    new_doc_entities: Optional[np.ndarray] = None,
-) -> HybridIndex:
-    """Insert new nodes: their k-NN = merge of (a) search of the existing
-    index and (b) NN-Descent among the new nodes; then the standard pruning.
-    Existing nodes acquire reverse edges to the new nodes (slot-replacement of
-    their weakest edge) so the new region stays reachable."""
-    from repro.core.search import SearchParams, search  # local import (cycle)
-
-    key = key if key is not None else jax.random.key(1)
-    n_old = index.n
-    n_new = new_docs.n
-    k = cfg.knn.k
-
-    # (a) k-NN from the existing index via its own search
-    params = SearchParams(k=k, iters=max(24, 2 * k), use_kernel=cfg.knn.use_kernel)
-    from repro.core.usms import PathWeights
-
-    res = search(index, new_docs, PathWeights.three_path(), params)
-    old_ids, old_scores = res.ids, res.scores
-
-    # (b) NN-Descent among the new nodes only
-    new_ids_local, new_scores = build_knn_graph(new_docs, cfg.knn, key)
-    new_ids_global = jnp.where(
-        new_ids_local >= 0, new_ids_local + n_old, PAD_IDX
-    )
-
-    # merged candidate lists for the new nodes
-    merged_ids, merged_scores = knn_graph._merge_topk(
-        old_ids, old_scores, new_ids_global, new_scores, k
-    )
-
-    # concatenated corpus
-    corpus = jax.tree.map(
-        lambda a, b: jnp.concatenate([a, b], axis=0), index.corpus, new_docs
-    )
-
-    # prune the new nodes against the merged candidates
-    prune_cfg = cfg.prune
-    cself = jnp.concatenate(
-        [index.self_ip, self_scores(new_docs, use_kernel=prune_cfg.use_kernel)]
-    )
-    rev = knn_graph.reverse_neighbors(merged_ids, max(prune_cfg.degree // 4, 1))
-    # reverse ids here index into new-node rows; they are new-node ids
-    rev = jnp.where(rev >= 0, rev + n_old, PAD_IDX)
-    sem_new, kw_new, _ = pruning._prune_chunk(
-        corpus,
-        new_docs,
-        jnp.arange(n_new, dtype=jnp.int32) + n_old,
-        merged_ids,
-        merged_scores,
-        cself,
-        rev,
-        None,
-        prune_cfg,
-    )
-
-    # back-link: replace the weakest semantic edge of each strong old neighbor
-    sem_old = index.semantic_edges
-    top_back = min(4, k)
-    for j in range(top_back):
-        tgt = merged_ids[:, j]  # (n_new,) target node (old or new)
-        ok = (tgt >= 0) & (tgt < n_old)
-        tgt_safe = jnp.clip(tgt, 0, n_old - 1)
-        new_id = jnp.arange(n_new, dtype=jnp.int32) + n_old
-        # weakest slot = last column (edge lists are priority-ordered)
-        col = sem_old.shape[1] - 1 - (j % 2)
-        sem_old = sem_old.at[tgt_safe, col].set(
-            jnp.where(ok, new_id, sem_old[tgt_safe, col]), mode="drop"
-        )
-
-    pad_rows = lambda a, rows: jnp.concatenate(
-        [a, jnp.full((rows,) + a.shape[1:], PAD_IDX, a.dtype)], axis=0
-    )
-    if new_doc_entities is not None:
-        new_ents = jnp.asarray(new_doc_entities, jnp.int32)
-        if new_ents.shape[1] != index.doc_entities.shape[1]:
-            raise ValueError("entity width mismatch")
-        doc_entities = jnp.concatenate([index.doc_entities, new_ents], 0)
-    else:
-        doc_entities = pad_rows(index.doc_entities, n_new)
-
-    return HybridIndex(
-        corpus=corpus,
-        semantic_edges=jnp.concatenate([sem_old, sem_new], 0),
-        keyword_edges=jnp.concatenate([index.keyword_edges, kw_new], 0),
-        logical_edges=pad_rows(index.logical_edges, n_new),
-        doc_entities=doc_entities,
-        entity_to_docs=index.entity_to_docs,
-        entity_adj=index.entity_adj,
-        entry_points=index.entry_points,
-        alive=jnp.concatenate([index.alive, jnp.ones((n_new,), bool)]),
-        self_ip=cself,
-    )

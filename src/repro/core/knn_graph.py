@@ -13,13 +13,13 @@ over nodes so 1M-document segments stream through device memory.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.usms import PAD_IDX, FusedVectors
 from repro.kernels import ops
+from repro.runtime import dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +59,6 @@ def _merge_topk(
     return out_ids, top
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def _descent_round_chunk(
     corpus: FusedVectors,
     nbr_ids: jax.Array,  # (N, K) current graph (global)
@@ -88,6 +87,13 @@ def _descent_round_chunk(
         chunk_queries, corpus, cand, use_kernel=cfg.use_kernel
     )
     return _merge_topk(chunk_nbrs, chunk_scores, cand, scores, k)
+
+
+# jitted wrapper for the legacy host-driven chunk loop; the device-resident
+# pipeline (core/build_pipeline.py) traces the plain body inside lax.map
+_descent_round_chunk_jit = jax.jit(
+    _descent_round_chunk, static_argnames=("cfg",)
+)
 
 
 def _init_graph(n: int, k: int, key: jax.Array) -> jax.Array:
@@ -124,6 +130,7 @@ def build_knn_graph(
             extra = _init_graph(n, k - nbr_ids.shape[1], k0)
             nbr_ids = jnp.concatenate([nbr_ids, extra], axis=1)
     node_ids = jnp.arange(n, dtype=jnp.int32)
+    dispatch.tick()
     scores = ops.hybrid_scores_vs_ids(
         queries, corpus, nbr_ids, use_kernel=cfg.use_kernel
     )
@@ -139,7 +146,8 @@ def build_knn_graph(
         new_scores = []
         for s in range(0, n, cfg.node_chunk):
             e = min(s + cfg.node_chunk, n)
-            ids_c, sc_c = _descent_round_chunk(
+            dispatch.tick()
+            ids_c, sc_c = _descent_round_chunk_jit(
                 corpus,
                 nbr_ids,
                 queries[slice(s, e)],
@@ -173,6 +181,26 @@ def reverse_neighbors(nbr_ids: jax.Array, cap: int) -> jax.Array:
     rev = jnp.full((n, cap), PAD_IDX, jnp.int32)
     rev = rev.at[jnp.clip(dst_sorted, 0, n - 1), pos].set(src_sorted, mode="drop")
     return rev
+
+
+def new_node_reverse(
+    merged_ids: jax.Array, n_old: int, cap: int
+) -> jax.Array:
+    """Reverse adjacency among the NEW nodes of an insert batch.
+
+    merged_ids: (n_new, K) candidate lists holding GLOBAL ids — old-corpus
+    ids are < n_old, new-node ids are >= n_old. Only new-node targets have
+    rows in the returned (n_new, cap) table; old-corpus targets are dropped
+    (their back-links are handled by the insert back-link pass). Returned
+    source ids are GLOBAL (>= n_old).
+
+    This exists because feeding global ids straight into
+    ``reverse_neighbors`` treats old-corpus ids < n_new as new-node-local
+    row indices, scattering old-corpus targets into wrong rows.
+    """
+    local = jnp.where(merged_ids >= n_old, merged_ids - n_old, PAD_IDX)
+    rev = reverse_neighbors(local, cap)
+    return jnp.where(rev >= 0, rev + n_old, PAD_IDX)
 
 
 def knn_recall(nbr_ids: jax.Array, truth_ids: jax.Array) -> float:

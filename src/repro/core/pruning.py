@@ -29,14 +29,14 @@ sequential keep-scan is a lax.scan; everything is fixed-shape and chunked.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.knn_graph import reverse_neighbors
 from repro.core.usms import PAD_IDX, FusedVectors, PathWeights, weighted_query
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref  # noqa: F401  (ref re-exported for tests)
+from repro.runtime import dispatch
 
 NEG = -1e30
 
@@ -188,7 +188,6 @@ _prune_nodes_batch = jax.vmap(
 )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def _prune_chunk(
     corpus: FusedVectors,
     chunk_queries: FusedVectors,
@@ -201,12 +200,16 @@ def _prune_chunk(
     cfg: PruneConfig,
 ):
     c, k = cand_ids.shape
-    # pairwise scores among candidates: for each node, K queries x K cands
+    # pairwise scores among candidates: gather each node's K rows ONCE and
+    # compute the (K, K) tile in place (kernels/pairwise_tile.py) — the old
+    # path re-gathered the rows K times via a (C*K, K) id matrix
     cand_rows = corpus.take(cand_ids.reshape(-1))  # (C*K, ...)
-    pair_ids = jnp.repeat(cand_ids, k, axis=0).reshape(c * k, k)
-    pair = ops.hybrid_scores_vs_ids(
-        cand_rows, corpus, pair_ids, use_kernel=cfg.use_kernel
-    ).reshape(c, k, k)
+    tile = jax.tree.map(
+        lambda a: a.reshape((c, k) + a.shape[1:]), cand_rows
+    )
+    pair = ops.pairwise_tile_scores(tile, use_kernel=cfg.use_kernel)
+    # invalid candidates j score -inf, matching hybrid_scores_vs_ids masking
+    pair = jnp.where(cand_ids[:, None, :] >= 0, pair, -jnp.inf)
     cand_self = jnp.where(
         cand_ids >= 0, corpus_self[jnp.clip(cand_ids, 0, corpus.n - 1)], NEG
     )
@@ -246,6 +249,11 @@ def _prune_chunk(
     )
 
 
+# jitted wrapper for the legacy host-driven chunk loop; the device-resident
+# pipeline (core/build_pipeline.py) traces the plain body inside lax.map
+_prune_chunk_jit = jax.jit(_prune_chunk, static_argnames=("cfg",))
+
+
 def self_scores(corpus: FusedVectors, use_kernel: bool = False) -> jax.Array:
     """IP(v, v) — fused self-similarity (squared fused norm)."""
     cands = jax.tree.map(lambda a: a[:, None], corpus)
@@ -263,12 +271,14 @@ def rng_ip_prune(
     """Full pruning pass. Returns (semantic_edges (N, d), keyword_edges (N, dk))."""
     n = corpus.n
     rev = reverse_neighbors(knn_ids, max(cfg.degree // 4, 1))
+    dispatch.tick()
     cself = self_scores(corpus, use_kernel=cfg.use_kernel)
     node_ids = jnp.arange(n, dtype=jnp.int32)
     sems, kws = [], []
     for s in range(0, n, cfg.node_chunk):
         e = min(s + cfg.node_chunk, n)
-        sem, kw, _ = _prune_chunk(
+        dispatch.tick()
+        sem, kw, _ = _prune_chunk_jit(
             corpus,
             corpus[slice(s, e)],
             node_ids[s:e],

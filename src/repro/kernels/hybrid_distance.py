@@ -27,7 +27,6 @@ kernel weight-free and therefore reusable for any path combination.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

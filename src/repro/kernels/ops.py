@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
 from repro.kernels import ref
 from repro.kernels.hybrid_distance import DEFAULT_C_TILE, hybrid_distance_pallas
+from repro.kernels.pairwise_tile import pairwise_tile_pallas
+from repro.runtime import dispatch
 
 
 def _on_cpu() -> bool:
@@ -102,6 +104,59 @@ def hybrid_scores_vs_ids(
     return jnp.where(ids >= 0, scores, -jnp.inf)
 
 
+def pairwise_tile_scores(
+    tile: FusedVectors,  # (C, K, ...) gathered candidate rows
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """All-pairs hybrid scores within each node's candidate tile -> (C, K, K).
+
+    out[c, i, j] = score(tile[c, i], tile[c, j]). Rows are gathered once by
+    the caller (no per-pair re-gather); invalid-candidate masking stays with
+    the caller, which holds the id list.
+    """
+    if not use_kernel:
+        return ref.pairwise_tile_ref(tile)
+    if interpret is None:
+        interpret = _on_cpu()
+    return pairwise_tile_pallas(
+        tile.dense,
+        tile.learned.idx,
+        tile.learned.val,
+        tile.lexical.idx,
+        tile.lexical.val,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _pairwise_scores_mapped(
+    queries: FusedVectors, corpus: FusedVectors, chunk: int
+) -> jax.Array:
+    """In-trace corpus-chunked brute force: lax.map over corpus blocks, so
+    ground-truth / rerank scoring is one dispatch regardless of corpus size
+    while peak memory stays bounded by one (Nq, chunk) block."""
+    n = corpus.dense.shape[0]
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        corpus = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]
+            ),
+            corpus,
+        )
+    blocks = jax.tree.map(
+        lambda a: a.reshape((-1, chunk) + a.shape[1:]), corpus
+    )
+    outs = jax.lax.map(
+        lambda blk: ref.pairwise_hybrid_scores_ref(queries, blk), blocks
+    )  # (n_blocks, Nq, chunk)
+    out = jnp.moveaxis(outs, 0, 1).reshape(queries.dense.shape[0], -1)
+    return out[:, :n]
+
+
 def pairwise_scores_chunked(
     queries: FusedVectors,
     corpus: FusedVectors,
@@ -110,14 +165,11 @@ def pairwise_scores_chunked(
 ) -> jax.Array:
     """Brute-force (Nq, Ncorpus) hybrid scores, chunked over the corpus.
 
-    Oracle path (jnp); used for ground truth and exact rerank.
+    Oracle path (jnp); used for ground truth and exact rerank. The chunk
+    loop runs in-trace (lax.map), so this is a single dispatch.
     """
-    n = corpus.dense.shape[0]
-    outs = []
-    fn = jax.jit(ref.pairwise_hybrid_scores_ref)
-    for s in range(0, n, chunk):
-        outs.append(fn(queries, corpus[slice(s, min(s + chunk, n))]))
-    return jnp.concatenate(outs, axis=1)
+    dispatch.tick()
+    return _pairwise_scores_mapped(queries, corpus, chunk)
 
 
 def topk_hybrid(

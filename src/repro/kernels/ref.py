@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.usms import FusedVectors, SparseVec
+from repro.core.usms import FusedVectors
 
 
 def sparse_ip_ref(
@@ -44,6 +44,37 @@ def hybrid_scores_ref(q: FusedVectors, cands: FusedVectors) -> jax.Array:
     )
     sp = sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
     fp = sparse_ip_ref(q.lexical.idx, q.lexical.val, cands.lexical.idx, cands.lexical.val)
+    return dense + sp + fp
+
+
+def pairwise_tile_ref(tile: FusedVectors) -> jax.Array:
+    """All-pairs hybrid scores within each candidate tile (jnp oracle).
+
+    tile: (C, K, ...) gathered candidate rows -> (C, K, K) float32 with
+    out[c, i, j] = score(tile[c, i], tile[c, j]). Shares the ELL padding
+    contract (PAD slots carry val 0); no per-id validity masking here.
+    """
+    dense = jnp.einsum(
+        "cid,cjd->cij",
+        tile.dense.astype(jnp.float32),
+        tile.dense.astype(jnp.float32),
+    )
+
+    def sp_tile(idx, val):
+        # (C, K, P) x itself -> (C, K, K)
+        m = (idx[:, :, None, :, None] == idx[:, None, :, None, :]) & (
+            idx[:, :, None, :, None] >= 0
+        )
+        c = jnp.where(
+            m,
+            val[:, :, None, :, None].astype(jnp.float32)
+            * val[:, None, :, None, :].astype(jnp.float32),
+            0.0,
+        )
+        return c.sum(axis=(-1, -2))
+
+    sp = sp_tile(tile.learned.idx, tile.learned.val)
+    fp = sp_tile(tile.lexical.idx, tile.lexical.val)
     return dense + sp + fp
 
 

@@ -30,9 +30,9 @@ from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
 from repro.launch.mesh import make_production_mesh, mesh_dp_size, mesh_model_size
 from repro.models import transformer as tfm
 from repro.models.config import SHAPES, ModelConfig
-from repro.models.layers import DATA, MODEL, POD, ShardCtx, dtype_of
+from repro.models.layers import DATA, POD, ShardCtx, dtype_of
 from repro.training import optimizer as opt
-from repro.training.train_loop import TrainConfig, _accumulate_grads
+from repro.training.train_loop import _accumulate_grads
 
 RETRIEVAL_ARCH = "allanpoe-retrieval"  # extra dry-run target: the paper's index
 
@@ -156,7 +156,6 @@ def build_retrieval_program(mesh, overrides: dict | None = None):
     from repro.core.distributed import (
         SegmentedIndex,
         make_distributed_search,
-        _queries_struct,
     )
     from repro.core.index import HybridIndex
     from repro.core.search import SearchParams

@@ -210,7 +210,6 @@ def _accumulate(comps: dict[str, Computation], entry: str) -> dict:
     """DFS with loop multiplicities (memoized per (comp))."""
     totals = {"bytes": 0, "bytes_fused": 0, "dot_flops": 0,
               "coll": defaultdict(int), "coll_counts": defaultdict(int)}
-    from functools import lru_cache
 
     import sys
     sys.setrecursionlimit(10000)

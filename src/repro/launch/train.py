@@ -13,13 +13,10 @@ deterministic data skip, straggler monitoring.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import transformer as tfm

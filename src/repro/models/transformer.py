@@ -14,8 +14,6 @@ Heterogeneous patterns become uniform "super-blocks":
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

@@ -1,0 +1,63 @@
+"""Host->device dispatch accounting for the build path.
+
+A "dispatch" here is one invocation of a jitted executable from Python at an
+instrumented call site — the unit the device-resident build pipeline
+collapses (a Python chunk loop issues one dispatch per chunk per round; the
+fused pipeline issues one for the whole build). Eager jnp ops between jitted
+calls dispatch op-by-op and are NOT counted, so legacy-path numbers are a
+*lower bound* and the pipeline/legacy ratio reported in BENCH_build.json is
+conservative.
+
+Usage:
+    with dispatch.track() as t:
+        build_index(...)
+    t.count  # dispatches issued inside the block
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_lock = threading.Lock()
+_count = 0
+
+
+def tick(n: int = 1) -> None:
+    """Record ``n`` jitted-executable launches (called at instrumented sites)."""
+    global _count
+    with _lock:
+        _count += n
+
+
+def count() -> int:
+    return _count
+
+
+def reset() -> None:
+    global _count
+    with _lock:
+        _count = 0
+
+
+class _Tracker:
+    def __init__(self, start: int):
+        self._start = start
+        self._stop: int | None = None
+
+    def freeze(self, stop: int) -> None:
+        self._stop = stop
+
+    @property
+    def count(self) -> int:
+        return (count() if self._stop is None else self._stop) - self._start
+
+
+@contextlib.contextmanager
+def track():
+    """Context manager counting dispatches issued inside the block."""
+    t = _Tracker(count())
+    try:
+        yield t
+    finally:
+        t.freeze(count())

@@ -17,7 +17,6 @@ from typing import Callable, Optional
 
 import numpy as np
 
-import jax
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,7 @@ shardings applied to params and cache."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distributed import SegmentedIndex, make_distributed_search_padded
+from repro.core.build_pipeline import insert as index_insert
 from repro.core.index import BuildConfig, HybridIndex
-from repro.core.index import insert as index_insert
 from repro.core.index import mark_deleted as index_mark_deleted
 from repro.core.search import SearchParams, SearchResult, search_padded
 from repro.core.usms import (

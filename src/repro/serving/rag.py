@@ -21,7 +21,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.index import HybridIndex
 from repro.core.search import SearchParams, SearchResult, search

@@ -9,7 +9,7 @@ moments alone would exceed per-device HBM.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

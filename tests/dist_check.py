@@ -7,11 +7,9 @@ default single CPU device):
 """
 
 import os
-import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import dataclasses
 
 import numpy as np
 

@@ -1,0 +1,170 @@
+"""Device-resident build pipeline: equivalence with the legacy host-driven
+path, dispatch-count collapse, insert regression (reverse-neighbor bug)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BuildConfig,
+    KnnConfig,
+    PruneConfig,
+    build_index,
+    insert,
+    nn_descent,
+)
+from repro.core.knn_graph import build_knn_graph, knn_recall, new_node_reverse
+from repro.core.search import SearchParams, search
+from repro.core.usms import PAD_IDX, PathWeights, weighted_query
+from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
+from repro.kernels import ops
+from repro.runtime import dispatch
+
+
+def small_corpus(n=512, seed=0):
+    return make_corpus(
+        CorpusConfig(
+            n_docs=n, n_queries=16, n_topics=16, d_dense=32,
+            nnz_sparse=16, nnz_lexical=8, seed=seed,
+        )
+    )
+
+
+CFG = BuildConfig(
+    knn=KnnConfig(k=16, iters=4, node_chunk=256),
+    prune=PruneConfig(degree=12, keyword_degree=6, node_chunk=128),
+    path_refine_iters=2,
+)
+
+
+def _row_overlap(a: np.ndarray, b: np.ndarray) -> float:
+    """Mean per-row Jaccard overlap of valid ids (empty == empty counts 1)."""
+
+    def jac(r1, r2):
+        s1, s2 = set(r1[r1 >= 0].tolist()), set(r2[r2 >= 0].tolist())
+        return len(s1 & s2) / len(s1 | s2) if (s1 | s2) else 1.0
+
+    return float(np.mean([jac(r1, r2) for r1, r2 in zip(a, b)]))
+
+
+def test_nn_descent_matches_legacy():
+    """The in-trace descent program reproduces the legacy chunk loop for the
+    same (cfg, key): identical key chain, row-wise identical math."""
+    corpus = small_corpus(n=300)  # not a multiple of node_chunk (padding path)
+    cfg = KnnConfig(k=12, iters=3, node_chunk=128)
+    key = jax.random.key(5)
+    ids_new, sc_new = nn_descent(corpus.docs, cfg, key)
+    ids_old, sc_old = build_knn_graph(corpus.docs, cfg, key)
+    assert ids_new.shape == ids_old.shape
+    assert _row_overlap(np.asarray(ids_new), np.asarray(ids_old)) > 0.98
+    np.testing.assert_allclose(
+        np.sort(np.asarray(sc_new), axis=1),
+        np.sort(np.asarray(sc_old), axis=1),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_pipeline_build_matches_legacy_build():
+    corpus = small_corpus()
+    key = jax.random.key(0)
+    with dispatch.track() as t_new:
+        new = build_index(corpus.docs, CFG, key=key, pipeline=True)
+    with dispatch.track() as t_old:
+        old = build_index(corpus.docs, CFG, key=key, pipeline=False)
+
+    # structural bit-compatibility: same shapes, same PAD contract
+    for name in ("semantic_edges", "keyword_edges", "entry_points", "alive"):
+        assert getattr(new, name).shape == getattr(old, name).shape, name
+        assert getattr(new, name).dtype == getattr(old, name).dtype, name
+    sem_new = np.asarray(new.semantic_edges)
+    sem_old = np.asarray(old.semantic_edges)
+    assert ((sem_new >= -1) & (sem_new < corpus.docs.n)).all()
+    assert _row_overlap(sem_new, sem_old) > 0.9
+    assert _row_overlap(np.asarray(new.keyword_edges), np.asarray(old.keyword_edges)) > 0.9
+    np.testing.assert_allclose(
+        np.asarray(new.self_ip), np.asarray(old.self_ip), rtol=1e-4
+    )
+
+    # the whole device-side build is >= 2x fewer dispatches (in fact, one)
+    assert t_new.count * 2 <= t_old.count, (t_new.count, t_old.count)
+
+    # retrieval quality within tolerance of the legacy path
+    w = PathWeights.three_path()
+    qw = weighted_query(corpus.queries, w)
+    truth = np.asarray(jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1])
+    params = SearchParams(k=10, iters=32, pool_size=64)
+    rec_new = recall_at_k(np.asarray(search(new, corpus.queries, w, params).ids), truth)
+    rec_old = recall_at_k(np.asarray(search(old, corpus.queries, w, params).ids), truth)
+    assert rec_new > rec_old - 0.03, (rec_new, rec_old)
+
+
+def test_pipeline_knn_quality():
+    corpus = small_corpus(n=256, seed=2)
+    cfg = KnnConfig(k=16, iters=5, node_chunk=256)
+    ids, _ = nn_descent(corpus.docs, cfg, jax.random.key(0))
+    n = corpus.docs.n
+    full = ops.pairwise_scores_chunked(corpus.docs, corpus.docs)
+    full = full.at[jnp.arange(n), jnp.arange(n)].set(-jnp.inf)
+    _, truth = jax.lax.top_k(full, 16)
+    rec = knn_recall(ids, truth)
+    assert rec > 0.80, f"pipeline NN-Descent recall too low: {rec}"
+
+
+# ---------------------------------------------------------------------------
+# insert through the pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_new_node_reverse_regression():
+    """Reverse edges of an insert batch: global candidate ids must not be
+    misread as new-node rows. Old-corpus ids (< n_old) appear in the lists
+    but must never produce reverse entries; new-node targets get exactly
+    the sources that list them."""
+    n_old = 100
+    # 3 new nodes (global ids 100, 101, 102); lists hold mixed global ids
+    merged = jnp.asarray(
+        [
+            [5, 101, 102, PAD_IDX],   # node 100 -> old 5, new 101, new 102
+            [102, 7, PAD_IDX, PAD_IDX],  # node 101 -> new 102, old 7
+            [0, 1, 2, PAD_IDX],       # node 102 -> old nodes only
+        ],
+        jnp.int32,
+    )
+    rev = np.asarray(new_node_reverse(merged, n_old, cap=4))
+    as_set = lambda r: set(r[r >= 0].tolist())
+    assert as_set(rev[0]) == set()            # nobody lists node 100
+    assert as_set(rev[1]) == {100}            # node 100 lists 101
+    assert as_set(rev[2]) == {100, 101}       # nodes 100 and 101 list 102
+    # every returned source id is a NEW-node global id
+    assert (rev[rev >= 0] >= n_old).all()
+
+
+def test_insert_pipeline_invariants_and_quality():
+    corpus = small_corpus()
+    n = corpus.docs.n
+    n_keep = n - 64
+    base = build_index(corpus.docs[slice(0, n_keep)], CFG)
+    with dispatch.track() as t:
+        upd = insert(base, corpus.docs[slice(n_keep, n)], CFG)
+    assert t.count <= 8, t.count  # search + descent(2) + fused insert program
+    assert upd.n == n
+    sem = np.asarray(upd.semantic_edges)
+    assert sem.shape == (n, CFG.prune.degree)
+    for u in range(n_keep, n):
+        row = sem[u][sem[u] >= 0]
+        assert len(set(row.tolist())) == len(row)
+        assert u not in row.tolist()
+        assert (row < n).all()
+    # inserted region is searchable
+    w = PathWeights.three_path()
+    qw = weighted_query(corpus.queries, w)
+    truth = np.asarray(jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1])
+    params = SearchParams(k=10, iters=40, pool_size=64)
+    rec = recall_at_k(np.asarray(search(upd, corpus.queries, w, params).ids), truth)
+    full = build_index(corpus.docs, CFG)
+    rec_full = recall_at_k(np.asarray(search(full, corpus.queries, w, params).ids), truth)
+    assert rec > rec_full - 0.1, (rec, rec_full)

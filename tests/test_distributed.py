@@ -32,6 +32,25 @@ def test_distributed_search_matches_reference():
     assert "DIST_CHECK_PASS" in proc.stdout
 
 
+@pytest.mark.slow
+def test_sharded_build_matches_sequential():
+    """build_index_sharded on a 2-host CPU mesh produces the same per-segment
+    graphs (and search recall) as the sequential build_segmented_index."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{REPO}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "build_check.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "BUILD_CHECK_PASS" in proc.stdout
+
+
 def test_shard_corpus_roundtrip():
     from repro.core.distributed import shard_corpus
     from repro.data.corpus import CorpusConfig, make_corpus

@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the graph primitives the build pipeline is
+made of: reverse_neighbors, dedup_mask, unique_take."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.knn_graph import dedup_mask, reverse_neighbors
+from repro.core.pruning import unique_take
+from repro.core.usms import PAD_IDX
+
+
+@st.composite
+def neighbor_tables(draw):
+    n = draw(st.integers(2, 24))
+    k = draw(st.integers(1, 6))
+    rows = draw(
+        st.lists(
+            st.lists(
+                st.one_of(st.integers(0, 1_000_000), st.just(PAD_IDX)),
+                min_size=k,
+                max_size=k,
+            ),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    arr = np.asarray(rows, np.int32)
+    arr = np.where((arr >= 0) & (arr < n), arr, PAD_IDX)
+    # contract: neighbor lists hold unique ids per row (true by construction
+    # in every caller — _merge_topk dedups); mask repeats to PAD
+    for r in range(n):
+        seen: set = set()
+        for c in range(k):
+            if arr[r, c] in seen:
+                arr[r, c] = PAD_IDX
+            else:
+                seen.add(int(arr[r, c]))
+    return arr
+
+
+@settings(max_examples=60, deadline=None)
+@given(neighbor_tables(), st.integers(1, 8))
+def test_reverse_neighbors_properties(nbrs, cap):
+    n = nbrs.shape[0]
+    rev = np.asarray(reverse_neighbors(jnp.asarray(nbrs), cap))
+    assert rev.shape == (n, cap)  # cap respected by construction
+    for v in range(n):
+        listed = rev[v][rev[v] >= 0]
+        # soundness: every listed u really has v in N(u)
+        for u in listed:
+            assert v in nbrs[u], (u, v)
+        # completeness up to the cap: if fewer sources than cap exist, all
+        # of them are listed (no duplicates, nothing dropped)
+        true_sources = {u for u in range(n) if v in nbrs[u]}
+        assert len(set(listed.tolist())) == len(listed)
+        if len(true_sources) <= cap:
+            assert set(listed.tolist()) == true_sources
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.one_of(st.integers(0, 12), st.just(PAD_IDX)), min_size=1, max_size=40
+    )
+)
+def test_dedup_mask_properties(ids):
+    arr = np.asarray(ids, np.int32)
+    mask = np.asarray(dedup_mask(jnp.asarray(arr)))
+    # PAD entries are never kept
+    assert not mask[arr == PAD_IDX].any()
+    # exactly one keeper per distinct non-pad id
+    for v in set(arr[arr >= 0].tolist()):
+        assert mask[arr == v].sum() == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.one_of(st.integers(0, 12), st.just(PAD_IDX)), min_size=1, max_size=24
+    ),
+    st.integers(1, 12),
+)
+def test_unique_take_properties(ids, width):
+    arr = np.asarray(ids, np.int32)
+    out = np.asarray(
+        unique_take(jnp.asarray(arr), jnp.zeros(len(arr), jnp.float32), width)
+    )
+    assert out.shape == (width,)
+    valid = out[out >= 0]
+    # unique, and PAD never selected
+    assert len(set(valid.tolist())) == len(valid)
+    # stable first-occurrence order: output order matches first appearance
+    distinct = []
+    for v in arr:
+        if v >= 0 and v not in distinct:
+            distinct.append(int(v))
+    assert valid.tolist() == distinct[: len(valid)]
+    # pads only at the tail, and only when ids ran out
+    n_valid = len(valid)
+    assert (out[n_valid:] == PAD_IDX).all()
+    assert n_valid == min(len(distinct), width)

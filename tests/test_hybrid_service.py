@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams, search
@@ -22,7 +21,6 @@ from repro.serving.batcher import (
     PendingResult,
     QueueFullError,
     SearchRequest,
-    bucket_for,
 )
 from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
 

@@ -3,16 +3,15 @@
 from __future__ import annotations
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import knn_graph, pruning
-from repro.core.index import BuildConfig, build_index
+from repro.core import BuildConfig, build_index
 from repro.core.knn_graph import KnnConfig, build_knn_graph, dedup_mask, reverse_neighbors
 from repro.core.pruning import PruneConfig, detour_counts, ip_keep_scan, unique_take
-from repro.core.usms import PAD_IDX, PathWeights
+from repro.core.usms import PAD_IDX
 from repro.data.corpus import CorpusConfig, make_corpus
 from repro.kernels import ops
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import usms
 from repro.core.usms import PAD_IDX, FusedVectors, PathWeights, SparseVec
 from repro.kernels import ops, ref
-from tests.helpers import random_fused, random_sparse
+from tests.helpers import random_fused
 
 
 SHAPES = [

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index, insert, mark_deleted
 from repro.core.search import SearchParams, search
-from repro.core.usms import PAD_IDX, PathWeights, weighted_query
+from repro.core.usms import PathWeights, weighted_query
 from repro.data.corpus import CorpusConfig, make_corpus, ndcg_at_k, recall_at_k
 from repro.kernels import ops
 

@@ -11,11 +11,10 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams, search
-from repro.core.usms import PAD_IDX, PathWeights, weighted_query
+from repro.core.usms import PathWeights, weighted_query
 from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
 from repro.kernels import ops
 

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams
-from repro.core.usms import PathWeights
 from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
 from repro.models import transformer as tfm
 from repro.serving.engine import ServeConfig, ServingEngine
