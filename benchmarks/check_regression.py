@@ -1,0 +1,123 @@
+"""CI perf-regression gate over the build bench (results/BENCH_build.json).
+
+Compares the fresh bench against the committed baseline
+(results/BENCH_build_baseline.json) and fails the job when the
+device-resident pipeline regresses:
+
+  * ``pipeline.dispatches`` may NEVER rise — the single-dispatch build is a
+    structural contract (DESIGN.md §3), not a timing, so this check is
+    exact and noise-free;
+  * ``speedup_warm`` (legacy warm build / pipeline warm build) may not drop
+    more than ``--tol`` (default 20%) below the baseline — a ratio of two
+    same-machine timings, so it tolerates absolute CPU-speed differences
+    between runners, and the wide tolerance absorbs CI scheduler noise.
+
+Wall-clock fields are reported but never gated: absolute seconds are
+machine-dependent and would flake.
+
+The baseline must have been produced by the SAME bench config the gate run
+used (the kernel-smoke job runs ``python -m benchmarks.run --quick --only
+table2``); a config mismatch fails with instructions rather than comparing
+apples to oranges.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        [--bench results/BENCH_build.json] \
+        [--baseline results/BENCH_build_baseline.json] [--tol 0.20]
+
+Exit code 0 = pass, 1 = regression (or unusable inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REGEN_HINT = (
+    "regenerate with: PYTHONPATH=src python -m benchmarks.run --quick "
+    "--only table2 && cp results/BENCH_build.json "
+    "results/BENCH_build_baseline.json"
+)
+
+
+def check(bench: dict, baseline: dict, tol: float) -> list[str]:
+    """Returns the list of failure messages (empty = gate passes)."""
+    failures: list[str] = []
+
+    cfg_b, cfg_base = bench.get("config", {}), baseline.get("config", {})
+    mismatched = {
+        k: (cfg_base.get(k), cfg_b.get(k))
+        for k in set(cfg_base) | set(cfg_b)
+        if cfg_base.get(k) != cfg_b.get(k)
+    }
+    if mismatched:
+        return [
+            f"bench config does not match the baseline ({mismatched}); "
+            f"the comparison would be meaningless — {REGEN_HINT}"
+        ]
+
+    disp = bench["pipeline"]["dispatches"]
+    disp_base = baseline["pipeline"]["dispatches"]
+    if disp > disp_base:
+        failures.append(
+            f"pipeline.dispatches rose {disp_base} -> {disp}: the fused "
+            "build program is issuing extra host->device round trips "
+            "(single-dispatch contract, DESIGN.md §3)"
+        )
+
+    speedup = bench["speedup_warm"]
+    speedup_base = baseline["speedup_warm"]
+    floor = speedup_base * (1.0 - tol)
+    if speedup < floor:
+        failures.append(
+            f"speedup_warm dropped {speedup_base:.3f} -> {speedup:.3f} "
+            f"(> {tol:.0%} below baseline; floor {floor:.3f})"
+        )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="results/BENCH_build.json")
+    ap.add_argument("--baseline", default="results/BENCH_build_baseline.json")
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.20,
+        help="allowed fractional speedup_warm drop vs baseline (CPU noise)",
+    )
+    args = ap.parse_args()
+
+    bench_path = pathlib.Path(args.bench)
+    base_path = pathlib.Path(args.baseline)
+    if not bench_path.exists():
+        print(f"FAIL: {bench_path} missing — run the build bench first")
+        return 1
+    if not base_path.exists():
+        print(f"FAIL: {base_path} missing — {REGEN_HINT}")
+        return 1
+    bench = json.loads(bench_path.read_text())
+    baseline = json.loads(base_path.read_text())
+
+    print(
+        f"bench:    dispatches={bench['pipeline']['dispatches']} "
+        f"speedup_warm={bench['speedup_warm']:.3f} "
+        f"warm_s={bench['pipeline']['build_s_warm']:.2f}"
+    )
+    print(
+        f"baseline: dispatches={baseline['pipeline']['dispatches']} "
+        f"speedup_warm={baseline['speedup_warm']:.3f} "
+        f"warm_s={baseline['pipeline']['build_s_warm']:.2f}"
+    )
+
+    failures = check(bench, baseline, args.tol)
+    for f in failures:
+        print(f"FAIL: {f}")
+    if not failures:
+        print(f"PASS: no build perf regression (tol={args.tol:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

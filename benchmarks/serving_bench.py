@@ -8,13 +8,23 @@ is weight-heterogeneous and still hits ONE cached executable) and measures
 per-request submit->result latency and wall-clock QPS after a warmup flush
 that absorbs compilation.
 
+``--streaming`` adds the grow-segment router bench: insert QPS and search
+latency (p50/p99) measured WHILE a writer thread streams insert batches
+through ``SegmentRouter`` — the mixed read/write serving scenario. Results
+land in ``results/BENCH_serving.json`` (the ``--dry-run`` CI path emits the
+same file, so the perf trajectory is tracked per commit as a workflow
+artifact).
+
     PYTHONPATH=src python benchmarks/serving_bench.py [--quick] [--dry-run]
+                                                      [--streaming]
 """
 
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
+import threading
 import time
 
 if __package__ in (None, ""):  # script mode: python benchmarks/serving_bench.py
@@ -22,6 +32,8 @@ if __package__ in (None, ""):  # script mode: python benchmarks/serving_bench.py
     sys.path[:0] = [str(_root), str(_root / "src")]
 
 import numpy as np
+
+import jax
 
 from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams
@@ -66,6 +78,22 @@ def _drive(service, queries, n_requests, rng, k):
     return wall, lat_ms
 
 
+def _update_bench_json(section: str, payload: dict, out_dir: str = "results") -> None:
+    """Merge one section into results/BENCH_serving.json (steady-state and
+    streaming runs each own a section, so either can run alone)."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(exist_ok=True)
+    path = out / "BENCH_serving.json"
+    data: dict = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except ValueError:
+            data = {}
+    data[section] = payload
+    path.write_text(json.dumps(data, indent=2) + "\n")
+
+
 def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
     rows = []
     if dry_run:
@@ -87,6 +115,14 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
     )
     params = SearchParams(k=10, iters=32, pool_size=64)
 
+    steady = {
+        "config": {
+            "n_docs": n_docs,
+            "n_requests": n_requests,
+            "backend": jax.default_backend(),
+        },
+        "buckets": {},
+    }
     for bucket in (8, 32):
         service = HybridSearchService(
             index,
@@ -102,6 +138,11 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
         _drive(service, corpus.queries, bucket, np.random.default_rng(0), params.k)
         wall, lat_ms = _drive(service, corpus.queries, n_requests, rng, params.k)
         qps = n_requests / wall
+        steady["buckets"][str(bucket)] = {
+            "qps": qps,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+        }
         rows.append(
             (
                 f"serving.qps_bucket{bucket}",
@@ -112,6 +153,7 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
                 f"weight_mixes={len(WEIGHT_MIXES)}",
             )
         )
+    _update_bench_json("steady", steady)
 
     # per-mix latency at the larger bucket: one homogeneous stream per path
     # combination, all through the SAME service (and executable)
@@ -142,6 +184,117 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
     return rows
 
 
+def run_streaming(
+    n_docs: int = 1024,
+    insert_batches: int = 8,
+    insert_batch: int = 16,
+    n_requests: int = 128,
+    dry_run: bool = False,
+):
+    """Mixed read/write serving: a writer thread streams insert batches
+    through the grow-segment router while the closed-loop client measures
+    search latency. Reports insert docs/s, search QPS + p50/p99, and
+    whether the sealed executables survived every insert (the cache-key
+    invariant of the grow-segment scheme)."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import (
+        build_segmented_index,
+        place_segmented_index,
+    )
+    from repro.serving.segment_router import RouterConfig, SegmentRouter
+
+    if dry_run:
+        n_docs, insert_batches, insert_batch, n_requests = 256, 3, 8, 24
+    total = n_docs + insert_batches * insert_batch
+    corpus = make_corpus(
+        CorpusConfig(
+            n_docs=total, n_queries=64, n_topics=max(n_docs // 64, 8),
+            d_dense=64, nnz_sparse=16, nnz_lexical=8, seed=11,
+        )
+    )
+    cfg = BuildConfig(
+        knn=KnnConfig(k=16, iters=3, node_chunk=min(n_docs, 2048)),
+        prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=512),
+        path_refine_iters=0,
+    )
+    seg = build_segmented_index(corpus.docs[:n_docs], 1, cfg)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    seg = place_segmented_index(seg, mesh)
+    params = SearchParams(k=10, iters=32, pool_size=64)
+    service = HybridSearchService(
+        seg,
+        params,
+        ServiceConfig(
+            batcher=BatcherConfig(
+                flush_size=8, max_batch=8, flush_deadline_s=0.01
+            ),
+            pump_interval_s=0.005,
+        ),
+        mesh=mesh,
+    )
+    SegmentRouter(service, cfg, RouterConfig(seal_threshold=10**9))
+
+    # warmup: first insert (grow-segment birth) + one bucket of searches, so
+    # the steady measurement sees warm sealed executables
+    service.insert(corpus.docs[n_docs:n_docs + insert_batch])
+    _drive(service, corpus.queries, 8, np.random.default_rng(0), params.k)
+    sealed_keys = set(service.executable_cache)
+
+    insert_s: list[float] = []
+
+    def writer():
+        for b in range(1, insert_batches):
+            lo = n_docs + b * insert_batch
+            t0 = time.perf_counter()
+            service.insert(corpus.docs[lo:lo + insert_batch])
+            insert_s.append(time.perf_counter() - t0)
+
+    thread = threading.Thread(target=writer)
+    thread.start()
+    wall, lat_ms = _drive(
+        service, corpus.queries, n_requests, np.random.default_rng(3), params.k
+    )
+    thread.join()
+    service.stop_pump()
+
+    sealed_stable = sealed_keys <= set(service.executable_cache)
+    docs_inserted = (insert_batches - 1) * insert_batch
+    insert_docs_per_s = docs_inserted / max(sum(insert_s), 1e-9)
+    qps = n_requests / wall
+    p50 = float(np.percentile(lat_ms, 50))
+    p99 = float(np.percentile(lat_ms, 99))
+    _update_bench_json(
+        "streaming",
+        {
+            "config": {
+                "n_docs": n_docs,
+                "insert_batches": insert_batches,
+                "insert_batch": insert_batch,
+                "n_requests": n_requests,
+                "backend": jax.default_backend(),
+            },
+            "insert_docs_per_s": insert_docs_per_s,
+            "search_qps": qps,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "sealed_cache_stable": bool(sealed_stable),
+            "grow_docs_final": int(service._snap.grow.n)
+            if service._snap.grow is not None
+            else 0,
+        },
+    )
+    return [
+        (
+            "serving.streaming",
+            wall * 1e6 / n_requests,
+            f"qps={qps:.0f};p50_ms={p50:.1f};p99_ms={p99:.1f};"
+            f"insert_docs_per_s={insert_docs_per_s:.0f};"
+            f"sealed_cache_stable={sealed_stable}",
+        )
+    ]
+
+
 def main() -> None:
     import argparse
 
@@ -150,12 +303,28 @@ def main() -> None:
     ap.add_argument(
         "--dry-run", action="store_true", help="tiny smoke run (CI entry-point check)"
     )
+    ap.add_argument(
+        "--streaming",
+        action="store_true",
+        help="grow-segment router bench: insert QPS + p99 under concurrent inserts",
+    )
     args = ap.parse_args()
     kw = {}
     if args.quick:
         kw = dict(n_docs=1024, n_requests=64)
     print("name,us_per_call,derived")
-    for r in run(dry_run=args.dry_run, **kw):
+    rows = run(dry_run=args.dry_run, **kw)
+    # the dry-run CI path always includes a tiny streaming pass, so
+    # BENCH_serving.json tracks both sections on every commit; --quick gets
+    # a reduced-but-meaningful config (dry-run scale is smoke, not signal)
+    if args.streaming or args.dry_run:
+        stream_kw = {}
+        if args.quick and not args.dry_run:
+            stream_kw = dict(
+                n_docs=512, insert_batches=4, insert_batch=16, n_requests=64
+            )
+        rows += run_streaming(dry_run=args.dry_run, **stream_kw)
+    for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]}")
 
 

@@ -579,19 +579,34 @@ def insert(
     *,
     key: Optional[jax.Array] = None,
     new_doc_entities: Optional[np.ndarray] = None,
+    search_params: Optional[SearchParams] = None,
 ) -> HybridIndex:
     """Insert new nodes: their k-NN = merge of (a) search of the existing
     index and (b) device-resident NN-Descent among the new nodes; then the
     standard pruning, all through the same pipeline stages as build_graph.
     Existing nodes acquire reverse edges to the new nodes (slot-replacement
-    of their weakest edge) so the new region stays reachable."""
+    of their weakest edge) so the new region stays reachable.
+
+    ``search_params`` bounds the step-(a) probe (the serving-layer grow
+    segment trades probe breadth for insert latency); ``k`` and the edge
+    paths are forced to the build's values so the candidate merge widths
+    stay fixed regardless of the caller's serving params."""
     key = key if key is not None else jax.random.key(1)
     n_old = index.n
     n_new = new_docs.n
     k = cfg.knn.k
 
     # (a) k-NN from the existing index via its own search
-    params = SearchParams(k=k, iters=max(24, 2 * k), use_kernel=cfg.knn.use_kernel)
+    if search_params is None:
+        params = SearchParams(k=k, iters=max(24, 2 * k), use_kernel=cfg.knn.use_kernel)
+    else:
+        params = dataclasses.replace(
+            search_params, k=k, use_keywords=False, use_kg=False,
+            use_kernel=cfg.knn.use_kernel,
+            # forcing k up must drag the pool along, or top_k(pool, k)
+            # dies at trace time with an opaque XLA error
+            pool_size=max(search_params.pool_size, 2 * k),
+        )
     dispatch.tick()
     res = search(index, new_docs, PathWeights.three_path(), params)
 

@@ -79,8 +79,13 @@ class SegmentedIndex:
 
 
 def segment_slices(n: int, n_segments: int) -> list[tuple[int, int]]:
+    """Contiguous per-segment (lo, hi) slices; trailing segments may be
+    EMPTY (lo == hi) when n < n_segments * ceil(n/n_segments) — e.g. after
+    a compaction shrank the corpus below the segment layout."""
     per = -(-n // n_segments)  # ceil
-    return [(s * per, min((s + 1) * per, n)) for s in range(n_segments)]
+    return [
+        (min(s * per, n), min((s + 1) * per, n)) for s in range(n_segments)
+    ]
 
 
 def shard_corpus(
@@ -143,6 +148,138 @@ def build_segmented_index(
 
 def _present_axes(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
     return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def mesh_segment_count(mesh: Mesh) -> int:
+    """Number of devices on the segment axes — the S every sharded build and
+    the one-segment-per-device search contract require."""
+    seg_axes = _present_axes(mesh, SEGMENT_AXES)
+    return int(np.prod([mesh.shape[a] for a in seg_axes])) if seg_axes else 1
+
+
+# ---------------------------------------------------------------------------
+# Global-id routing (serving-layer grow-segment scheme): deletion and
+# compaction need to resolve original doc ids back to (segment, local row).
+# ---------------------------------------------------------------------------
+
+
+def resolve_global_ids(
+    seg_index: SegmentedIndex, ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side routing: global doc id -> (segment, local row).
+
+    Ids not present in ``global_ids`` (never indexed here, or compacted away)
+    resolve to (-1, -1). Compaction leaves gaps in the id space, so the
+    lookup is a searchsorted over the sorted valid ids, not an arange."""
+    gids = np.asarray(seg_index.global_ids)
+    per = gids.shape[1]
+    flat = gids.reshape(-1)
+    valid_pos = np.flatnonzero(flat >= 0)
+    ids = np.atleast_1d(np.asarray(ids, np.int64))
+    if valid_pos.size == 0:
+        none = np.full(ids.shape, -1, np.int32)
+        return none, none.copy()
+    order = np.argsort(flat[valid_pos], kind="stable")
+    sorted_g = flat[valid_pos][order]
+    pos = valid_pos[order]
+    j = np.clip(np.searchsorted(sorted_g, ids), 0, sorted_g.size - 1)
+    found = (sorted_g[j] == ids) & (ids >= 0)
+    p = np.where(found, pos[j], -1)
+    seg = np.where(found, p // per, -1).astype(np.int32)
+    loc = np.where(found, p % per, -1).astype(np.int32)
+    return seg, loc
+
+
+def mark_deleted_segmented(
+    seg_index: SegmentedIndex,
+    global_ids: np.ndarray,
+    *,
+    resolved: Optional[tuple[np.ndarray, np.ndarray]] = None,
+) -> SegmentedIndex:
+    """Tombstone docs by GLOBAL id: resolve to (segment, local row) and clear
+    the per-segment alive mask. Shape-preserving, so cached search
+    executables for this index keep serving. Unresolved ids are ignored.
+    Pass ``resolved=(seg, loc)`` when the caller already routed the ids —
+    skips a second full global_ids materialization + sort."""
+    seg, loc = (
+        resolved if resolved is not None
+        else resolve_global_ids(seg_index, global_ids)
+    )
+    alive = seg_index.index.alive
+    n_seg = alive.shape[0]
+    seg_j = jnp.asarray(np.where(seg >= 0, seg, n_seg), jnp.int32)
+    loc_j = jnp.asarray(np.where(loc >= 0, loc, 0), jnp.int32)
+    alive = alive.at[seg_j, loc_j].set(False, mode="drop")
+    return SegmentedIndex(
+        index=dataclasses.replace(seg_index.index, alive=alive),
+        global_ids=seg_index.global_ids,
+    )
+
+
+def alive_docs(
+    seg_index: SegmentedIndex,
+) -> tuple[FusedVectors, np.ndarray, np.ndarray]:
+    """Gather the live (non-pad, non-tombstoned) docs of every segment on
+    the host. Returns (corpus rows, their global ids, their doc-entity
+    rows) — the compaction input. The entity rows are all-PAD width-1 for
+    an index built without a knowledge graph."""
+    gids = np.asarray(seg_index.global_ids).reshape(-1)
+    alive = np.asarray(seg_index.index.alive).reshape(-1)
+    rows = np.flatnonzero((gids >= 0) & alive)
+    corpus = jax.tree.map(
+        lambda a: jnp.asarray(
+            np.asarray(a).reshape((-1,) + a.shape[2:])[rows]
+        ),
+        seg_index.index.corpus,
+    )
+    ents = np.asarray(seg_index.index.doc_entities)
+    ents = ents.reshape((-1, ents.shape[-1]))[rows]
+    return corpus, gids[rows].astype(np.int32), ents
+
+
+def compact_segmented_index(
+    corpus: FusedVectors,
+    global_ids: np.ndarray,
+    n_segments: int,
+    cfg: BuildConfig = BuildConfig(),
+    *,
+    mesh: Optional[Mesh] = None,
+    key: Optional[jax.Array] = None,
+    kg_triplets: Optional[np.ndarray] = None,
+    doc_entities: Optional[np.ndarray] = None,
+    n_entities: int = 0,
+) -> SegmentedIndex:
+    """Rebuild a corpus of surviving docs into a fresh S-segment sealed
+    index, PRESERVING the caller's global ids (positions change, identities
+    don't — results keep referring to the original doc ids). Pass the
+    knowledge graph (triplets + per-row doc entities) to rebuild the
+    logical edges too — without it a KG-bearing index would lose its
+    entity paths on compaction.
+
+    Uses the parallel ``build_index_sharded`` when the mesh's segment-axis
+    device count matches ``n_segments`` (the one-segment-per-device
+    contract), else the sequential ``build_segmented_index``."""
+    global_ids = np.asarray(global_ids, np.int32)
+    if corpus.n == 0:
+        raise ValueError("cannot compact an empty corpus (all docs deleted)")
+    if global_ids.shape[0] != corpus.n:
+        raise ValueError("global_ids must map every corpus row")
+    kg_kwargs = dict(
+        kg_triplets=kg_triplets, doc_entities=doc_entities,
+        n_entities=n_entities,
+    )
+    if mesh is not None and mesh_segment_count(mesh) == n_segments:
+        seg = build_index_sharded(
+            corpus, n_segments, cfg, mesh=mesh, key=key, **kg_kwargs
+        )
+    else:
+        seg = build_segmented_index(corpus, n_segments, cfg, key=key, **kg_kwargs)
+    # the build assigned positional ids; remap to the surviving originals
+    per = seg.global_ids.shape[1]
+    new_g = np.full((n_segments, per), PAD_IDX, np.int32)
+    for s, (lo, hi) in enumerate(segment_slices(corpus.n, n_segments)):
+        new_g[s, : hi - lo] = global_ids[lo:hi]
+    return SegmentedIndex(index=seg.index, global_ids=jnp.asarray(new_g))
 
 
 def _segment_spec(mesh: Mesh) -> P:
@@ -219,8 +356,7 @@ def build_index_sharded(
     Per-segment results match ``build_segmented_index`` (which runs the same
     program sequentially): segment s is built from ``fold_in(key, s)``."""
     key = key if key is not None else jax.random.key(0)
-    seg_axes = _present_axes(mesh, SEGMENT_AXES)
-    n_mesh_segs = int(np.prod([mesh.shape[a] for a in seg_axes])) if seg_axes else 1
+    n_mesh_segs = mesh_segment_count(mesh)
     if n_segments != n_mesh_segs:
         raise ValueError(
             f"n_segments={n_segments} must equal the segment-axes device "

@@ -20,6 +20,7 @@ import dataclasses
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.knn_graph import KnnConfig
 from repro.core.pruning import PruneConfig
@@ -91,5 +92,14 @@ class HybridIndex:
 
 def mark_deleted(index: HybridIndex, ids: jax.Array) -> HybridIndex:
     """Mark-deletion: nodes stay traversable, filtered from results
-    (paper §4.1 "Updates of the Hybrid Index")."""
-    return dataclasses.replace(index, alive=index.alive.at[ids].set(False))
+    (paper §4.1 "Updates of the Hybrid Index").
+
+    Negative ids (``PAD_IDX`` slots from padded routing tables) are ignored:
+    a raw ``.at[ids]`` would wrap them numpy-style and silently tombstone the
+    *last* row, so they are remapped out of bounds and dropped."""
+    ids = jnp.asarray(ids, jnp.int32)
+    n = index.alive.shape[0]
+    safe = jnp.where(ids >= 0, ids, n)  # PAD -> out-of-bounds, dropped below
+    return dataclasses.replace(
+        index, alive=index.alive.at[safe].set(False, mode="drop")
+    )

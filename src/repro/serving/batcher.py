@@ -34,8 +34,129 @@ from repro.core.usms import FusedVectors, PathWeights
 
 
 class QueueFullError(RuntimeError):
-    """Raised when the bounded request queue rejects a submit (the admission
-    -control hook: callers shed load or retry with backoff)."""
+    """Raised when the bounded request queue rejects a submit (backpressure:
+    the execution path is not draining fast enough; callers shed load or
+    retry with backoff)."""
+
+
+class AdmissionError(RuntimeError):
+    """Raised when token-bucket admission control rejects a submit BEFORE it
+    reaches the queue (rate policy, not backpressure — deliberately a
+    distinct type from ``QueueFullError`` so callers and stats can tell
+    "you are over quota" from "the service is saturated")."""
+
+
+# ---------------------------------------------------------------------------
+# Token-bucket admission control (per-tenant quotas + a global ceiling).
+# Sits in FRONT of MicroBatcher.enqueue: the bounded queue remains the
+# backpressure backstop, the buckets enforce rate policy.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuotaConfig:
+    """One token bucket: sustained ``rate`` requests/s with ``burst`` depth."""
+
+    rate: float
+    burst: float
+
+    def __post_init__(self):
+        if self.rate < 0 or self.burst <= 0:
+            raise ValueError("quota needs rate >= 0 and burst > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """``global_quota`` caps the whole service; ``tenant_quotas`` pins named
+    tenants; ``default_tenant_quota`` applies to any other named tenant.
+    Requests with ``tenant=None`` only face the global bucket."""
+
+    global_quota: Optional[QuotaConfig] = None
+    default_tenant_quota: Optional[QuotaConfig] = None
+    tenant_quotas: tuple[tuple[str, QuotaConfig], ...] = ()
+    # cap on lazily-created tenant buckets: beyond it the oldest bucket is
+    # evicted (it re-fills to a full burst if that tenant returns — a mild
+    # over-admit, vs. unbounded growth under high-cardinality tenant ids)
+    max_tenant_buckets: int = 4096
+
+
+class TokenBucket:
+    """Classic token bucket; time is injectable for deterministic tests."""
+
+    __slots__ = ("rate", "burst", "_tokens", "_t")
+
+    def __init__(self, quota: QuotaConfig, now: Optional[float] = None):
+        self.rate = float(quota.rate)
+        self.burst = float(quota.burst)
+        self._tokens = self.burst  # start full: allow an initial burst
+        self._t = time.monotonic() if now is None else now
+
+    @property
+    def tokens(self) -> float:
+        return self._tokens
+
+    def try_acquire(self, n: float = 1.0, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        if now > self._t:
+            self._tokens = min(self.burst, self._tokens + (now - self._t) * self.rate)
+            self._t = now
+        if self._tokens >= n:
+            self._tokens -= n
+            return True
+        return False
+
+    def refund(self, n: float = 1.0) -> None:
+        self._tokens = min(self.burst, self._tokens + n)
+
+
+class AdmissionController:
+    """Tenant bucket first, then the global bucket (with refund on a global
+    reject, so a saturated service never silently drains tenant quota).
+
+    Not internally locked: the service calls ``try_admit`` under its queue
+    lock, which also serializes lazy tenant-bucket creation."""
+
+    def __init__(self, cfg: AdmissionConfig, now: Optional[float] = None):
+        self.cfg = cfg
+        self._quota_by_tenant = dict(cfg.tenant_quotas)
+        self._global = (
+            TokenBucket(cfg.global_quota, now) if cfg.global_quota else None
+        )
+        self._tenants: dict[str, TokenBucket] = {}
+
+    def _tenant_bucket(self, tenant: Optional[str], now: float) -> Optional[TokenBucket]:
+        if tenant is None:
+            return None
+        bucket = self._tenants.get(tenant)
+        if bucket is None:
+            quota = self._quota_by_tenant.get(tenant, self.cfg.default_tenant_quota)
+            if quota is None:
+                return None
+            while len(self._tenants) >= self.cfg.max_tenant_buckets:
+                self._tenants.pop(next(iter(self._tenants)))  # oldest first
+            bucket = self._tenants[tenant] = TokenBucket(quota, now)
+        return bucket
+
+    def try_admit(self, tenant: Optional[str] = None, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        tb = self._tenant_bucket(tenant, now)
+        if tb is not None and not tb.try_acquire(1.0, now):
+            return False
+        if self._global is not None and not self._global.try_acquire(1.0, now):
+            if tb is not None:
+                tb.refund(1.0)
+            return False
+        return True
+
+    def refund(self, tenant: Optional[str] = None) -> None:
+        """Return an admitted request's tokens (all buckets it consumed
+        from). Called when a request passes admission but is then rejected
+        downstream (queue full): backpressure must not drain rate quota."""
+        tb = self._tenants.get(tenant) if tenant is not None else None
+        if tb is not None:
+            tb.refund(1.0)
+        if self._global is not None:
+            self._global.refund(1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +195,7 @@ class SearchRequest:
     k: int = 10
     keywords: Optional[np.ndarray] = None
     entities: Optional[np.ndarray] = None
+    tenant: Optional[str] = None  # admission-control quota key (None = global only)
 
 
 class PendingResult:

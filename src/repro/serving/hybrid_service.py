@@ -18,10 +18,23 @@ claims (§5) presume but the one-shot ``search()`` API does not provide:
     observe a half-updated index;
   * the same service fronts a single-device ``HybridIndex`` and a sharded
     ``SegmentedIndex`` (via ``make_distributed_search_padded``) — the
-    request path is identical, only the executable factory differs.
+    request path is identical, only the executable factory differs;
+  * a segmented snapshot may carry a *grow segment* (a small mutable
+    ``HybridIndex`` absorbing streaming inserts, managed by
+    ``serving.segment_router.SegmentRouter``): reads fan out to the sealed
+    executable AND a ``search_padded`` pass over the grow segment, then
+    merge per-row top-k in global-id space. The grow pass deliberately uses
+    ``search_padded``'s own jit cache, NOT the AOT ``executable_cache``, so
+    sealed-segment executables survive every insert (the grow segment
+    changes shape per insert; the sealed one does not);
+  * token-bucket admission control (``BatcherConfig``-level queue bound is
+    backpressure; ``AdmissionConfig`` buckets are rate policy) runs in front
+    of ``MicroBatcher.enqueue``, with per-tenant quotas keyed on
+    ``SearchRequest.tenant``.
 
-Deadlines are evaluated on ``submit``/``poll`` (see batcher docstring); a
-deployment pumps ``poll`` from a timer thread.
+Deadlines are evaluated on ``submit``/``poll``; a background pump thread
+(``start_pump``/``ServiceConfig.pump_interval_s``) drives ``poll`` so
+flush-on-deadline no longer depends on the submit path.
 """
 
 from __future__ import annotations
@@ -48,6 +61,9 @@ from repro.core.usms import (
     stack_weights,
 )
 from repro.serving.batcher import (
+    AdmissionConfig,
+    AdmissionController,
+    AdmissionError,
     BatcherConfig,
     Bucket,
     MicroBatcher,
@@ -61,23 +77,35 @@ from repro.serving.batcher import (
 class ServiceConfig:
     batcher: BatcherConfig = BatcherConfig()
     keep_stale_executables: bool = False  # keep executables for old index shapes
+    admission: Optional[AdmissionConfig] = None  # token buckets before enqueue
+    pump_interval_s: Optional[float] = None  # auto-start a poll() pump thread
 
 
 @dataclasses.dataclass
 class ServiceStats:
-    requests: int = 0
+    requests: int = 0  # admitted AND enqueued (rejects counted separately)
     batches: int = 0
     compiles: int = 0
     padded_slots: int = 0  # wasted batch slots (padding overhead measure)
+    rejected_queue_full: int = 0  # bounded-queue backpressure rejects
+    rejected_admission: int = 0  # token-bucket (rate-policy) rejects
+
+    @property
+    def rejected(self) -> int:
+        return self.rejected_queue_full + self.rejected_admission
 
 
 @dataclasses.dataclass(frozen=True)
 class _Snapshot:
     """An immutable, fully-materialized index the read path can hold across
-    a whole batch — the copy-on-write unit."""
+    a whole batch — the copy-on-write unit. ``grow``/``grow_gids`` are the
+    optional grow segment of a segmented deployment: a small mutable-by-
+    replacement HybridIndex plus its local-row -> global-id map."""
 
     index: Union[HybridIndex, SegmentedIndex]
     version: int
+    grow: Optional[HybridIndex] = None
+    grow_gids: Optional[jax.Array] = None  # (n_grow,) int32
 
 
 class HybridSearchService:
@@ -106,11 +134,70 @@ class HybridSearchService:
         self._batcher = MicroBatcher(self.config.batcher)
         self._exec_cache: dict = {}
         self._segmented = isinstance(index, SegmentedIndex)
+        self._mesh = mesh
         if self._segmented:
             if mesh is None:
                 raise ValueError("a SegmentedIndex service requires a mesh")
             self._dist_fn = make_distributed_search_padded(mesh, params)
         self._build_cfg = build_cfg
+        self._router = None  # set by serving.segment_router.SegmentRouter
+        self._admission = (
+            AdmissionController(self.config.admission)
+            if self.config.admission is not None
+            else None
+        )
+        self._pump_lock = threading.Lock()  # guards pump start/stop
+        self._pump_thread: Optional[threading.Thread] = None
+        self._pump_stop = threading.Event()
+        if self.config.pump_interval_s is not None:
+            self.start_pump()
+
+    # -- background pump (flush-on-deadline without a submit) ---------------
+
+    def start_pump(self, interval_s: Optional[float] = None) -> None:
+        """Start the daemon thread that drives ``poll()`` every
+        ``interval_s`` (default: ``config.pump_interval_s``), so deadline
+        flushes happen even when no new submit arrives. Idempotent."""
+        interval = (
+            self.config.pump_interval_s if interval_s is None else interval_s
+        )
+        if interval is None:
+            raise ValueError("pump interval required (arg or config)")
+        with self._pump_lock:  # check-then-start must be atomic: exactly
+            # one pump thread, and _pump_stop always refers to ITS event
+            if self._pump_thread is not None and self._pump_thread.is_alive():
+                return
+            self._pump_stop = threading.Event()
+            stop = self._pump_stop
+
+            def loop():
+                while not stop.wait(interval):
+                    try:
+                        self.poll()
+                    except Exception:
+                        # the failing batch already failed its own waiters
+                        # (_run_batch); the pump must keep pumping for the rest
+                        pass
+
+            self._pump_thread = threading.Thread(
+                target=loop, name="hybrid-service-pump", daemon=True
+            )
+            self._pump_thread.start()
+
+    def stop_pump(self, timeout_s: float = 5.0) -> None:
+        with self._pump_lock:
+            thread = self._pump_thread
+            if thread is None:
+                return
+            self._pump_stop.set()
+            thread.join(timeout=timeout_s)
+            self._pump_thread = None
+
+    def __enter__(self) -> "HybridSearchService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop_pump()
 
     # -- snapshot management (copy-on-write swap) ---------------------------
 
@@ -122,12 +209,30 @@ class HybridSearchService:
     def index(self) -> Union[HybridIndex, SegmentedIndex]:
         return self._snap.index
 
-    def _publish(self, new_index) -> None:
+    @property
+    def grow_index(self) -> Optional[HybridIndex]:
+        """The current grow segment (None when sealed-only)."""
+        return self._snap.grow
+
+    def _publish(self, new_index, *, grow=None, grow_gids=None) -> None:
         # materialize before publishing so readers never block on (or fail
         # inside) a half-computed donor buffer
-        jax.block_until_ready(jax.tree.leaves(new_index))
-        self._snap = _Snapshot(new_index, self._snap.version + 1)
+        leaves = jax.tree.leaves(new_index)
+        if grow is not None:
+            if grow_gids is None:
+                raise ValueError("a grow segment needs its global-id map")
+            grow_gids = jnp.asarray(grow_gids, jnp.int32)
+            leaves = leaves + jax.tree.leaves(grow) + [grow_gids]
+        jax.block_until_ready(leaves)
+        self._snap = _Snapshot(
+            new_index, self._snap.version + 1, grow=grow, grow_gids=grow_gids
+        )
         if not self.config.keep_stale_executables:
+            # prune on the SEALED index key only: the grow segment is read
+            # through search_padded's own jit cache, so grow churn neither
+            # adds nor evicts AOT entries — sealed executables stay warm
+            # across every streaming insert (the cache-key invariant the
+            # grow-segment scheme exists to provide; DESIGN.md §6)
             key_now = self._index_key(new_index)
             with self._cache_lock:
                 self._exec_cache = {
@@ -142,11 +247,17 @@ class HybridSearchService:
         new_doc_entities: Optional[np.ndarray] = None,
     ) -> int:
         """Absorb streaming inserts; returns the new snapshot version.
-        In-flight searches keep the snapshot they started with."""
+        In-flight searches keep the snapshot they started with. A segmented
+        service routes inserts to its grow segment via the attached
+        ``SegmentRouter``."""
         if self._segmented:
-            raise NotImplementedError(
-                "streaming insert into a SegmentedIndex is a ROADMAP item "
-                "(route new docs to a growing segment)"
+            if self._router is None:
+                raise NotImplementedError(
+                    "streaming insert into a SegmentedIndex needs a grow "
+                    "segment: attach a serving.segment_router.SegmentRouter"
+                )
+            return self._router.insert(
+                new_docs, key=key, new_doc_entities=new_doc_entities
             )
         if self._build_cfg is None:
             raise ValueError("insert requires build_cfg at service construction")
@@ -163,12 +274,16 @@ class HybridSearchService:
 
     def mark_deleted(self, ids) -> int:
         """Mark-delete docs; returns the new snapshot version. The index
-        shape is unchanged, so cached executables keep serving."""
+        shape is unchanged, so cached executables keep serving. A segmented
+        service resolves global ids to (segment, local row) tombstones via
+        the attached ``SegmentRouter``."""
         if self._segmented:
-            raise NotImplementedError(
-                "deletion on a SegmentedIndex needs global->segment id "
-                "routing (ROADMAP item)"
-            )
+            if self._router is None:
+                raise NotImplementedError(
+                    "deletion on a SegmentedIndex needs global->segment id "
+                    "routing: attach a serving.segment_router.SegmentRouter"
+                )
+            return self._router.delete(ids)
         with self._write_lock:
             new_index = index_mark_deleted(
                 self._snap.index, jnp.asarray(ids, jnp.int32)
@@ -240,11 +355,31 @@ class HybridSearchService:
                 )
 
     def submit(self, request: SearchRequest) -> PendingResult:
-        """Enqueue one request; runs any batch whose flush trigger fired."""
+        """Enqueue one request; runs any batch whose flush trigger fired.
+
+        Raises ``AdmissionError`` on a token-bucket reject (rate policy) and
+        ``QueueFullError`` on a bounded-queue reject (backpressure) — the
+        two are counted separately in ``stats``."""
         self._validate(request)
         pending = PendingResult(service=self)
         with self._queue_lock:
-            self._batcher.enqueue(request, pending)
+            if self._admission is not None and not self._admission.try_admit(
+                request.tenant
+            ):
+                self.stats.rejected_admission += 1
+                raise AdmissionError(
+                    f"token-bucket admission rejected request "
+                    f"(tenant={request.tenant!r}); shed load or retry later"
+                )
+            try:
+                self._batcher.enqueue(request, pending)
+            except QueueFullError:
+                # the request was admitted but never served: hand the
+                # tokens back so backpressure rejects don't drain quota
+                if self._admission is not None:
+                    self._admission.refund(request.tenant)
+                self.stats.rejected_queue_full += 1
+                raise
             self.stats.requests += 1
         try:
             self._drain()
@@ -283,6 +418,40 @@ class HybridSearchService:
             raise first_err
         return len(ready)
 
+    # large-negative fill for merged pad slots (matches distributed NEG_FILL)
+    _NEG_FILL = np.float32(-1e30)
+
+    def _merge_grow(self, snap: _Snapshot, args, ids, scores, expanded):
+        """Phase two of a segmented read: search the grow segment and merge
+        per-row top-k with the sealed results in global-id space.
+
+        The grow pass goes through ``search_padded`` directly — its jit cache
+        retraces as the grow segment changes shape, while the AOT
+        ``executable_cache`` (sealed segments) is never touched. Tombstones
+        need no extra filtering here: both phases already filter on their
+        own ``alive`` masks."""
+        gres = search_padded(snap.grow, *args, self.params)
+        g_local = np.asarray(gres.ids)
+        gids_map = np.asarray(snap.grow_gids)
+        g_ids = np.where(
+            g_local >= 0,
+            gids_map[np.clip(g_local, 0, gids_map.shape[0] - 1)],
+            PAD_IDX,
+        )
+        g_scores = np.where(g_local >= 0, np.asarray(gres.scores), -np.inf)
+        all_ids = np.concatenate([ids, g_ids], axis=1)
+        all_scores = np.concatenate(
+            [np.where(ids >= 0, scores, -np.inf), g_scores], axis=1
+        )
+        k = ids.shape[1]
+        order = np.argsort(-all_scores, axis=1, kind="stable")[:, :k]
+        m_ids = np.take_along_axis(all_ids, order, axis=1)
+        m_scores = np.take_along_axis(all_scores, order, axis=1)
+        valid = np.isfinite(m_scores)
+        m_ids = np.where(valid, m_ids, PAD_IDX).astype(ids.dtype)
+        m_scores = np.where(valid, m_scores, self._NEG_FILL).astype(np.float32)
+        return m_ids, m_scores, expanded + np.asarray(gres.expanded)
+
     def _run_batch(self, bucket: Bucket, entries) -> None:
         try:
             snap = self._snap  # one snapshot for the whole batch
@@ -292,6 +461,10 @@ class HybridSearchService:
             ids = np.asarray(res.ids)
             scores = np.asarray(res.scores)
             expanded = np.asarray(res.expanded)
+            if snap.grow is not None:
+                ids, scores, expanded = self._merge_grow(
+                    snap, args, ids, scores, expanded
+                )
         except Exception as err:
             # entries are already dequeued: propagate to every waiter so no
             # result() blocks forever, then surface to the driving thread

@@ -1,0 +1,343 @@
+"""Grow-segment streaming router for the segmented serving layer.
+
+The paper's index supports incremental insertion without reconstruction
+(§4.1 "Updates"), and PR 2 gave every segment a device-resident
+``insert()`` program — but a sharded ``SegmentedIndex`` had no service-level
+way to absorb writes: any change to the stacked sealed segments would
+change their shapes and evict every AOT-compiled search executable. This
+module closes that gap with the classic vector-DB grow-segment scheme
+(Milvus growing segments, GRAB-ANNS bucketed incremental indexing):
+
+  * **growing** — streaming ``insert()`` batches land in one small mutable
+    ``HybridIndex`` (the *grow segment*), built on first insert via
+    ``build_index`` and extended by ``core.build_pipeline.insert`` (the
+    pipelined per-segment insert program). Sealed segments are never
+    touched, so their compiled executables stay warm; the read path merges
+    sealed + grow per-row top-k in global-id space
+    (``HybridSearchService._merge_grow``);
+  * **sealed** — the immutable stacked segments served through
+    ``make_distributed_search_padded``'s cached executable. Deletions
+    resolve global ids to (segment, local row) tombstones
+    (``core.distributed.mark_deleted_segmented``) — shape-preserving, so no
+    recompiles;
+  * **compacted** — when the grow segment's live docs cross
+    ``RouterConfig.seal_threshold``, ``seal_and_compact`` rebuilds ALL
+    surviving docs (sealed minus tombstones, plus live grow docs) into a
+    fresh S-segment sealed index via ``build_index_sharded`` (or the
+    sequential ``build_segmented_index`` off-mesh), preserving global ids,
+    and atomically publishes it through ``HybridSearchService._publish``.
+    S stays equal to the mesh's segment-device count — the
+    one-segment-per-device contract of the sharded search — so the same
+    distributed executable factory keeps serving; per-segment shapes do
+    change here, which is the one (documented) point where sealed
+    executables recompile.
+
+Every mutation happens under the service's write lock and lands as one
+atomic ``_Snapshot`` publish: readers either see (old sealed, old grow) or
+(new sealed, new grow), never a half-updated pair. See DESIGN.md §6.
+
+Knowledge-graph scope: give the router the triplets
+(``SegmentRouter(..., kg_triplets=..., n_entities=...)``) and entity paths
+survive compaction (logical edges are rebuilt over the surviving docs'
+entities); a grow segment born from an entity-carrying insert gets its own
+logical edges too, though docs from LATER inserts into the same grow
+segment only gain logical edges at compaction. Constructing a router
+without triplets over a KG-bearing sealed index fails fast unless
+``RouterConfig.allow_kg_loss_on_compact`` is set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build_pipeline import build_index, insert as index_insert
+from repro.core.distributed import (
+    alive_docs,
+    compact_segmented_index,
+    mark_deleted_segmented,
+    place_segmented_index,
+    resolve_global_ids,
+)
+from repro.core.index import BuildConfig, mark_deleted as index_mark_deleted
+from repro.core.search import SearchParams
+from repro.core.usms import PAD_IDX, FusedVectors
+from repro.serving.hybrid_service import HybridSearchService
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    seal_threshold: int = 256  # live grow docs that trigger seal-and-compact
+    auto_compact: bool = True  # compact from insert() when over threshold
+    # optional override for the insert probe's search breadth (k and the
+    # edge paths are forced by the build config; see build_pipeline.insert)
+    insert_search: Optional[SearchParams] = None
+    # opt-in acknowledgement that compacting a KG-bearing index WITHOUT
+    # giving the router the triplets permanently drops the entity paths
+    allow_kg_loss_on_compact: bool = False
+
+
+@dataclasses.dataclass
+class RouterStats:
+    inserts: int = 0  # insert() calls absorbed by the grow segment
+    inserted_docs: int = 0
+    deletes: int = 0  # delete() calls
+    deleted_sealed: int = 0  # ids tombstoned in sealed segments
+    deleted_grow: int = 0  # ids tombstoned in the grow segment
+    unknown_deletes: int = 0  # ids found nowhere (already compacted away?)
+    compactions: int = 0
+
+
+class SegmentRouter:
+    """Fronts a segmented ``HybridSearchService`` with a grow segment.
+
+    Constructing a router attaches it to the service: ``service.insert`` /
+    ``service.mark_deleted`` delegate here, and the service's read path
+    starts merging the grow segment automatically once one exists."""
+
+    def __init__(
+        self,
+        service: HybridSearchService,
+        build_cfg: BuildConfig,
+        config: Optional[RouterConfig] = None,
+        *,
+        kg_triplets: Optional[np.ndarray] = None,
+        n_entities: int = 0,
+    ):
+        if not getattr(service, "_segmented", False):
+            raise ValueError(
+                "SegmentRouter fronts a SegmentedIndex service; a single "
+                "HybridIndex already supports insert()/mark_deleted() directly"
+            )
+        self.service = service
+        self.build_cfg = build_cfg
+        self.config = config or RouterConfig()
+        self.stats = RouterStats()
+        self._kg_triplets = (
+            None if kg_triplets is None else np.asarray(kg_triplets, np.int32)
+        )
+        self._n_entities = int(n_entities)
+        # entity_adj is (1, 1) for a KG-less build (LogicalEdges.empty):
+        # anything wider means the sealed index carries entity paths that a
+        # triplet-less compaction would silently destroy — fail fast unless
+        # the caller explicitly opted into that loss
+        sealed_has_kg = service._snap.index.index.entity_adj.shape[-1] > 1
+        if (
+            sealed_has_kg
+            and self._kg_triplets is None
+            and not self.config.allow_kg_loss_on_compact
+        ):
+            raise ValueError(
+                "the sealed index carries knowledge-graph data but the "
+                "router has no kg_triplets: seal_and_compact would drop "
+                "every entity path. Pass kg_triplets/n_entities, or set "
+                "RouterConfig(allow_kg_loss_on_compact=True) to accept it."
+            )
+        gids = np.asarray(service._snap.index.global_ids)
+        self._next_gid = int(gids.max()) + 1 if (gids >= 0).any() else 0
+        if service._snap.grow_gids is not None:
+            # re-attaching over a live grow segment: its ids are allocated
+            # past the sealed ones and must never be handed out again
+            self._next_gid = max(
+                self._next_gid, int(np.asarray(service._snap.grow_gids).max()) + 1
+            )
+        service._router = self
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def grow_size(self) -> int:
+        """Rows in the grow segment (including tombstoned ones)."""
+        grow = self.service._snap.grow
+        return 0 if grow is None else int(grow.n)
+
+    @property
+    def live_grow_size(self) -> int:
+        """Non-tombstoned grow docs — the seal-threshold measure."""
+        grow = self.service._snap.grow
+        return 0 if grow is None else int(np.asarray(grow.alive).sum())
+
+    # -- writes (all under the service write lock, atomic publishes) --------
+
+    def insert(
+        self,
+        new_docs: FusedVectors,
+        *,
+        key: Optional[jax.Array] = None,
+        new_doc_entities: Optional[np.ndarray] = None,
+    ) -> int:
+        """Absorb a batch of new docs into the grow segment; returns the new
+        snapshot version. Never touches sealed segments (their executables
+        stay cached). May trigger seal-and-compact when the grow segment
+        crosses the threshold and ``auto_compact`` is on."""
+        svc = self.service
+        n_new = int(new_docs.n)
+        if n_new == 0:
+            return svc.snapshot_version
+        if new_doc_entities is not None:
+            if self._kg_triplets is None:
+                raise ValueError(
+                    "new_doc_entities given but the router has no knowledge "
+                    "graph: pass kg_triplets/n_entities at construction"
+                )
+            new_doc_entities = np.asarray(new_doc_entities, np.int32)
+            ent_width = int(svc._snap.index.index.doc_entities.shape[-1])
+            if new_doc_entities.shape != (n_new, ent_width):
+                raise ValueError(
+                    f"new_doc_entities must be ({n_new}, {ent_width}) to "
+                    "match the sealed index's entity width"
+                )
+        with svc._write_lock:
+            snap = svc._snap
+            if key is None:
+                key = jax.random.fold_in(jax.random.key(17), snap.version)
+            new_gids = np.arange(
+                self._next_gid, self._next_gid + n_new, dtype=np.int32
+            )
+            if snap.grow is None:
+                kg_kwargs = {}
+                if self._kg_triplets is not None:
+                    # a KG router ALWAYS births the grow segment with the
+                    # sealed entity width (all-PAD rows when the batch has
+                    # no entities), so later entity-carrying inserts never
+                    # hit build_pipeline.insert's width check
+                    ents = new_doc_entities
+                    if ents is None:
+                        width = int(snap.index.index.doc_entities.shape[-1])
+                        ents = np.full((n_new, width), PAD_IDX, np.int32)
+                    kg_kwargs = dict(
+                        kg_triplets=self._kg_triplets,
+                        doc_entities=ents,
+                        n_entities=self._n_entities,
+                    )
+                grow = build_index(new_docs, self.build_cfg, key=key, **kg_kwargs)
+                gids = jnp.asarray(new_gids)
+            else:
+                grow = index_insert(
+                    snap.grow,
+                    new_docs,
+                    self.build_cfg,
+                    key=key,
+                    new_doc_entities=new_doc_entities,
+                    search_params=self.config.insert_search,
+                )
+                gids = jnp.concatenate([snap.grow_gids, jnp.asarray(new_gids)])
+            self._next_gid += n_new
+            svc._publish(snap.index, grow=grow, grow_gids=gids)
+            self.stats.inserts += 1
+            self.stats.inserted_docs += n_new
+            version = svc._snap.version
+        if (
+            self.config.auto_compact
+            and self.live_grow_size >= self.config.seal_threshold
+        ):
+            return self.seal_and_compact()
+        return version
+
+    def delete(self, global_ids) -> int:
+        """Tombstone docs by global id, wherever they live: sealed ids
+        become (segment, local row) tombstones in the stacked alive mask,
+        grow ids are mark-deleted in the grow segment. Both are
+        shape-preserving — no executable is evicted. Returns the new
+        snapshot version."""
+        svc = self.service
+        ids = np.atleast_1d(np.asarray(global_ids, np.int64))
+        with svc._write_lock:
+            snap = svc._snap
+            seg, loc = resolve_global_ids(snap.index, ids)
+            in_sealed = seg >= 0
+            grow, grow_gids = snap.grow, snap.grow_gids
+            in_grow = np.zeros(ids.shape, bool)
+            if grow is not None:
+                gmap = np.asarray(grow_gids)
+                in_grow = np.isin(ids, gmap) & ~in_sealed
+                if in_grow.any():
+                    # grow gids are allocated monotonically, so the map is
+                    # sorted and searchsorted resolves local rows directly
+                    rows = np.searchsorted(gmap, ids[in_grow])
+                    grow = index_mark_deleted(
+                        grow, jnp.asarray(rows, jnp.int32)
+                    )
+            sealed = snap.index
+            if in_sealed.any():
+                sealed = mark_deleted_segmented(
+                    sealed, ids[in_sealed],
+                    resolved=(seg[in_sealed], loc[in_sealed]),
+                )
+            svc._publish(sealed, grow=grow, grow_gids=grow_gids)
+            self.stats.deletes += 1
+            self.stats.deleted_sealed += int(in_sealed.sum())
+            self.stats.deleted_grow += int(in_grow.sum())
+            self.stats.unknown_deletes += int((~in_sealed & ~in_grow).sum())
+            return svc._snap.version
+
+    def seal_and_compact(self, *, key: Optional[jax.Array] = None) -> int:
+        """Rebuild all surviving docs — sealed minus tombstones, plus live
+        grow docs — into a fresh S-segment sealed index (S unchanged: the
+        one-segment-per-device contract), remap the original global ids
+        onto it, and publish atomically with the grow segment cleared.
+
+        Physically drops every tombstoned id: this is the step that turns
+        mark-deletion into reclaimed rows. Per-segment shapes change, so
+        sealed executables recompile on the next read — the documented cost
+        of compaction (DESIGN.md §6)."""
+        svc = self.service
+        with svc._write_lock:
+            snap = svc._snap
+            if snap.grow is None and not bool(
+                (~np.asarray(snap.index.index.alive)
+                 & (np.asarray(snap.index.global_ids) >= 0)).any()
+            ):
+                return snap.version  # nothing growing, nothing tombstoned
+            sealed_corpus, sealed_gids, sealed_ents = alive_docs(snap.index)
+            parts_corpus, parts_gids = [sealed_corpus], [sealed_gids]
+            parts_ents = [sealed_ents]
+            ent_width = sealed_ents.shape[-1]
+            if snap.grow is not None:
+                live = np.flatnonzero(np.asarray(snap.grow.alive))
+                if live.size:
+                    parts_corpus.append(
+                        jax.tree.map(
+                            lambda a: jnp.asarray(np.asarray(a)[live]),
+                            snap.grow.corpus,
+                        )
+                    )
+                    parts_gids.append(np.asarray(snap.grow_gids)[live])
+                    # grow entity rows, padded/clipped to the sealed width
+                    # (a KG-less grow segment has width-1 all-PAD rows)
+                    g_ents = np.asarray(snap.grow.doc_entities)[live]
+                    ents = np.full((live.size, ent_width), PAD_IDX, np.int32)
+                    w = min(ent_width, g_ents.shape[-1])
+                    ents[:, :w] = g_ents[:, :w]
+                    parts_ents.append(ents)
+            corpus = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *parts_corpus
+            )
+            gids = np.concatenate(parts_gids)
+            if key is None:
+                key = jax.random.fold_in(jax.random.key(23), snap.version)
+            kg_kwargs = {}
+            if self._kg_triplets is not None:
+                kg_kwargs = dict(
+                    kg_triplets=self._kg_triplets,
+                    doc_entities=np.concatenate(parts_ents, axis=0),
+                    n_entities=self._n_entities,
+                )
+            new_seg = compact_segmented_index(
+                corpus,
+                gids,
+                snap.index.n_segments,
+                self.build_cfg,
+                mesh=svc._mesh,
+                key=key,
+                **kg_kwargs,
+            )
+            new_seg = place_segmented_index(new_seg, svc._mesh)
+            svc._publish(new_seg, grow=None, grow_gids=None)
+            self.stats.compactions += 1
+            return svc._snap.version

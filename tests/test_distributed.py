@@ -68,6 +68,49 @@ def test_shard_corpus_roundtrip():
         assert (last[-n_pad:] == 0).all()
 
 
+def test_segment_slices_allow_empty_trailing_segments():
+    from repro.core.distributed import segment_slices
+
+    # 5 docs over 4 segments: per=2, the last segment is EMPTY — slices
+    # must stay well-formed (lo <= hi), not go negative-width
+    assert segment_slices(5, 4) == [(0, 2), (2, 4), (4, 5), (5, 5)]
+    assert segment_slices(1, 2) == [(0, 1), (1, 1)]
+    assert all(lo <= hi for lo, hi in segment_slices(7, 8))
+
+
+def test_compact_fewer_survivors_than_segments():
+    """Compaction can shrink the corpus below the segment layout (heavy
+    deletions): empty trailing segments build as all-pad, never crash, and
+    the surviving ids stay searchable."""
+    from repro.core import BuildConfig, KnnConfig, PruneConfig
+    from repro.core.distributed import (
+        compact_segmented_index,
+        resolve_global_ids,
+    )
+    from repro.data.corpus import CorpusConfig, make_corpus
+
+    cfg = BuildConfig(
+        knn=KnnConfig(k=4, iters=1, node_chunk=64),
+        prune=PruneConfig(degree=4, keyword_degree=2, node_chunk=32),
+        path_refine_iters=0,
+    )
+    corpus = make_corpus(
+        CorpusConfig(n_docs=64, n_queries=4, n_topics=4, d_dense=8,
+                     nnz_sparse=4, nnz_lexical=4, seed=3)
+    )
+    survivors = corpus.docs[0:5]
+    gids = np.asarray([3, 17, 30, 41, 63], np.int32)
+    seg = compact_segmented_index(survivors, gids, 4, cfg)
+    g = np.asarray(seg.global_ids)
+    assert g.shape[0] == 4
+    assert set(g[g >= 0].tolist()) == set(gids.tolist())
+    # the empty segment is fully dead
+    alive = np.asarray(seg.index.alive)
+    assert alive.sum() == 5 and not alive[-1].any()
+    s, l = resolve_global_ids(seg, gids)
+    assert (s >= 0).all() and (l >= 0).all()
+
+
 @pytest.mark.slow
 @pytest.mark.skipif(
     not hasattr(__import__("jax"), "set_mesh"),

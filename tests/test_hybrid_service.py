@@ -159,7 +159,126 @@ def test_bounded_queue_rejects_overflow(corpus, index):
     with pytest.raises(QueueFullError):
         svc.submit(SearchRequest(query=corpus.queries[2],
                                  weights=THREE_WEIGHTS[0], k=3))
+    # queue-full rejects are counted, distinctly from admission rejects and
+    # NOT as accepted requests
+    assert svc.stats.rejected_queue_full == 1
+    assert svc.stats.rejected_admission == 0
+    assert svc.stats.rejected == 1
+    assert svc.stats.requests == 2
     svc.flush()
+
+
+def test_token_bucket_deterministic():
+    from repro.serving.batcher import QuotaConfig, TokenBucket
+
+    tb = TokenBucket(QuotaConfig(rate=2.0, burst=4.0), now=0.0)
+    assert all(tb.try_acquire(1.0, now=0.0) for _ in range(4))  # full burst
+    assert not tb.try_acquire(1.0, now=0.0)
+    assert tb.try_acquire(1.0, now=0.5)  # 0.5s * 2/s refilled one token
+    assert not tb.try_acquire(1.0, now=0.5)
+    assert tb.try_acquire(4.0, now=100.0)  # refill is capped at burst
+    assert not tb.try_acquire(1.0, now=100.0)
+
+
+def test_admission_controller_tenant_quotas():
+    from repro.serving.batcher import (
+        AdmissionConfig,
+        AdmissionController,
+        QuotaConfig,
+    )
+
+    cfg = AdmissionConfig(
+        global_quota=QuotaConfig(rate=0.0, burst=3.0),
+        default_tenant_quota=QuotaConfig(rate=0.0, burst=1.0),
+        tenant_quotas=(("vip", QuotaConfig(rate=0.0, burst=2.0)),),
+    )
+    ac = AdmissionController(cfg, now=0.0)
+    assert ac.try_admit("basic", now=0.0)
+    assert not ac.try_admit("basic", now=0.0)  # default tenant quota spent
+    assert ac.try_admit("vip", now=0.0)
+    assert ac.try_admit("vip", now=0.0)  # named quota is wider...
+    assert not ac.try_admit("vip", now=0.0)  # ...but not infinite
+    assert not ac.try_admit(None, now=0.0)  # global ceiling (3) also spent
+
+    # a global reject refunds the tenant bucket (quota is not silently
+    # drained while the service is saturated)
+    cfg2 = AdmissionConfig(
+        global_quota=QuotaConfig(rate=0.0, burst=1.0),
+        default_tenant_quota=QuotaConfig(rate=0.0, burst=5.0),
+    )
+    ac2 = AdmissionController(cfg2, now=0.0)
+    assert ac2.try_admit("t", now=0.0)
+    assert not ac2.try_admit("t", now=0.0)  # global empty
+    assert ac2._tenants["t"].tokens == 4.0  # refunded, only 1 truly spent
+
+    # high-cardinality tenant ids never grow the bucket map without bound
+    cfg3 = AdmissionConfig(
+        default_tenant_quota=QuotaConfig(rate=1.0, burst=2.0),
+        max_tenant_buckets=2,
+    )
+    ac3 = AdmissionController(cfg3, now=0.0)
+    for i in range(10):
+        assert ac3.try_admit(f"tenant-{i}", now=0.0)
+    assert len(ac3._tenants) == 2  # oldest evicted, cap held
+
+
+def test_service_admission_rejects_counted_distinctly(corpus, index):
+    from repro.serving.batcher import AdmissionConfig, AdmissionError, QuotaConfig
+
+    assert not issubclass(AdmissionError, QueueFullError)
+    svc = HybridSearchService(
+        index, PARAMS,
+        ServiceConfig(
+            batcher=BatcherConfig(flush_size=8, max_batch=8,
+                                  flush_deadline_s=60.0),
+            admission=AdmissionConfig(
+                global_quota=QuotaConfig(rate=0.0, burst=2.0)
+            ),
+        ),
+    )
+    req = lambda i, t=None: SearchRequest(
+        query=corpus.queries[i], weights=THREE_WEIGHTS[0], k=3, tenant=t)
+    p0, p1 = svc.submit(req(0)), svc.submit(req(1))
+    with pytest.raises(AdmissionError):
+        svc.submit(req(2))
+    assert svc.stats.rejected_admission == 1
+    assert svc.stats.rejected_queue_full == 0
+    assert svc.stats.requests == 2  # rejects never count as requests
+    svc.flush()
+    assert p0.result()[0].shape == (3,) and p1.result()[0].shape == (3,)
+
+
+def test_queue_full_reject_refunds_admission_tokens(corpus, index):
+    """A request that passes admission but dies on the bounded queue gets
+    its tokens back: backpressure rejects never drain rate quota."""
+    from repro.serving.batcher import AdmissionConfig, QuotaConfig
+
+    svc = HybridSearchService(
+        index, PARAMS,
+        ServiceConfig(
+            batcher=BatcherConfig(flush_size=8, max_batch=8, max_queue=1,
+                                  flush_deadline_s=60.0),
+            admission=AdmissionConfig(
+                global_quota=QuotaConfig(rate=0.0, burst=5.0)
+            ),
+        ),
+    )
+    req = lambda i: SearchRequest(
+        query=corpus.queries[i % 16], weights=THREE_WEIGHTS[0], k=3)
+    svc.submit(req(0))  # queue now full; 4 tokens left
+    with pytest.raises(QueueFullError):
+        svc.submit(req(1))  # token taken AND refunded -> still 4 left
+    assert svc.stats.rejected_queue_full == 1
+    svc.flush()  # drain the queue
+    for i in range(4):  # all 4 remaining tokens usable, one at a time
+        svc.submit(req(2 + i))
+        svc.flush()
+    from repro.serving.batcher import AdmissionError
+
+    with pytest.raises(AdmissionError):  # burst of 5 truly spent now
+        svc.submit(req(6))
+    assert svc.stats.requests == 5
+    assert svc.stats.rejected_admission == 1
 
 
 def test_request_validation(corpus, index):
