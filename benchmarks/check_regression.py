@@ -1,7 +1,7 @@
-"""CI perf-regression gate over the build bench (results/BENCH_build.json).
+"""CI perf-regression gates over the bench JSONs.
 
-Compares the fresh bench against the committed baseline
-(results/BENCH_build_baseline.json) and fails the job when the
+**Build gate** (default): compares results/BENCH_build.json against the
+committed results/BENCH_build_baseline.json and fails the job when the
 device-resident pipeline regresses:
 
   * ``pipeline.dispatches`` may NEVER rise — the single-dispatch build is a
@@ -11,6 +11,20 @@ device-resident pipeline regresses:
     more than ``--tol`` (default 20%) below the baseline — a ratio of two
     same-machine timings, so it tolerates absolute CPU-speed differences
     between runners, and the wide tolerance absorbs CI scheduler noise.
+
+**Serving gate** (``--serving-only``): compares results/BENCH_serving.json
+against results/BENCH_serving_baseline.json with deliberately LENIENT
+first-pass thresholds (the ROADMAP item: gate now, tighten once a few runs
+establish the CI noise floor):
+
+  * per-bucket steady QPS may not drop below ``1 - --qps-tol`` (default
+    allows an 80% drop) of the baseline — absolute QPS is
+    machine-dependent, so only a collapse fails;
+  * per-bucket steady p99 may not rise above ``1 + --p99-tol`` (default
+    allows a 4x rise) of the baseline;
+  * ``streaming.sealed_cache_stable`` must stay true — exact and
+    noise-free: false means streaming inserts evicted sealed executables
+    (the grow-segment scheme's core invariant, DESIGN.md §6).
 
 Wall-clock fields are reported but never gated: absolute seconds are
 machine-dependent and would flake.
@@ -40,17 +54,75 @@ REGEN_HINT = (
     "results/BENCH_build_baseline.json"
 )
 
+SERVING_REGEN_HINT = (
+    "regenerate with: PYTHONPATH=src python benchmarks/serving_bench.py "
+    "--dry-run && cp results/BENCH_serving.json "
+    "results/BENCH_serving_baseline.json"
+)
+
+
+def _config_mismatch(cfg_base: dict, cfg_b: dict) -> dict:
+    return {
+        k: (cfg_base.get(k), cfg_b.get(k))
+        for k in set(cfg_base) | set(cfg_b)
+        if cfg_base.get(k) != cfg_b.get(k)
+    }
+
+
+def check_serving(
+    bench: dict, baseline: dict, qps_tol: float, p99_tol: float
+) -> list[str]:
+    """Lenient first-pass serving gate; returns failure messages."""
+    failures: list[str] = []
+    steady_b = bench.get("steady", {})
+    steady_base = baseline.get("steady", {})
+    if not steady_b or not steady_base:
+        return ["steady section missing from bench or baseline — "
+                + SERVING_REGEN_HINT]
+    mismatched = _config_mismatch(
+        steady_base.get("config", {}), steady_b.get("config", {})
+    )
+    if mismatched:
+        return [
+            f"serving bench config does not match the baseline "
+            f"({mismatched}); the comparison would be meaningless — "
+            f"{SERVING_REGEN_HINT}"
+        ]
+    for bucket, base_vals in steady_base.get("buckets", {}).items():
+        vals = steady_b.get("buckets", {}).get(bucket)
+        if vals is None:
+            failures.append(f"steady bucket {bucket} missing from bench")
+            continue
+        qps_floor = base_vals["qps"] * (1.0 - qps_tol)
+        if vals["qps"] < qps_floor:
+            failures.append(
+                f"bucket {bucket}: steady QPS collapsed "
+                f"{base_vals['qps']:.0f} -> {vals['qps']:.0f} "
+                f"(> {qps_tol:.0%} below baseline; floor {qps_floor:.0f})"
+            )
+        p99_ceiling = base_vals["p99_ms"] * (1.0 + p99_tol)
+        if vals["p99_ms"] > p99_ceiling:
+            failures.append(
+                f"bucket {bucket}: p99 blew up "
+                f"{base_vals['p99_ms']:.1f}ms -> {vals['p99_ms']:.1f}ms "
+                f"(> {1 + p99_tol:.0f}x baseline; ceiling {p99_ceiling:.1f}ms)"
+            )
+    streaming = bench.get("streaming")
+    if streaming is not None and not streaming.get("sealed_cache_stable", True):
+        failures.append(
+            "streaming.sealed_cache_stable is false: inserts evicted "
+            "sealed-segment executables (grow-segment invariant, DESIGN.md §6)"
+        )
+    return failures
+
 
 def check(bench: dict, baseline: dict, tol: float) -> list[str]:
     """Returns the list of failure messages (empty = gate passes)."""
     failures: list[str] = []
 
-    cfg_b, cfg_base = bench.get("config", {}), baseline.get("config", {})
-    mismatched = {
-        k: (cfg_base.get(k), cfg_b.get(k))
-        for k in set(cfg_base) | set(cfg_b)
-        if cfg_base.get(k) != cfg_b.get(k)
-    }
+    mismatched = _config_mismatch(
+        baseline.get("config", {}), bench.get("config", {})
+    )
     if mismatched:
         return [
             f"bench config does not match the baseline ({mismatched}); "
@@ -87,7 +159,53 @@ def main() -> int:
         default=0.20,
         help="allowed fractional speedup_warm drop vs baseline (CPU noise)",
     )
+    ap.add_argument(
+        "--serving-only",
+        action="store_true",
+        help="gate the serving bench instead of the build bench",
+    )
+    ap.add_argument("--serving-bench", default="results/BENCH_serving.json")
+    ap.add_argument(
+        "--serving-baseline", default="results/BENCH_serving_baseline.json"
+    )
+    ap.add_argument(
+        "--qps-tol", type=float, default=0.80,
+        help="allowed fractional steady-QPS drop vs baseline (lenient "
+        "first pass: runner speeds differ)",
+    )
+    ap.add_argument(
+        "--p99-tol", type=float, default=4.0,
+        help="allowed fractional p99 rise vs baseline (4.0 = 5x ceiling)",
+    )
     args = ap.parse_args()
+
+    if args.serving_only:
+        bench_path = pathlib.Path(args.serving_bench)
+        base_path = pathlib.Path(args.serving_baseline)
+        if not bench_path.exists():
+            print(f"FAIL: {bench_path} missing — run the serving bench first")
+            return 1
+        if not base_path.exists():
+            print(f"FAIL: {base_path} missing — {SERVING_REGEN_HINT}")
+            return 1
+        bench = json.loads(bench_path.read_text())
+        baseline = json.loads(base_path.read_text())
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            buckets = data.get("steady", {}).get("buckets", {})
+            line = " ".join(
+                f"b{k}:qps={v['qps']:.0f},p99={v['p99_ms']:.1f}ms"
+                for k, v in sorted(buckets.items())
+            )
+            print(f"{name}: {line}")
+        failures = check_serving(bench, baseline, args.qps_tol, args.p99_tol)
+        for f in failures:
+            print(f"FAIL: {f}")
+        if not failures:
+            print(
+                f"PASS: no serving perf regression "
+                f"(qps-tol={args.qps_tol:.0%}, p99-tol={args.p99_tol:.1f}x)"
+            )
+        return 1 if failures else 0
 
     bench_path = pathlib.Path(args.bench)
     base_path = pathlib.Path(args.baseline)

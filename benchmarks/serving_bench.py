@@ -279,8 +279,8 @@ def run_streaming(
             "p50_ms": p50,
             "p99_ms": p99,
             "sealed_cache_stable": bool(sealed_stable),
-            "grow_docs_final": int(service._snap.grow.n)
-            if service._snap.grow is not None
+            "grow_docs_final": int(service._snap.grow_gids.shape[0])
+            if service._snap.grow_gids is not None
             else 0,
         },
     )

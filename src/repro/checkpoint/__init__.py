@@ -3,5 +3,13 @@ from repro.checkpoint.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.checkpoint.index_io import load_index, load_ingest, save_index
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "save_index",
+    "load_index",
+    "load_ingest",
+]

@@ -1,0 +1,143 @@
+"""Index persistence: an ingested ``HybridIndex`` that survives restarts.
+
+Reuses ``checkpoint.checkpoint``'s atomic manifest+leaf layout (tmp dir ->
+rename -> ``.done`` commit marker) so index saves get the same crash
+consistency as training checkpoints:
+
+    <dir>/step_<N>/            manifest.json + leaf_<i>.npy  (the index;
+                               N increments per save, retention keeps 1)
+    <dir>/step_<N>.done        commit marker
+    <dir>/ingest/              ingest_manifest.json + ingest_arrays.npz
+                               (frozen vocab/corpus-stats, when given)
+
+``load_index`` needs no caller-provided template: ``HybridIndex`` is a
+registered dataclass pytree with a fixed structure, so the treedef comes
+from a structural dummy and the leaf shapes come from the manifest —
+``restore_checkpoint`` then does the validated load.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    all_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.core.index import HybridIndex
+from repro.core.usms import FusedVectors, SparseVec
+
+INGEST_SUBDIR = "ingest"  # legacy flat layout, still readable
+INGEST_STEP_PREFIX = "ingest_step_"
+
+
+def save_index(
+    directory: str | os.PathLike,
+    index: HybridIndex,
+    *,
+    ingest=None,
+    keep: int = 1,
+) -> None:
+    """Atomically persist ``index`` (and, when given, the fitted
+    ``ingest.IngestPipeline`` whose frozen stats produced its vectors — an
+    index queried through a DIFFERENT analyzer/stats is silently wrong).
+
+    Each save writes a FRESH step number (like training checkpoints): the
+    previous committed step is only garbage-collected by retention AFTER
+    the new one's ``.done`` marker lands, so a crash mid-save always leaves
+    a committed index behind. Re-using a fixed step would instead hit
+    ``save_checkpoint``'s overwrite path, which deletes the old step dir
+    before the rename.
+
+    Pairing: the ingest manifest is written to ``ingest_step_<N>`` BEFORE
+    index step N commits, and ``load_ingest`` reads the manifest of the
+    latest COMMITTED index step — so a crash anywhere in the sequence can
+    never pair a new index with stale stats (or vice versa)."""
+    directory = pathlib.Path(directory)
+    steps = all_steps(directory)
+    step = steps[-1] + 1 if steps else 0
+    if ingest is not None:
+        ingest.save(directory / f"{INGEST_STEP_PREFIX}{step}")
+    save_checkpoint(directory, step, index, keep=keep)
+    # GC ingest manifests whose index step was retention-collected
+    kept = set(all_steps(directory))
+    for d in directory.glob(INGEST_STEP_PREFIX + "*"):
+        try:
+            s = int(d.name[len(INGEST_STEP_PREFIX):])
+        except ValueError:
+            continue
+        if s not in kept and s != step:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def _structural_dummy() -> HybridIndex:
+    """Any HybridIndex: only its treedef matters (shapes come from the
+    manifest)."""
+    zi = np.zeros((1, 1), np.int32)
+    zf = np.zeros((1, 1), np.float32)
+    return HybridIndex(
+        corpus=FusedVectors(zf, SparseVec(zi, zf), SparseVec(zi, zf)),
+        semantic_edges=zi,
+        keyword_edges=zi,
+        logical_edges=np.zeros((1, 1, 4), np.int32),
+        doc_entities=zi,
+        entity_to_docs=zi,
+        entity_adj=np.zeros((1, 1), bool),
+        entry_points=np.zeros((1,), np.int32),
+        alive=np.zeros((1,), bool),
+        self_ip=np.zeros((1,), np.float32),
+    )
+
+
+def load_index(
+    directory: str | os.PathLike, *, step: Optional[int] = None
+) -> HybridIndex:
+    """Restore a saved index. Only committed steps (``.done`` marker) are
+    trusted, per the checkpoint layout's atomic-rename contract."""
+    directory = pathlib.Path(directory)
+    steps = all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed index checkpoint under {directory}")
+    step = steps[-1] if step is None else step
+    if step not in steps:
+        raise FileNotFoundError(f"step {step} not committed under {directory}")
+    with open(directory / f"step_{step}" / "manifest.json") as f:
+        manifest = json.load(f)
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten(_structural_dummy())
+    if len(flat) != len(manifest["leaves"]):
+        raise ValueError(
+            f"manifest has {len(manifest['leaves'])} leaves but HybridIndex "
+            f"flattens to {len(flat)} — not an index checkpoint?"
+        )
+    template = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            np.zeros(tuple(m["shape"]), np.dtype(m["dtype"]))
+            for m in manifest["leaves"]
+        ],
+    )
+    return restore_checkpoint(directory, step, template)
+
+
+def load_ingest(directory: str | os.PathLike):
+    """Load the ingestion vocab/corpus-stats manifest PAIRED with the
+    latest committed index step (returns a fitted ``IngestPipeline``).
+    Falls back to the legacy flat ``ingest/`` layout."""
+    from repro.ingest.pipeline import IngestPipeline
+
+    directory = pathlib.Path(directory)
+    steps = all_steps(directory)
+    if steps:
+        stepped = directory / f"{INGEST_STEP_PREFIX}{steps[-1]}"
+        if stepped.exists():
+            return IngestPipeline.load(stepped)
+    return IngestPipeline.load(directory / INGEST_SUBDIR)

@@ -274,6 +274,17 @@ def _search_one(
     return out_ids, top, n_expanded
 
 
+# incremented once per trace of search_padded (the Python body only runs
+# when jit misses its cache) — the observable the shape-bucketing tests
+# assert on: retraces == compiles for this entry point
+_TRACE_COUNT = [0]
+
+
+def search_padded_trace_count() -> int:
+    """Process-wide number of ``search_padded`` (re)traces so far."""
+    return _TRACE_COUNT[0]
+
+
 @partial(jax.jit, static_argnames=("params",))
 def search_padded(
     index: HybridIndex,
@@ -293,6 +304,7 @@ def search_padded(
     layer AOT-compiles per (bucket shape, SearchParams); ``search()`` is the
     convenience wrapper that fabricates the pad arrays.
     """
+    _TRACE_COUNT[0] += 1
     b = queries.dense.shape[0]
     qw = weighted_query(queries, weights)
     w_kg = jnp.broadcast_to(jnp.asarray(weights.kg, jnp.float32), (b,))

@@ -1,0 +1,25 @@
+"""Text ingestion: raw documents -> USMS vectors, keywords, KG triplets."""
+
+from repro.ingest.analyzer import AnalyzerConfig, tokenize
+from repro.ingest.entities import EntityVocab, extract_entity_spans
+from repro.ingest.pipeline import (
+    EncodedQueries,
+    IngestConfig,
+    IngestedCorpus,
+    IngestPipeline,
+    NotFittedError,
+)
+from repro.ingest.weighting import CorpusStats
+
+__all__ = [
+    "AnalyzerConfig",
+    "tokenize",
+    "EntityVocab",
+    "extract_entity_spans",
+    "EncodedQueries",
+    "IngestConfig",
+    "IngestedCorpus",
+    "IngestPipeline",
+    "NotFittedError",
+    "CorpusStats",
+]

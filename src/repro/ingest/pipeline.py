@@ -1,0 +1,431 @@
+"""Corpus-level ingestion: raw documents -> everything the index consumes.
+
+``IngestPipeline`` batches documents through the analyzer, the BM25/TF-IDF
+weighting, and the entity extractor, producing in one fitting pass:
+
+  * ``FusedVectors`` — hashed-projection dense + TF-IDF learned-sparse +
+    BM25 lexical ELL vectors (the lexical ids double as the keyword set
+    K(·) consumed by keyword edges and keyword-constrained search);
+  * ``doc_entities`` (N, Ed) + ``KnowledgeGraph``-compatible (s, r, t)
+    triplets for ``logical_edges.build_logical_edges``;
+  * frozen ``CorpusStats`` (df, avg doc length) + frozen ``EntityVocab``.
+
+After ``fit`` the statistics are FROZEN: ``encode_docs``/``encode_queries``
+weight new text with the fitted df/avg_dl and only recognize fitted
+entities. That is the streaming contract — vectors of already-indexed
+documents never change value, inserts through ``SegmentRouter.insert`` stay
+pure appends, and sealed-segment executables stay warm (DESIGN.md §7).
+
+Query side: the SAME tokenizer produces the query ``SparseVec`` pair,
+double-quoted phrases become *required* keywords, and capitalized spans
+matched against the frozen entity vocab become query entities — the three
+operands ``search``/``HybridSearchService.search`` take.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.build_pipeline import build_index
+from repro.core.index import BuildConfig, HybridIndex
+from repro.core.usms import PAD_IDX, FusedVectors
+from repro.data.corpus import KnowledgeGraph
+from repro.ingest.analyzer import (
+    AnalyzerConfig,
+    learned_id,
+    lexical_id,
+    quoted_phrases,
+    term_counts,
+    tokenize,
+)
+from repro.ingest.entities import (
+    EntityVocab,
+    cooccurrence_triplets,
+    doc_entity_ids,
+    extract_entity_spans,
+)
+from repro.ingest.weighting import (
+    CorpusStats,
+    bm25_weights,
+    hashed_dense_embedding,
+    make_projection,
+    tfidf_weights,
+    to_ell,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestConfig:
+    analyzer: AnalyzerConfig = AnalyzerConfig()
+    d_dense: int = 64
+    nnz_learned: int = 32  # doc-side ELL caps (top-P terms per doc)
+    nnz_lexical: int = 16
+    nnz_query_learned: int = 16
+    nnz_query_lexical: int = 8
+    query_keyword_cap: int = 4  # required-keyword slots per query
+    query_entity_cap: int = 2
+    max_entities: int = 512
+    entities_per_doc: int = 4
+    min_cooc: int = 2  # docs an entity pair must share to earn a triplet
+    normalize_sparse: bool = True  # L2-balance sparse rows against dense
+    embed_seed: int = 0
+    gazetteer: tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class IngestedCorpus:
+    """Fit output: exactly what ``build_index``/``build_segmented_index``
+    consume, plus the KG for the router."""
+
+    docs: FusedVectors
+    doc_entities: np.ndarray  # (N, Ed) int32 PAD-padded
+    kg: KnowledgeGraph
+    doc_lengths: np.ndarray  # (N,) analyzed token counts (diagnostics)
+
+    @property
+    def n_docs(self) -> int:
+        return self.docs.dense.shape[0]
+
+
+@dataclasses.dataclass
+class EncodedQueries:
+    """Query-side encoding: the three operands the search path takes."""
+
+    vectors: FusedVectors
+    keywords: np.ndarray  # (B, Kw) required keyword ids, PAD-padded
+    entities: np.ndarray  # (B, Eq) entity ids, PAD-padded
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class IngestPipeline:
+    """One-pass fit, frozen-stats encode, and index assembly."""
+
+    def __init__(self, config: Optional[IngestConfig] = None):
+        self.config = config or IngestConfig()
+        self.stats: Optional[CorpusStats] = None
+        self.entity_vocab: Optional[EntityVocab] = None
+        self.n_triplets: int = 0  # 0 => indexes built from this fit carry no KG
+        self._projection: Optional[np.ndarray] = None
+
+    # -- fitting ------------------------------------------------------------
+
+    @property
+    def fitted(self) -> bool:
+        return self.stats is not None
+
+    def _require_fitted(self):
+        if not self.fitted:
+            raise NotFittedError(
+                "IngestPipeline.fit(texts) must run before encoding: the "
+                "frozen corpus stats (df, avg_dl) and entity vocab are what "
+                "keep streamed vectors consistent with the sealed index"
+            )
+
+    @property
+    def projection(self) -> np.ndarray:
+        if self._projection is None:
+            self._projection = make_projection(
+                self.config.analyzer.vocab_size, self.config.d_dense,
+                self.config.embed_seed,
+            )
+        return self._projection
+
+    def fit(self, texts: Sequence[str]) -> IngestedCorpus:
+        """One pass over the corpus: analyze, accumulate df/avg_dl, build
+        the entity vocab + co-occurrence triplets, then encode every doc
+        with the just-frozen statistics."""
+        if self.fitted:
+            raise RuntimeError(
+                "pipeline already fitted; stats are frozen — use "
+                "encode_docs() for new documents or a fresh pipeline to refit"
+            )
+        cfg = self.config
+        acfg = cfg.analyzer
+        learned, lexical, lengths = self._analyze(texts)
+        self.stats = CorpusStats.from_docs(
+            learned, lexical, lengths, acfg.vocab_size, acfg.lexical_vocab_size
+        )
+
+        from collections import Counter
+
+        spans = [
+            extract_entity_spans(t, gazetteer=cfg.gazetteer or None)
+            for t in texts
+        ]
+        self.entity_vocab = EntityVocab.build(
+            Counter(s for doc in spans for s in doc), cfg.max_entities
+        )
+        doc_ents = doc_entity_ids(spans, self.entity_vocab, cfg.entities_per_doc)
+        triplets = cooccurrence_triplets(
+            doc_ents, len(self.entity_vocab), cfg.min_cooc
+        )
+        self.n_triplets = int(len(triplets))
+        kg = KnowledgeGraph(triplets, n_entities=max(len(self.entity_vocab), 1))
+
+        docs = self._encode_counts(
+            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical
+        )
+        return IngestedCorpus(
+            docs=docs,
+            doc_entities=doc_ents,
+            kg=kg,
+            doc_lengths=np.asarray(lengths, np.int32),
+        )
+
+    # -- frozen-stats encoding ----------------------------------------------
+
+    def _analyze(self, texts: Sequence[str]):
+        """The one analysis path (docs AND queries): tokenize once, fold
+        into both hashed id spaces, keep analyzed lengths."""
+        acfg = self.config.analyzer
+        analyzed = [tokenize(t, acfg) for t in texts]
+        return (
+            [term_counts(a, learned_id, acfg) for a in analyzed],
+            [term_counts(a, lexical_id, acfg) for a in analyzed],
+            [len(a) for a in analyzed],
+        )
+
+    def _encode_counts(self, learned, lexical, lengths, nnz_l, nnz_f) -> FusedVectors:
+        tfidf_rows = [tfidf_weights(c, self.stats) for c in learned]
+        bm25_rows = [
+            bm25_weights(c, dl, self.stats) for c, dl in zip(lexical, lengths)
+        ]
+        dense = hashed_dense_embedding(tfidf_rows, self.projection)
+        norm = self.config.normalize_sparse
+        return FusedVectors(
+            dense,
+            to_ell(tfidf_rows, nnz_l, normalize=norm),
+            to_ell(bm25_rows, nnz_f, normalize=norm),
+        )
+
+    def encode_docs(
+        self, texts: Sequence[str]
+    ) -> tuple[FusedVectors, np.ndarray]:
+        """Encode new documents with the FROZEN stats (streaming path).
+        Entities unseen at fit time map to PAD (dropped until a refit)."""
+        self._require_fitted()
+        cfg = self.config
+        learned, lexical, lengths = self._analyze(texts)
+        docs = self._encode_counts(
+            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical
+        )
+        spans = [
+            extract_entity_spans(t, gazetteer=cfg.gazetteer or None)
+            for t in texts
+        ]
+        ents = doc_entity_ids(spans, self.entity_vocab, cfg.entities_per_doc)
+        return docs, ents
+
+    def encode_queries(self, texts: Sequence[str]) -> EncodedQueries:
+        """Same tokenizer on the query side: TF-IDF/BM25 query vectors,
+        double-quoted phrases -> required keywords, capitalized spans
+        matched against the frozen vocab -> query entities.
+
+        Keyword semantics: a doc's keyword set K(doc) is its TOP-
+        ``nnz_lexical`` BM25 terms (the fixed-nnz ELL contract), not its
+        full term set — a required keyword only matches docs where the term
+        ranks among their strongest; quote *distinctive* terms. Raising
+        ``IngestConfig.nnz_lexical`` widens the set at index-build time."""
+        self._require_fitted()
+        cfg = self.config
+        acfg = cfg.analyzer
+        learned, lexical, lengths = self._analyze(texts)
+        vectors = self._encode_counts(
+            learned, lexical, lengths, cfg.nnz_query_learned, cfg.nnz_query_lexical
+        )
+
+        b = len(texts)
+        kw = np.full((b, max(cfg.query_keyword_cap, 1)), PAD_IDX, np.int32)
+        en = np.full((b, max(cfg.query_entity_cap, 1)), PAD_IDX, np.int32)
+        for i, text in enumerate(texts):
+            req: list[int] = []
+            for phrase in quoted_phrases(text):
+                for term in tokenize(phrase, acfg):
+                    tid = lexical_id(term, acfg)
+                    if tid not in req:
+                        req.append(tid)
+            kw[i, : len(req[: cfg.query_keyword_cap])] = req[: cfg.query_keyword_cap]
+            ents: list[int] = []
+            for span in extract_entity_spans(
+                text, gazetteer=cfg.gazetteer or None
+            ):
+                e = self.entity_vocab.lookup(span)
+                if e != PAD_IDX and e not in ents:
+                    ents.append(e)
+            en[i, : len(ents[: cfg.query_entity_cap])] = ents[: cfg.query_entity_cap]
+        return EncodedQueries(vectors=vectors, keywords=kw, entities=en)
+
+    # -- index assembly -----------------------------------------------------
+
+    def _kg_kwargs(self, ingested: IngestedCorpus) -> dict:
+        if len(ingested.kg.triplets) == 0:
+            return {}
+        return dict(
+            kg_triplets=ingested.kg.triplets,
+            doc_entities=ingested.doc_entities,
+            n_entities=ingested.kg.n_entities,
+        )
+
+    def build(
+        self,
+        ingested: IngestedCorpus,
+        build_cfg: Optional[BuildConfig] = None,
+        *,
+        key=None,
+    ) -> HybridIndex:
+        """Hand the fitted corpus to ``build_index`` (Algorithm 1)."""
+        return build_index(
+            ingested.docs, build_cfg or BuildConfig(), key=key,
+            **self._kg_kwargs(ingested),
+        )
+
+    def build_sharded(
+        self,
+        ingested: IngestedCorpus,
+        n_segments: int,
+        build_cfg: Optional[BuildConfig] = None,
+        *,
+        mesh=None,
+        key=None,
+    ):
+        """Segment-sharded build (``SegmentedIndex`` for the serving layer):
+        with a ``mesh``, every segment builds in parallel across the devices
+        (``build_index_sharded``); without one, the same per-segment program
+        runs sequentially (``build_segmented_index``)."""
+        from repro.core.distributed import (
+            build_index_sharded,
+            build_segmented_index,
+        )
+
+        if mesh is not None:
+            return build_index_sharded(
+                ingested.docs, n_segments, build_cfg or BuildConfig(),
+                mesh=mesh, key=key, **self._kg_kwargs(ingested),
+            )
+        return build_segmented_index(
+            ingested.docs, n_segments, build_cfg or BuildConfig(), key=key,
+            **self._kg_kwargs(ingested),
+        )
+
+    def stream_into(
+        self,
+        target,
+        texts: Sequence[str],
+        *,
+        key=None,
+        with_entities: Optional[bool] = None,
+    ) -> int:
+        """Streaming ingestion: encode ``texts`` with the frozen stats and
+        insert them through ``target.insert`` (a ``HybridSearchService`` or
+        ``SegmentRouter``). Entities ride along exactly when the fit
+        produced triplets — the same condition under which ``build``/
+        ``build_sharded`` gave the index a KG (and the router its entity
+        width); a triplet-less fit built a KG-less index whose inserts must
+        not carry entity rows. Override with ``with_entities``. Returns the
+        target's new snapshot version."""
+        self._require_fitted()
+        docs, ents = self.encode_docs(texts)
+        if with_entities is None:
+            with_entities = self.n_triplets > 0
+        kwargs = {"new_doc_entities": ents} if with_entities else {}
+        return target.insert(docs, key=key, **kwargs)
+
+    # -- persistence (the ingestion side of save_index/load_index) ----------
+
+    MANIFEST = "ingest_manifest.json"
+    ARRAYS = "ingest_arrays.npz"
+
+    @staticmethod
+    def _old_prefix(directory: pathlib.Path) -> str:
+        # recovery copies are namespaced per target directory, so sibling
+        # ingest dirs under one parent can never clean up or recover each
+        # other's copies
+        return f".old_{directory.name}_"
+
+    def save(self, directory: str | os.PathLike) -> None:
+        """Vocab/corpus-stats manifest written crash-safely (tmp dir +
+        rename, with any previous manifest renamed aside rather than
+        deleted, so no failure window destroys the only copy)."""
+        self._require_fitted()
+        directory = pathlib.Path(directory)
+        directory.parent.mkdir(parents=True, exist_ok=True)
+        tmp = pathlib.Path(
+            tempfile.mkdtemp(dir=directory.parent, prefix=".tmp_ingest_")
+        )
+        cfg = dataclasses.asdict(self.config)
+        manifest = {
+            "config": cfg,
+            "stats": {"n_docs": self.stats.n_docs, "avg_dl": self.stats.avg_dl},
+            "entity_names": list(self.entity_vocab.names),
+            "n_triplets": self.n_triplets,
+        }
+        (tmp / self.MANIFEST).write_text(json.dumps(manifest))
+        np.savez(
+            tmp / self.ARRAYS,
+            df_learned=self.stats.df_learned,
+            df_lexical=self.stats.df_lexical,
+        )
+        # crash safety: the old manifest is renamed aside (never deleted in
+        # place) before the new one swings in, and ``load`` falls back to
+        # the newest ``.old_ingest_*`` sibling — so a crash at ANY point
+        # leaves a loadable copy (old or new)
+        old = None
+        if directory.exists():
+            old = pathlib.Path(
+                tempfile.mkdtemp(
+                    dir=directory.parent, prefix=self._old_prefix(directory)
+                )
+            )
+            os.rmdir(old)
+            os.rename(directory, old)
+        os.rename(tmp, directory)
+        # clean our renamed-aside copy AND any stale one a crashed earlier
+        # save of THIS directory left behind — a successful save means the
+        # committed copy at ``directory`` supersedes every recovery copy
+        for stale in directory.parent.glob(self._old_prefix(directory) + "*"):
+            shutil.rmtree(stale, ignore_errors=True)
+
+    @classmethod
+    def load(cls, directory: str | os.PathLike) -> "IngestPipeline":
+        directory = pathlib.Path(directory)
+        if not (directory / cls.MANIFEST).exists():
+            # a save crashed between its two renames: the committed copy
+            # lives in the newest renamed-aside copy OF THIS directory
+            olds = sorted(
+                (d for d in directory.parent.glob(cls._old_prefix(directory) + "*")
+                 if (d / cls.MANIFEST).exists()),
+                key=lambda d: d.stat().st_mtime,
+            )
+            if not olds:
+                raise FileNotFoundError(
+                    f"no ingest manifest at {directory} (and no "
+                    f"renamed-aside copy to recover)"
+                )
+            directory = olds[-1]
+        manifest = json.loads((directory / cls.MANIFEST).read_text())
+        cfg_d = dict(manifest["config"])
+        a = dict(cfg_d.pop("analyzer"))
+        a["extra_stopwords"] = tuple(a.get("extra_stopwords", ()))
+        cfg_d["gazetteer"] = tuple(cfg_d.get("gazetteer", ()))
+        pipe = cls(IngestConfig(analyzer=AnalyzerConfig(**a), **cfg_d))
+        arrays = np.load(directory / cls.ARRAYS)
+        pipe.stats = CorpusStats(
+            n_docs=int(manifest["stats"]["n_docs"]),
+            avg_dl=float(manifest["stats"]["avg_dl"]),
+            df_learned=arrays["df_learned"],
+            df_lexical=arrays["df_lexical"],
+        )
+        pipe.entity_vocab = EntityVocab(names=list(manifest["entity_names"]))
+        pipe.n_triplets = int(manifest.get("n_triplets", 0))
+        return pipe

@@ -12,6 +12,13 @@ keywords and entities. The pipeline is:
   2. retrieved doc ids -> context token prefixes (a real deployment detok-
      enizes documents; the synthetic corpus maps doc ids to token spans);
   3. batched generation conditioned on [context ; prompt].
+
+With an attached ``ingest.IngestPipeline`` the request side starts from raw
+text: ``retrieve_text``/``answer_text`` run the SAME analyzer the corpus was
+ingested with — query dense + TF-IDF/BM25 SparseVec, double-quoted phrases
+as required keywords, capitalized spans matched against the frozen entity
+vocab as query entities — so "bring your own documents" deployments query
+with strings, not hand-built FusedVectors.
 """
 
 from __future__ import annotations
@@ -48,12 +55,20 @@ class RagPipeline:
         cfg: RagConfig,
         *,
         service: Optional[HybridSearchService] = None,
+        ingest=None,  # ingest.IngestPipeline (fitted) for text queries
     ):
         self.engine = engine
         self.index = index
         self.doc_tokens = doc_tokens
         self.cfg = cfg
         self.service = service
+        self.ingest = ingest
+        if ingest is not None and not getattr(ingest, "fitted", False):
+            raise ValueError(
+                "RagPipeline needs a FITTED IngestPipeline: the query-side "
+                "analyzer must use the same frozen corpus stats the index "
+                "was built from"
+            )
         if service is not None:
             # retrieval runs with the service's SearchParams; refuse a config
             # that silently diverges from it (k may differ: the service caps
@@ -88,6 +103,36 @@ class RagPipeline:
         return search(
             self.index, queries, self.cfg.weights, params,
             keywords=keywords, entities=entities,
+        )
+
+    def retrieve_text(self, texts) -> SearchResult:
+        """Raw query strings -> hybrid retrieval via the attached ingestion
+        analyzer (query SparseVec + required keywords + query entities)."""
+        if self.ingest is None:
+            raise ValueError(
+                "retrieve_text requires an IngestPipeline at construction"
+            )
+        enc = self.ingest.encode_queries(list(texts))
+        return self.retrieve(
+            enc.vectors,
+            keywords=jnp.asarray(enc.keywords),
+            entities=jnp.asarray(enc.entities),
+        )
+
+    def answer_text(
+        self, texts, prompts: jax.Array, n_tokens: int
+    ) -> tuple[jax.Array, SearchResult]:
+        """Text-query counterpart of ``answer`` (same retrieval-to-
+        generation tail; only the query encoding differs)."""
+        if self.ingest is None:
+            raise ValueError(
+                "answer_text requires an IngestPipeline at construction"
+            )
+        enc = self.ingest.encode_queries(list(texts))
+        return self.answer(
+            enc.vectors, prompts, n_tokens,
+            keywords=jnp.asarray(enc.keywords),
+            entities=jnp.asarray(enc.entities),
         )
 
     def build_context(self, result: SearchResult) -> jax.Array:

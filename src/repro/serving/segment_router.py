@@ -14,7 +14,10 @@ module closes that gap with the classic vector-DB grow-segment scheme
     pipelined per-segment insert program). Sealed segments are never
     touched, so their compiled executables stay warm; the read path merges
     sealed + grow per-row top-k in global-id space
-    (``HybridSearchService._merge_grow``);
+    (``HybridSearchService._merge_grow``). The published grow segment is
+    padded to power-of-two capacity by default (``RouterConfig.grow_pow2``)
+    so the read path's ``search_padded`` retraces O(log growth) times
+    between compactions instead of once per insert batch;
   * **sealed** — the immutable stacked segments served through
     ``make_distributed_search_padded``'s cached executable. Deletions
     resolve global ids to (segment, local row) tombstones
@@ -64,9 +67,14 @@ from repro.core.distributed import (
     place_segmented_index,
     resolve_global_ids,
 )
-from repro.core.index import BuildConfig, mark_deleted as index_mark_deleted
+from repro.core.index import (
+    BuildConfig,
+    HybridIndex,
+    mark_deleted as index_mark_deleted,
+)
 from repro.core.search import SearchParams
-from repro.core.usms import PAD_IDX, FusedVectors
+from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+from repro.serving.batcher import _next_pow2
 from repro.serving.hybrid_service import HybridSearchService
 
 
@@ -80,6 +88,62 @@ class RouterConfig:
     # opt-in acknowledgement that compacting a KG-bearing index WITHOUT
     # giving the router the triplets permanently drops the entity paths
     allow_kg_loss_on_compact: bool = False
+    # shape-bucket the PUBLISHED grow segment: pad its capacity to the next
+    # power of two so the read path's search_padded retraces O(log growth)
+    # times between compactions instead of once per insert batch (pad rows
+    # are dead — alive=False, PAD edges — and unreachable: no entry point or
+    # edge ever references them)
+    grow_pow2: bool = True
+
+
+def _map_grow_rows(index: HybridIndex, fn) -> HybridIndex:
+    """Apply ``fn(array, pad_fill)`` to every per-row (axis-0 == N) leaf of a
+    grow-segment index; entity tables and entry points are N-independent."""
+    return dataclasses.replace(
+        index,
+        corpus=FusedVectors(
+            fn(index.corpus.dense, 0),
+            SparseVec(
+                fn(index.corpus.learned.idx, PAD_IDX),
+                fn(index.corpus.learned.val, 0),
+            ),
+            SparseVec(
+                fn(index.corpus.lexical.idx, PAD_IDX),
+                fn(index.corpus.lexical.val, 0),
+            ),
+        ),
+        semantic_edges=fn(index.semantic_edges, PAD_IDX),
+        keyword_edges=fn(index.keyword_edges, PAD_IDX),
+        logical_edges=fn(index.logical_edges, PAD_IDX),
+        doc_entities=fn(index.doc_entities, PAD_IDX),
+        alive=fn(index.alive, False),
+        self_ip=fn(index.self_ip, 0.0),
+    )
+
+
+def pad_grow_to_capacity(index: HybridIndex, capacity: int) -> HybridIndex:
+    """Pad a grow segment's per-row arrays with DEAD rows up to ``capacity``
+    (shape-bucketing). Pad rows are unreachable by construction: entry
+    points and edges only reference real rows, ``alive`` is False, and the
+    grow-gid map never covers them."""
+    n = index.n
+    if capacity <= n:
+        return index
+
+    def pad(a, fill):
+        return jnp.concatenate(
+            [a, jnp.full((capacity - n,) + a.shape[1:], fill, a.dtype)]
+        )
+
+    return _map_grow_rows(index, pad)
+
+
+def slice_grow_rows(index: HybridIndex, n: int) -> HybridIndex:
+    """Drop a padded grow segment's dead tail (inverse of
+    ``pad_grow_to_capacity`` — the raw index inserts extend)."""
+    if index.n == n:
+        return index
+    return _map_grow_rows(index, lambda a, _fill: a[:n])
 
 
 @dataclasses.dataclass
@@ -140,11 +204,17 @@ class SegmentRouter:
             )
         gids = np.asarray(service._snap.index.global_ids)
         self._next_gid = int(gids.max()) + 1 if (gids >= 0).any() else 0
+        self._grow_raw: Optional[HybridIndex] = None
         if service._snap.grow_gids is not None:
             # re-attaching over a live grow segment: its ids are allocated
             # past the sealed ones and must never be handed out again
             self._next_gid = max(
                 self._next_gid, int(np.asarray(service._snap.grow_gids).max()) + 1
+            )
+            # recover the raw (unpadded) grow segment inserts extend — the
+            # published one may carry a pow2 dead-row tail
+            self._grow_raw = slice_grow_rows(
+                service._snap.grow, int(service._snap.grow_gids.shape[0])
             )
         service._router = self
 
@@ -152,13 +222,22 @@ class SegmentRouter:
 
     @property
     def grow_size(self) -> int:
-        """Rows in the grow segment (including tombstoned ones)."""
+        """Real rows in the grow segment (including tombstoned ones,
+        excluding pow2 shape-bucket padding)."""
+        gids = self.service._snap.grow_gids
+        return 0 if gids is None else int(gids.shape[0])
+
+    @property
+    def grow_capacity(self) -> int:
+        """Published grow-segment capacity (= grow_size rounded up to a
+        power of two when ``RouterConfig.grow_pow2`` is on)."""
         grow = self.service._snap.grow
         return 0 if grow is None else int(grow.n)
 
     @property
     def live_grow_size(self) -> int:
-        """Non-tombstoned grow docs — the seal-threshold measure."""
+        """Non-tombstoned grow docs — the seal-threshold measure (pad rows
+        are dead and never count)."""
         grow = self.service._snap.grow
         return 0 if grow is None else int(np.asarray(grow.alive).sum())
 
@@ -218,8 +297,11 @@ class SegmentRouter:
                 grow = build_index(new_docs, self.build_cfg, key=key, **kg_kwargs)
                 gids = jnp.asarray(new_gids)
             else:
+                # inserts always extend the RAW grow segment; the published
+                # one may carry a pow2 dead-row tail that must not become
+                # real neighbors
                 grow = index_insert(
-                    snap.grow,
+                    self._grow_raw,
                     new_docs,
                     self.build_cfg,
                     key=key,
@@ -228,6 +310,9 @@ class SegmentRouter:
                 )
                 gids = jnp.concatenate([snap.grow_gids, jnp.asarray(new_gids)])
             self._next_gid += n_new
+            self._grow_raw = grow
+            if self.config.grow_pow2:
+                grow = pad_grow_to_capacity(grow, _next_pow2(grow.n))
             svc._publish(snap.index, grow=grow, grow_gids=gids)
             self.stats.inserts += 1
             self.stats.inserted_docs += n_new
@@ -259,10 +344,13 @@ class SegmentRouter:
                 if in_grow.any():
                     # grow gids are allocated monotonically, so the map is
                     # sorted and searchsorted resolves local rows directly
-                    rows = np.searchsorted(gmap, ids[in_grow])
-                    grow = index_mark_deleted(
-                        grow, jnp.asarray(rows, jnp.int32)
+                    # (row indices are identical in the raw and the padded
+                    # view — padding only appends a dead tail)
+                    rows = jnp.asarray(
+                        np.searchsorted(gmap, ids[in_grow]), jnp.int32
                     )
+                    grow = index_mark_deleted(grow, rows)
+                    self._grow_raw = index_mark_deleted(self._grow_raw, rows)
             sealed = snap.index
             if in_sealed.any():
                 sealed = mark_deleted_segmented(
@@ -339,5 +427,6 @@ class SegmentRouter:
             )
             new_seg = place_segmented_index(new_seg, svc._mesh)
             svc._publish(new_seg, grow=None, grow_gids=None)
+            self._grow_raw = None
             self.stats.compactions += 1
             return svc._snap.version

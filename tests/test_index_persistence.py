@@ -1,0 +1,102 @@
+"""save_index/load_index: atomic manifest+leaf persistence of a HybridIndex
+plus the ingestion vocab/corpus-stats manifest (checkpoint/index_io.py)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import load_index, load_ingest, save_index
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams, search
+from repro.core.usms import PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+
+BUILD_CFG = BuildConfig(
+    knn=KnnConfig(k=12, iters=3, node_chunk=256),
+    prune=PruneConfig(degree=12, keyword_degree=4, node_chunk=128),
+    path_refine_iters=0,
+)
+PARAMS = SearchParams(k=8, iters=16, pool_size=48)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=160, n_queries=8, n_topics=8, d_dense=24,
+                     nnz_sparse=10, nnz_lexical=8, seed=5)
+    )
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_index(
+        corpus.docs, BUILD_CFG,
+        kg_triplets=corpus.kg.triplets,
+        doc_entities=corpus.doc_entities,
+        n_entities=corpus.kg.n_entities,
+    )
+
+
+def test_save_load_roundtrip_exact(corpus, index, tmp_path):
+    save_index(tmp_path / "idx", index)
+    # the atomic layout: committed step dir + .done marker
+    assert (tmp_path / "idx" / "step_0" / "manifest.json").exists()
+    assert (tmp_path / "idx" / "step_0.done").exists()
+
+    loaded = load_index(tmp_path / "idx")
+    for a, b in zip(jax.tree.leaves(index), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the restored index answers searches identically
+    w = PathWeights.three_path()
+    r0 = search(index, corpus.queries, w, PARAMS)
+    r1 = search(loaded, corpus.queries, w, PARAMS)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_allclose(
+        np.asarray(r0.scores), np.asarray(r1.scores), rtol=1e-6
+    )
+
+
+def test_load_missing_or_uncommitted_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_index(tmp_path / "nope")
+    # an uncommitted step (no .done marker) is invisible to readers
+    d = tmp_path / "torn"
+    (d / "step_0").mkdir(parents=True)
+    (d / "step_0" / "manifest.json").write_text("{}")
+    with pytest.raises(FileNotFoundError):
+        load_index(d)
+
+
+def test_save_index_with_ingest_manifest(tmp_path):
+    from repro.ingest import IngestConfig, IngestPipeline
+
+    texts = [
+        "Galileo pointed the telescope at Jupiter and drew the moons.",
+        "The sourdough starter wants rye flour and warm water.",
+        "Magellan crossed the Pacific after the strait.",
+        "Stephenson's Rocket won the trials at Rainhill.",
+        "Amundsen laid depots across the Ross Ice Shelf.",
+        "The Jacquard loom read punched cards to weave silk.",
+        "Krakatoa collapsed into a caldera under the sea.",
+        "Capablanca steered the game into a rook endgame.",
+    ] * 4
+    pipe = IngestPipeline(IngestConfig(d_dense=16, nnz_learned=8, nnz_lexical=6))
+    ingested = pipe.fit(texts)
+    idx = pipe.build(ingested, BUILD_CFG)
+
+    save_index(tmp_path / "idx", idx, ingest=pipe)
+    loaded_idx = load_index(tmp_path / "idx")
+    loaded_pipe = load_ingest(tmp_path / "idx")
+
+    # the restored (index, pipeline) pair serves text queries equivalently
+    q0 = pipe.encode_queries(["who drew the moons of Jupiter?"])
+    q1 = loaded_pipe.encode_queries(["who drew the moons of Jupiter?"])
+    for a, b in zip(jax.tree.leaves(q0.vectors), jax.tree.leaves(q1.vectors)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r0 = search(idx, q0.vectors, PathWeights.three_path(), PARAMS)
+    r1 = search(loaded_idx, q1.vectors, PathWeights.three_path(), PARAMS)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))

@@ -1,0 +1,235 @@
+"""Text ingestion subsystem: analyzer determinism + round-trip, ELL
+invariants (hypothesis), end-to-end ingest -> build -> search recall on the
+bundled real-text corpus, and streaming ingest with frozen corpus stats
+through the SegmentRouter (sealed-executable cache stability)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig
+from repro.core.search import SearchParams, search
+from repro.core.usms import PAD_IDX, PathWeights
+from repro.data.corpus import recall_at_k
+from repro.data.textcorpus import load_bundled_corpus, topic_truth
+from repro.ingest import IngestConfig, IngestPipeline, NotFittedError
+from repro.ingest.analyzer import AnalyzerConfig, fnv1a, learned_id, tokenize
+from repro.ingest.entities import extract_entity_spans
+
+BUILD_CFG = BuildConfig(
+    knn=KnnConfig(k=16, iters=4, node_chunk=128),
+    prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=128),
+    path_refine_iters=1,
+)
+PARAMS = SearchParams(k=10, iters=48, pool_size=64)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    corpus = load_bundled_corpus()
+    pipe = IngestPipeline(IngestConfig(d_dense=64))
+    ingested = pipe.fit(corpus.texts)
+    return pipe, ingested, corpus.texts, corpus.topics
+
+
+@pytest.fixture(scope="module")
+def text_index(fitted):
+    pipe, ingested, _, _ = fitted
+    return pipe.build(ingested, BUILD_CFG)
+
+
+# -- analyzer ---------------------------------------------------------------
+
+
+def test_analyzer_deterministic_and_stable():
+    cfg = AnalyzerConfig()
+    text = "The Rocket outran every rival at Rainhill in 1829."
+    assert tokenize(text, cfg) == tokenize(text, cfg)
+    # FNV-1a is specified, not platform hash: pin a known vector
+    assert fnv1a("rocket") == fnv1a("rocket")
+    assert fnv1a("") == 0xCBF29CE484222325
+    ids = [learned_id(t, cfg) for t in tokenize(text, cfg)]
+    assert all(0 <= i < cfg.vocab_size for i in ids)
+    # stopwords and short tokens are gone, case is folded
+    toks = tokenize(text, cfg)
+    assert "the" not in toks and "at" not in toks and "rocket" in toks
+
+
+def test_char_ngrams_optional():
+    cfg = AnalyzerConfig(char_ngrams=3)
+    toks = tokenize("weaving", cfg)
+    assert "weaving" in toks and "#wea" in toks and "#ing" in toks
+    assert "#wea" not in tokenize("weaving", AnalyzerConfig())
+
+
+def test_entity_extraction_rules():
+    spans = extract_entity_spans(
+        "In 1520 Magellan entered the strait. The fleet followed Magellan "
+        "to the Pacific. Storms wrecked the rigging."
+    )
+    assert "Magellan" in spans and "Pacific" in spans
+    # sentence-initial single capitalized words need corroboration
+    assert "Storms" not in spans
+    # leading determiners never glue onto a name run
+    assert all(not s.startswith("The ") for s in spans)
+
+
+def test_encode_requires_fit():
+    pipe = IngestPipeline()
+    with pytest.raises(NotFittedError):
+        pipe.encode_docs(["some text"])
+    with pytest.raises(NotFittedError):
+        pipe.encode_queries(["some text"])
+
+
+# -- ELL invariants (the exhaustive hypothesis variant lives in
+# tests/test_ingest_properties.py; this keeps a deterministic smoke check
+# in the hypothesis-less tier) ----------------------------------------------
+
+
+def test_ell_invariants_bundled_corpus(fitted):
+    _, ingested, texts, _ = fitted
+    for sv in (ingested.docs.learned, ingested.docs.lexical):
+        idx, val = np.asarray(sv.idx), np.asarray(sv.val)
+        assert idx.dtype == np.int32
+        assert (val[idx == PAD_IDX] == 0).all()
+        assert (val[idx != PAD_IDX] > 0).all()
+        for row in idx:
+            real = row[row >= 0]
+            assert len(set(real.tolist())) == len(real)  # unique ids per row
+            real_mask = row >= 0  # PAD only ever trails real ids
+            assert not (~real_mask[:-1] & real_mask[1:]).any()
+    norms = np.linalg.norm(np.asarray(ingested.docs.dense), axis=-1)
+    assert ((np.abs(norms - 1.0) < 1e-4) | (norms == 0)).all()
+
+
+# -- round-trip persistence of the vocab/corpus-stats manifest ---------------
+
+
+def test_pipeline_save_load_roundtrip(fitted, tmp_path):
+    pipe, _, texts, _ = fitted
+    pipe.save(tmp_path / "ingest")
+    loaded = IngestPipeline.load(tmp_path / "ingest")
+    assert loaded.fitted
+    assert loaded.entity_vocab.names == pipe.entity_vocab.names
+    a_docs, a_ents = pipe.encode_docs(texts[:5])
+    b_docs, b_ents = loaded.encode_docs(texts[:5])
+    for a, b in zip(jax.tree.leaves(a_docs), jax.tree.leaves(b_docs)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(a_ents, b_ents)
+    qa = pipe.encode_queries(['"rye" sourdough starter'])
+    qb = loaded.encode_queries(['"rye" sourdough starter'])
+    np.testing.assert_array_equal(qa.keywords, qb.keywords)
+
+
+# -- end-to-end: ingest -> build -> search on the bundled corpus -------------
+
+
+def test_e2e_recall_floor_and_hybrid_lift(fitted, text_index):
+    pipe, ingested, texts, topics = fitted
+    corpus = load_bundled_corpus()
+    enc = pipe.encode_queries(corpus.query_texts)
+    truth = topic_truth(corpus.query_topics, topics)
+
+    dense = search(
+        text_index, enc.vectors, PathWeights.make(1, 0, 0), PARAMS
+    )
+    hybrid = search(
+        text_index, enc.vectors, PathWeights.three_path(), PARAMS
+    )
+    r_dense = recall_at_k(np.asarray(dense.ids), truth)
+    r_hybrid = recall_at_k(np.asarray(hybrid.ids), truth)
+    # the lexical path must lift accuracy on real text (acceptance criterion)
+    assert r_hybrid >= r_dense
+    assert r_hybrid >= 0.25  # absolute floor on the bundled corpus
+
+
+def test_query_keywords_constrain_results(fitted, text_index):
+    pipe, ingested, texts, topics = fitted
+    # the quoted phrase becomes a REQUIRED keyword: every returned doc must
+    # contain its lexical id
+    enc = pipe.encode_queries(['the voyage home "scurvy"'])
+    assert (enc.keywords[0] >= 0).sum() == 1
+    res = search(
+        text_index, enc.vectors, PathWeights.three_path(),
+        SearchParams(k=10, iters=48, pool_size=64, use_keywords=True),
+        keywords=enc.keywords,
+    )
+    kw = int(enc.keywords[0, 0])
+    lex = np.asarray(ingested.docs.lexical.idx)
+    for doc in np.asarray(res.ids)[0]:
+        if doc >= 0:
+            assert kw in lex[doc]
+
+
+def test_query_entities_resolve_against_frozen_vocab(fitted):
+    pipe, ingested, _, _ = fitted
+    enc = pipe.encode_queries(
+        ["What did Amundsen find at the pole?", "no entities here at all"]
+    )
+    assert enc.entities[0, 0] == pipe.entity_vocab.lookup("Amundsen")
+    assert (enc.entities[1] == PAD_IDX).all()
+
+
+# -- streaming ingest: frozen stats -> SegmentRouter.insert ------------------
+
+
+def test_streaming_ingest_preserves_sealed_executables(fitted):
+    """The acceptance criterion: new raw documents stream through the frozen
+    pipeline into the grow segment; already-ingested vectors are unchanged
+    (frozen stats) and NO sealed-segment executable is evicted."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import place_segmented_index
+    from repro.serving.batcher import BatcherConfig
+    from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+    from repro.serving.segment_router import RouterConfig, SegmentRouter
+
+    pipe, ingested, texts, topics = fitted
+    n0 = 100  # sealed docs; the rest stream in
+
+    sealed_pipe = IngestPipeline(IngestConfig(d_dense=64))
+    sealed_ing = sealed_pipe.fit(texts[:n0])
+    seg = sealed_pipe.build_sharded(sealed_ing, 1, BUILD_CFG)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    seg = place_segmented_index(seg, mesh)
+    svc = HybridSearchService(
+        seg, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(flush_size=4, max_batch=4,
+                                            flush_deadline_s=60.0)),
+        mesh=mesh,
+    )
+    SegmentRouter(
+        svc, BUILD_CFG, RouterConfig(seal_threshold=10**9),
+        kg_triplets=sealed_ing.kg.triplets,
+        n_entities=sealed_ing.kg.n_entities,
+    )
+
+    q = sealed_pipe.encode_queries([t[:80] for t in texts[:4]])
+    svc.search(q.vectors, PathWeights.three_path(), k=5)  # warm sealed exe
+    sealed_keys = set(svc.executable_cache)
+    sealed_exes = {k: svc.executable_cache[k] for k in sealed_keys}
+    assert sealed_keys
+
+    # frozen stats: streaming must not mutate df/avg_dl
+    df_before = sealed_pipe.stats.df_lexical.copy()
+    v = sealed_pipe.stream_into(svc, texts[n0:])
+    assert v >= 1
+    np.testing.assert_array_equal(df_before, sealed_pipe.stats.df_lexical)
+
+    # sealed executables: the SAME objects, not recompiles
+    for k in sealed_keys:
+        assert svc.executable_cache[k] is sealed_exes[k]
+
+    # a streamed doc is retrievable by its own text (global id = n0 + i)
+    probe_i = 5  # texts[n0 + 5]
+    enc = sealed_pipe.encode_queries([texts[n0 + probe_i]])
+    res = svc.search(enc.vectors, PathWeights.three_path(), k=5)
+    assert n0 + probe_i in np.asarray(res.ids)[0]
+
+    # and the sealed cache is STILL intact after the read
+    for k in sealed_keys:
+        assert svc.executable_cache[k] is sealed_exes[k]

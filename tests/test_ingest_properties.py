@@ -1,0 +1,80 @@
+"""Hypothesis property tests for the ingestion ELL contract: any document
+set, however degenerate, must encode to fixed-nnz ELL SparseVecs with unique
+ids per row, zero-valued PAD slots, and bit-for-bit determinism."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.usms import PAD_IDX
+from repro.ingest import IngestConfig, IngestPipeline
+from repro.ingest.analyzer import AnalyzerConfig, tokenize
+
+_WORDS = st.sampled_from(
+    "loom warp weft magma ash crater queen hive nectar espresso crema "
+    "sledge crevasse gambit endgame starter crumb boiler gauge Jupiter "
+    "Magellan Krakatoa Langstroth the and of a in x".split()
+)
+_DOC = st.lists(_WORDS, min_size=0, max_size=40).map(" ".join)
+
+
+def _cfg():
+    return IngestConfig(
+        d_dense=8, nnz_learned=6, nnz_lexical=4, max_entities=8, min_cooc=1
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_DOC, min_size=1, max_size=8))
+def test_ell_invariants_random_docs(docs):
+    ingested = IngestPipeline(_cfg()).fit(docs)
+    for sv, cap in ((ingested.docs.learned, 6), (ingested.docs.lexical, 4)):
+        idx, val = np.asarray(sv.idx), np.asarray(sv.val)
+        assert idx.shape == (len(docs), cap) and val.shape == (len(docs), cap)
+        assert idx.dtype == np.int32
+        assert (val[idx == PAD_IDX] == 0).all()
+        assert (val[idx != PAD_IDX] > 0).all()
+        for row in idx:
+            real = row[row >= 0]
+            assert len(set(real.tolist())) == len(real)  # unique ids per row
+            real_mask = row >= 0  # PAD only ever trails real ids
+            assert not (~real_mask[:-1] & real_mask[1:]).any()
+    # dense rows are unit (or exactly zero for empty/stopword-only docs)
+    norms = np.linalg.norm(np.asarray(ingested.docs.dense), axis=-1)
+    assert ((np.abs(norms - 1.0) < 1e-4) | (norms == 0)).all()
+    # entity slots are valid ids or PAD
+    ents = ingested.doc_entities
+    assert ((ents == PAD_IDX) | (ents >= 0)).all()
+    assert ents.max(initial=PAD_IDX) < ingested.kg.n_entities
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_DOC, min_size=1, max_size=6))
+def test_fit_is_deterministic(docs):
+    a = IngestPipeline(_cfg()).fit(docs)
+    b = IngestPipeline(_cfg()).fit(docs)
+    np.testing.assert_array_equal(
+        np.asarray(a.docs.learned.idx), np.asarray(b.docs.learned.idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.docs.lexical.val), np.asarray(b.docs.lexical.val)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.docs.dense), np.asarray(b.docs.dense)
+    )
+    np.testing.assert_array_equal(a.doc_entities, b.doc_entities)
+    np.testing.assert_array_equal(a.kg.triplets, b.kg.triplets)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_DOC)
+def test_tokenize_deterministic_and_filtered(text):
+    cfg = AnalyzerConfig()
+    toks = tokenize(text, cfg)
+    assert toks == tokenize(text, cfg)
+    stop = cfg.stopword_set()
+    assert all(t not in stop and len(t) >= cfg.min_token_len for t in toks)

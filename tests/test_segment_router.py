@@ -18,7 +18,7 @@ from repro.core.distributed import (
     place_segmented_index,
     resolve_global_ids,
 )
-from repro.core.search import SearchParams, search
+from repro.core.search import SearchParams, search, search_padded_trace_count
 from repro.core.usms import PathWeights
 from repro.data.corpus import CorpusConfig, make_corpus
 from repro.serving.batcher import BatcherConfig, SearchRequest
@@ -289,6 +289,51 @@ def test_kg_survives_insert_and_compaction():
     svc._router.seal_and_compact()
     # the second batch's docs got ids 232..239 and carry entities 200..207
     assert 236 in entity_hits(204)
+
+
+def test_grow_pow2_bucketing_limits_retraces(corpus, sealed):
+    """Shape-bucketed grow segment: publishing the grow segment padded to
+    power-of-two capacity means the read path's ``search_padded`` retraces
+    once per CAPACITY (O(log growth)) between compactions, not once per
+    insert batch — and dead pad rows never surface in results."""
+    svc = _service(sealed)
+    router = SegmentRouter(svc, BUILD_CFG, RouterConfig(seal_threshold=10**9))
+    svc.search(corpus.queries[:4], W, k=5)  # warm the sealed executable
+    t0 = search_padded_trace_count()
+
+    caps = []
+    for b in range(6):
+        lo = N_SEALED + 8 * b
+        svc.insert(corpus.docs[lo:lo + 8])
+        res = svc.search(corpus.queries[:4], W, k=5)  # grow read each insert
+        assert (np.asarray(res.ids) < router.grow_size + N_SEALED).all()
+        caps.append(router.grow_capacity)
+
+    # raw sizes 8..48 bucket to capacities {8, 16, 32, 64}
+    assert caps == [8, 16, 32, 32, 64, 64]
+    assert router.grow_size == 48  # real rows, pads excluded
+    # retrace accounting: 6 grow reads hit only 4 distinct capacities, and
+    # inserts 2..6 each retrace once for their raw-shape probe search.
+    # Unbucketed, the same sequence costs 6 + 5 = 11 traces.
+    retraces = search_padded_trace_count() - t0
+    assert retraces <= 4 + 5
+
+    # every real doc is reachable, pad rows are not (ids stay < grow_size)
+    res = svc.search(_probe(corpus, N_SEALED + 44), W, k=5)
+    assert int(np.asarray(res.ids)[0, 0]) == N_SEALED + 44
+
+    # a second read at an already-seen capacity adds NO trace
+    t1 = search_padded_trace_count()
+    svc.search(corpus.queries[4:8], W, k=5)
+    assert search_padded_trace_count() == t1
+
+    # tombstones apply to both the published and the raw grow segment, so a
+    # later insert (which extends the raw one) cannot resurrect them
+    victim = N_SEALED + 10
+    svc.mark_deleted([victim])
+    svc.insert(corpus.docs[N_SEALED + 48:N_SEALED + 56])
+    res = svc.search(_probe(corpus, victim), W, k=5)
+    assert victim not in np.asarray(res.ids)[0]
 
 
 def test_insert_search_override_with_small_pool(corpus, sealed):
