@@ -13,18 +13,21 @@ device-resident pipeline regresses:
     between runners, and the wide tolerance absorbs CI scheduler noise.
 
 **Serving gate** (``--serving-only``): compares results/BENCH_serving.json
-against results/BENCH_serving_baseline.json with deliberately LENIENT
-first-pass thresholds (the ROADMAP item: gate now, tighten once a few runs
-establish the CI noise floor):
+against results/BENCH_serving_baseline.json. The first-pass thresholds were
+deliberately lenient; with CI runs establishing the noise floor they are now
+tightened (the ROADMAP item):
 
   * per-bucket steady QPS may not drop below ``1 - --qps-tol`` (default
-    allows an 80% drop) of the baseline — absolute QPS is
-    machine-dependent, so only a collapse fails;
+    allows a 50% drop) of the baseline — absolute QPS is machine-dependent,
+    so only a collapse fails;
   * per-bucket steady p99 may not rise above ``1 + --p99-tol`` (default
-    allows a 4x rise) of the baseline;
+    allows a 1.5x rise, i.e. a 2.5x ceiling) of the baseline;
   * ``streaming.sealed_cache_stable`` must stay true — exact and
     noise-free: false means streaming inserts evicted sealed executables
-    (the grow-segment scheme's core invariant, DESIGN.md §6).
+    (the grow-segment scheme's core invariant, DESIGN.md §6);
+  * ``compaction.incremental.sealed_cache_stable`` must stay true — false
+    means an incremental compaction evicted executables of untouched
+    segments (the segment-pool cache-survival guarantee, DESIGN.md §8).
 
 Wall-clock fields are reported but never gated: absolute seconds are
 machine-dependent and would flake.
@@ -113,6 +116,15 @@ def check_serving(
             "streaming.sealed_cache_stable is false: inserts evicted "
             "sealed-segment executables (grow-segment invariant, DESIGN.md §6)"
         )
+    incremental = bench.get("compaction", {}).get("incremental")
+    if incremental is not None and not incremental.get(
+        "sealed_cache_stable", True
+    ):
+        failures.append(
+            "compaction.incremental.sealed_cache_stable is false: an "
+            "incremental compaction evicted executables of untouched "
+            "segments (segment-pool cache-survival guarantee, DESIGN.md §8)"
+        )
     return failures
 
 
@@ -169,13 +181,14 @@ def main() -> int:
         "--serving-baseline", default="results/BENCH_serving_baseline.json"
     )
     ap.add_argument(
-        "--qps-tol", type=float, default=0.80,
-        help="allowed fractional steady-QPS drop vs baseline (lenient "
-        "first pass: runner speeds differ)",
+        "--qps-tol", type=float, default=0.50,
+        help="allowed fractional steady-QPS drop vs baseline (runner "
+        "speeds differ; tightened from the lenient 0.80 first pass)",
     )
     ap.add_argument(
-        "--p99-tol", type=float, default=4.0,
-        help="allowed fractional p99 rise vs baseline (4.0 = 5x ceiling)",
+        "--p99-tol", type=float, default=1.5,
+        help="allowed fractional p99 rise vs baseline (1.5 = 2.5x ceiling; "
+        "tightened from the lenient 4.0 first pass)",
     )
     args = ap.parse_args()
 

@@ -295,6 +295,125 @@ def run_streaming(
     ]
 
 
+def run_compaction(
+    n_docs: int = 1024,
+    grow_docs: int = 48,
+    n_requests: int = 96,
+    dry_run: bool = False,
+):
+    """Compaction-concurrency bench: search p99 measured WHILE a compaction
+    runs, full-rebuild vs incremental. Per mode it reports the search QPS +
+    p50/p99 of a closed-loop client racing the compaction, the compaction's
+    wall-clock, its ``dispatch.build_rows`` work (the O(corpus) vs O(grow)
+    contrast), and whether the warm sealed executables survived — for the
+    incremental path they must (the segment-pool cache-survival guarantee,
+    DESIGN.md §8)."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import (
+        build_segmented_index,
+        place_segmented_index,
+    )
+    from repro.runtime import dispatch
+    from repro.serving.segment_router import RouterConfig, SegmentRouter
+
+    if dry_run:
+        n_docs, grow_docs, n_requests = 256, 16, 24
+    corpus = make_corpus(
+        CorpusConfig(
+            n_docs=n_docs + 2 * grow_docs, n_queries=64,
+            n_topics=max(n_docs // 64, 8),
+            d_dense=64, nnz_sparse=16, nnz_lexical=8, seed=17,
+        )
+    )
+    cfg = BuildConfig(
+        knn=KnnConfig(k=16, iters=3, node_chunk=min(n_docs, 2048)),
+        prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=512),
+        path_refine_iters=0,
+    )
+    params = SearchParams(k=10, iters=32, pool_size=64)
+    rows = []
+    payload = {
+        "config": {
+            "n_docs": n_docs,
+            "grow_docs": grow_docs,
+            "n_requests": n_requests,
+            "backend": jax.default_backend(),
+        },
+    }
+    for mode_i, mode in enumerate(("full", "incremental")):
+        seg = build_segmented_index(corpus.docs[:n_docs], 1, cfg)
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        seg = place_segmented_index(seg, mesh)
+        service = HybridSearchService(
+            seg, params,
+            ServiceConfig(
+                batcher=BatcherConfig(
+                    flush_size=8, max_batch=8, flush_deadline_s=0.01
+                ),
+                pump_interval_s=0.005,
+            ),
+            mesh=mesh,
+        )
+        router = SegmentRouter(
+            service, cfg,
+            RouterConfig(seal_threshold=10**9, compaction=mode),
+        )
+        lo = n_docs + mode_i * grow_docs
+        service.insert(corpus.docs[lo:lo + grow_docs])
+        # warm: sealed + grow executables compiled before the measurement
+        _drive(service, corpus.queries, 8, np.random.default_rng(0), params.k)
+        sealed_keys = {
+            k: v for k, v in service.executable_cache.items()
+        }
+
+        rows_before = dispatch.build_rows()
+        compact_s = [0.0]
+
+        def compactor():
+            t0 = time.perf_counter()
+            router.compact()
+            compact_s[0] = time.perf_counter() - t0
+
+        thread = threading.Thread(target=compactor)
+        thread.start()
+        wall, lat_ms = _drive(
+            service, corpus.queries, n_requests, np.random.default_rng(5),
+            params.k,
+        )
+        thread.join()
+        service.stop_pump()
+        built = dispatch.build_rows() - rows_before
+        stable = all(
+            service.executable_cache.get(k) is v for k, v in sealed_keys.items()
+        )
+        qps = n_requests / wall
+        p50 = float(np.percentile(lat_ms, 50))
+        p99 = float(np.percentile(lat_ms, 99))
+        payload[mode] = {
+            "search_qps": qps,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "compact_s": compact_s[0],
+            "built_rows": int(built),
+            "sealed_cache_stable": bool(stable),
+            "pool_segments": (
+                router.pool.n_segments if router.pool is not None else 1
+            ),
+        }
+        rows.append(
+            (
+                f"serving.compaction_{mode}",
+                wall * 1e6 / n_requests,
+                f"qps={qps:.0f};p50_ms={p50:.1f};p99_ms={p99:.1f};"
+                f"compact_s={compact_s[0]:.2f};built_rows={built};"
+                f"sealed_cache_stable={stable}",
+            )
+        )
+    _update_bench_json("compaction", payload)
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -307,6 +426,11 @@ def main() -> None:
         "--streaming",
         action="store_true",
         help="grow-segment router bench: insert QPS + p99 under concurrent inserts",
+    )
+    ap.add_argument(
+        "--compaction",
+        action="store_true",
+        help="p99 during concurrent compaction, full rebuild vs incremental",
     )
     args = ap.parse_args()
     kw = {}
@@ -324,6 +448,13 @@ def main() -> None:
                 n_docs=512, insert_batches=4, insert_batch=16, n_requests=64
             )
         rows += run_streaming(dry_run=args.dry_run, **stream_kw)
+    # likewise the dry-run always exercises both compaction modes, so the
+    # full-vs-incremental p99/work contrast lands in every CI artifact
+    if args.compaction or args.dry_run:
+        comp_kw = {}
+        if args.quick and not args.dry_run:
+            comp_kw = dict(n_docs=512, grow_docs=32, n_requests=64)
+        rows += run_compaction(dry_run=args.dry_run, **comp_kw)
     for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]}")
 

@@ -3,7 +3,13 @@ from repro.checkpoint.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.checkpoint.index_io import load_index, load_ingest, save_index
+from repro.checkpoint.index_io import (
+    load_index,
+    load_ingest,
+    load_pool,
+    save_index,
+    save_pool,
+)
 
 __all__ = [
     "save_checkpoint",
@@ -12,4 +18,6 @@ __all__ = [
     "save_index",
     "load_index",
     "load_ingest",
+    "save_pool",
+    "load_pool",
 ]

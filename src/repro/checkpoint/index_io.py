@@ -60,12 +60,18 @@ def save_index(
     index step N commits, and ``load_ingest`` reads the manifest of the
     latest COMMITTED index step — so a crash anywhere in the sequence can
     never pair a new index with stale stats (or vice versa)."""
-    directory = pathlib.Path(directory)
+    _save_stepped(pathlib.Path(directory), index, ingest=ingest, keep=keep)
+
+
+def _save_stepped(directory: pathlib.Path, tree, *, ingest, keep: int) -> None:
+    """The shared fresh-step + ingest-pairing + GC sequence (save_checkpoint
+    is pytree-generic, so one crash-consistency path serves both a
+    HybridIndex and a SegmentPool)."""
     steps = all_steps(directory)
     step = steps[-1] + 1 if steps else 0
     if ingest is not None:
         ingest.save(directory / f"{INGEST_STEP_PREFIX}{step}")
-    save_checkpoint(directory, step, index, keep=keep)
+    save_checkpoint(directory, step, tree, keep=keep)
     # GC ingest manifests whose index step was retention-collected
     kept = set(all_steps(directory))
     for d in directory.glob(INGEST_STEP_PREFIX + "*"):
@@ -117,6 +123,89 @@ def load_index(
         raise ValueError(
             f"manifest has {len(manifest['leaves'])} leaves but HybridIndex "
             f"flattens to {len(flat)} — not an index checkpoint?"
+        )
+    template = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            np.zeros(tuple(m["shape"]), np.dtype(m["dtype"]))
+            for m in manifest["leaves"]
+        ],
+    )
+    return restore_checkpoint(directory, step, template)
+
+
+def _pool_structural_dummy(n_groups: int):
+    """A SegmentPool with ``n_groups`` groups: only the treedef matters
+    (leaf shapes come from the manifest)."""
+    from repro.core.distributed import SegmentedIndex
+    from repro.core.segment_pool import SegmentPool
+
+    def one_group():
+        idx = _structural_dummy()
+        import jax
+
+        stacked = jax.tree_util.tree_map(lambda a: a[None], idx)
+        return SegmentedIndex(
+            index=stacked, global_ids=np.zeros((1, 1), np.int32)
+        )
+
+    return SegmentPool(groups=[one_group() for _ in range(n_groups)])
+
+
+def _pool_leaf_stride() -> int:
+    """Leaves per pool group (HybridIndex leaves + global_ids), derived
+    from the registered pytree structure so it never drifts."""
+    import jax
+
+    return len(jax.tree_util.tree_leaves(_pool_structural_dummy(1)))
+
+
+def save_pool(
+    directory: str | os.PathLike,
+    pool,
+    *,
+    ingest=None,
+    keep: int = 1,
+) -> None:
+    """Atomically persist a heterogeneous ``SegmentPool`` (variable group
+    count, per-group segment counts and capacities) with the same
+    manifest+leaf crash-consistency contract as ``save_index``: a fresh
+    step per save, ``.done`` commit marker last, paired ingest manifest
+    written before the commit. The group structure needs no sidecar — it is
+    recovered from the manifest's leaf count at load time."""
+    _save_stepped(pathlib.Path(directory), pool, ingest=ingest, keep=keep)
+
+
+def load_pool(directory: str | os.PathLike, *, step: Optional[int] = None):
+    """Restore a saved ``SegmentPool``. The heterogeneous layout (group
+    count, per-group shapes) is reconstructed from the committed manifest:
+    ``SegmentedIndex`` flattens to a fixed leaf count, so the group count
+    is the manifest's leaf count over that stride, and each leaf's shape
+    comes from its manifest entry."""
+    directory = pathlib.Path(directory)
+    steps = all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed pool checkpoint under {directory}")
+    step = steps[-1] if step is None else step
+    if step not in steps:
+        raise FileNotFoundError(f"step {step} not committed under {directory}")
+    with open(directory / f"step_{step}" / "manifest.json") as f:
+        manifest = json.load(f)
+    n_leaves = len(manifest["leaves"])
+    stride = _pool_leaf_stride()
+    if n_leaves == 0 or n_leaves % stride:
+        raise ValueError(
+            f"manifest has {n_leaves} leaves, not a multiple of "
+            f"{stride} — not a segment-pool checkpoint?"
+        )
+    import jax
+
+    dummy = _pool_structural_dummy(n_leaves // stride)
+    flat, treedef = jax.tree_util.tree_flatten(dummy)
+    if len(flat) != n_leaves:
+        raise ValueError(
+            f"manifest has {n_leaves} leaves but the reconstructed pool "
+            f"flattens to {len(flat)}"
         )
     template = jax.tree_util.tree_unflatten(
         treedef,

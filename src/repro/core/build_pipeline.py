@@ -347,7 +347,10 @@ def _entry_points(
 ) -> jax.Array:
     """Union of top-norm nodes under the fused metric AND each single path,
     so entry quality holds for any query weights."""
-    per = max(n_entry // 4, 1)
+    # ceil: the 4-part union must never be narrower than n_entry (a tiny
+    # segment's n_entry = n may not divide by 4, and unique_take can only
+    # return what it was given)
+    per = max(-(-n_entry // 4), 1)
     entry_parts = [jax.lax.top_k(sip, per)[1]]
     for w in (
         PathWeights.make(1.0, 0.0, 0.0),
@@ -414,6 +417,7 @@ def build_graph(
     """All device-side graph stages as a single dispatch. This is the unit
     ``build_index_sharded`` replicates per segment under shard_map."""
     dispatch.tick()
+    dispatch.build_rows_tick(corpus.n)
     return _build_graph_program(corpus, key, cfg)
 
 
@@ -423,6 +427,7 @@ def _build_graph_host(
     """Legacy host-driven path (Python chunk loops, sequential per-path
     descents). Kept for A/B benchmarking (BENCH_build.json) and as the
     reference the pipeline is validated against."""
+    dispatch.build_rows_tick(corpus.n)
     knn_ids, knn_scores = knn_graph.build_knn_graph(corpus, cfg.knn, key)
     path_ids = None
     if cfg.path_refine_iters > 0:
@@ -595,6 +600,7 @@ def insert(
     n_old = index.n
     n_new = new_docs.n
     k = cfg.knn.k
+    dispatch.build_rows_tick(n_new)
 
     # (a) k-NN from the existing index via its own search
     if search_params is None:
@@ -654,3 +660,60 @@ def insert(
         alive=jnp.concatenate([index.alive, jnp.ones((n_new,), bool)]),
         self_ip=cself,
     )
+
+
+# ---------------------------------------------------------------------------
+# Row-axis reshaping of a built index (shape-bucketing support): shared by
+# the serving grow segment and the segment pool's pow2-capacity segments.
+# ---------------------------------------------------------------------------
+
+
+def map_index_rows(index: HybridIndex, fn) -> HybridIndex:
+    """Apply ``fn(array, pad_fill)`` to every per-row (axis-0 == N) leaf of a
+    single-segment index; entity tables and entry points are N-independent."""
+    from repro.core.usms import SparseVec
+
+    return dataclasses.replace(
+        index,
+        corpus=FusedVectors(
+            fn(index.corpus.dense, 0),
+            SparseVec(
+                fn(index.corpus.learned.idx, PAD_IDX),
+                fn(index.corpus.learned.val, 0),
+            ),
+            SparseVec(
+                fn(index.corpus.lexical.idx, PAD_IDX),
+                fn(index.corpus.lexical.val, 0),
+            ),
+        ),
+        semantic_edges=fn(index.semantic_edges, PAD_IDX),
+        keyword_edges=fn(index.keyword_edges, PAD_IDX),
+        logical_edges=fn(index.logical_edges, PAD_IDX),
+        doc_entities=fn(index.doc_entities, PAD_IDX),
+        alive=fn(index.alive, False),
+        self_ip=fn(index.self_ip, 0.0),
+    )
+
+
+def pad_index_rows(index: HybridIndex, capacity: int) -> HybridIndex:
+    """Pad an index's per-row arrays with DEAD rows up to ``capacity``
+    (shape-bucketing). Pad rows are unreachable by construction: entry
+    points and edges only reference real rows, ``alive`` is False, and no
+    global-id map ever covers them."""
+    n = index.n
+    if capacity <= n:
+        return index
+
+    def pad(a, fill):
+        return jnp.concatenate(
+            [a, jnp.full((capacity - n,) + a.shape[1:], fill, a.dtype)]
+        )
+
+    return map_index_rows(index, pad)
+
+
+def slice_index_rows(index: HybridIndex, n: int) -> HybridIndex:
+    """Drop a padded index's dead tail (inverse of ``pad_index_rows``)."""
+    if index.n == n:
+        return index
+    return map_index_rows(index, lambda a, _fill: a[:n])

@@ -151,8 +151,10 @@ def _present_axes(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
 
 
 def mesh_segment_count(mesh: Mesh) -> int:
-    """Number of devices on the segment axes — the S every sharded build and
-    the one-segment-per-device search contract require."""
+    """Number of devices on the segment axes. Sharded builds and searches
+    require the stacked segment count S to be a MULTIPLE of this (each
+    device owns S / mesh_segment_count segments — the segment-pool
+    generalization of the old one-segment-per-device contract)."""
     seg_axes = _present_axes(mesh, SEGMENT_AXES)
     return int(np.prod([mesh.shape[a] for a in seg_axes])) if seg_axes else 1
 
@@ -256,9 +258,9 @@ def compact_segmented_index(
     logical edges too — without it a KG-bearing index would lose its
     entity paths on compaction.
 
-    Uses the parallel ``build_index_sharded`` when the mesh's segment-axis
-    device count matches ``n_segments`` (the one-segment-per-device
-    contract), else the sequential ``build_segmented_index``."""
+    Uses the parallel ``build_index_sharded`` when ``n_segments`` is a
+    multiple of the mesh's segment-axis device count (the segment-pool
+    placement contract), else the sequential ``build_segmented_index``."""
     global_ids = np.asarray(global_ids, np.int32)
     if corpus.n == 0:
         raise ValueError("cannot compact an empty corpus (all docs deleted)")
@@ -268,7 +270,7 @@ def compact_segmented_index(
         kg_triplets=kg_triplets, doc_entities=doc_entities,
         n_entities=n_entities,
     )
-    if mesh is not None and mesh_segment_count(mesh) == n_segments:
+    if mesh is not None and n_segments % mesh_segment_count(mesh) == 0:
         seg = build_index_sharded(
             corpus, n_segments, cfg, mesh=mesh, key=key, **kg_kwargs
         )
@@ -302,10 +304,12 @@ def make_sharded_graph_builder(mesh: Mesh, cfg: BuildConfig):
     """shard_map wrapper around the fused graph-build program.
 
     Returns fn(stacked_corpus, seg_key_data) -> GraphArrays with leaves
-    (S, ...). Each device must own exactly one segment (S == product of the
-    segment mesh axes); keys travel as uint32 key data so they shard like
-    ordinary arrays. Builders are cached on (mesh, cfg) so repeated sharded
-    builds (periodic segment rebuilds) reuse the compiled program."""
+    (S, ...). Each device owns S / mesh_segment_count segments and streams
+    its local block through ``lax.map`` (sequential per local segment, so
+    the per-device memory high-water stays one build); keys travel as
+    uint32 key data so they shard like ordinary arrays. Builders are cached
+    on (mesh, cfg) so repeated sharded builds (periodic segment rebuilds)
+    reuse the compiled program."""
     cache_key = (mesh, cfg)
     cached = _sharded_builder_cache.get(cache_key)
     if cached is not None:
@@ -313,10 +317,13 @@ def make_sharded_graph_builder(mesh: Mesh, cfg: BuildConfig):
     spec = _segment_spec(mesh)
 
     def local_build(corpus_blk: FusedVectors, key_blk: jax.Array) -> GraphArrays:
-        corpus = jax.tree.map(lambda a: a[0], corpus_blk)
-        key = jax.random.wrap_key_data(key_blk[0])
-        g = _build_graph_program(corpus, key, cfg)
-        return jax.tree.map(lambda a: a[None], g)
+        def one(args):
+            corpus, key_data = args
+            return _build_graph_program(
+                corpus, jax.random.wrap_key_data(key_data), cfg
+            )
+
+        return jax.lax.map(one, (corpus_blk, key_blk))
 
     graph_specs = GraphArrays(
         knn_ids=spec,
@@ -357,11 +364,13 @@ def build_index_sharded(
     program sequentially): segment s is built from ``fold_in(key, s)``."""
     key = key if key is not None else jax.random.key(0)
     n_mesh_segs = mesh_segment_count(mesh)
-    if n_segments != n_mesh_segs:
+    if n_segments % n_mesh_segs != 0:
         raise ValueError(
-            f"n_segments={n_segments} must equal the segment-axes device "
-            f"count {n_mesh_segs} (one segment per device)"
+            f"n_segments={n_segments} must be a multiple of the segment-axes "
+            f"device count {n_mesh_segs} (each device builds "
+            f"n_segments / {n_mesh_segs} segments)"
         )
+    dispatch.build_rows_tick(corpus.n)
     parts, gids = shard_corpus(corpus, n_segments)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *parts)
     seg_keys = jnp.stack(
@@ -416,6 +425,38 @@ def build_index_sharded(
     return SegmentedIndex(index=index, global_ids=jnp.asarray(gids))
 
 
+def _segment_to_global(
+    idx: HybridIndex,
+    gids: jax.Array,
+    queries: FusedVectors,
+    weights: PathWeights,
+    keywords: jax.Array,
+    entities: jax.Array,
+    params: SearchParams,
+):
+    """One segment's search with local row ids mapped to GLOBAL doc ids
+    (-inf scores on pad slots) — the unit every segment/pool merge
+    composes."""
+    res = search_padded(idx, queries, weights, keywords, entities, params)
+    g = jnp.where(
+        res.ids >= 0, gids[jnp.clip(res.ids, 0, gids.shape[0] - 1)], PAD_IDX
+    )
+    return g, jnp.where(g >= 0, res.scores, -jnp.inf), res.expanded
+
+
+def _merge_rows_topk(g_all: jax.Array, s_all: jax.Array, k: int):
+    """Per-row top-k over stacked (S, B, k) global-id results; returns
+    (top scores, ids) with PAD ids on non-finite slots."""
+    b = g_all.shape[1]
+    g_flat = jnp.moveaxis(g_all, 0, 1).reshape(b, -1)
+    s_flat = jnp.moveaxis(s_all, 0, 1).reshape(b, -1)
+    top, pos = jax.lax.top_k(s_flat, k)
+    ids = jnp.where(
+        jnp.isfinite(top), jnp.take_along_axis(g_flat, pos, axis=-1), PAD_IDX
+    )
+    return top, ids
+
+
 def make_distributed_search_padded(
     mesh: Mesh,
     params: SearchParams,
@@ -428,7 +469,10 @@ def make_distributed_search_padded(
     with the query batch), so one executable serves every path combination —
     this is the entry point the serving layer fronts sharded indexes with.
     Queries are sharded over the "model" axis (if present); the segmented
-    index is sharded over ("pod", "data").
+    index is sharded over ("pod", "data"). S may be any MULTIPLE of the
+    segment-axes device count: a device owning several segments searches
+    them in one vmapped pass and pre-merges their top-k locally before the
+    cross-device merge (the segment-pool contract).
     """
     seg_axes = _present_axes(mesh, SEGMENT_AXES)
     q_axes = _present_axes(mesh, (QUERY_AXIS,))
@@ -443,15 +487,26 @@ def make_distributed_search_padded(
         keywords: jax.Array,
         entities: jax.Array,
     ):
-        # shard_map gives each device a (segments_per_device=1, ...) block
-        idx = jax.tree.map(lambda a: a[0], seg_index.index)
-        gids = seg_index.global_ids[0]
-        res = search_padded(idx, queries, weights, keywords, entities, params)
-        # local -> global ids
-        g = jnp.where(
-            res.ids >= 0, gids[jnp.clip(res.ids, 0, gids.shape[0] - 1)], PAD_IDX
-        )
-        scores = jnp.where(g >= 0, res.scores, -jnp.inf)
+        # shard_map gives each device a (segments_per_device, ...) block
+        spd = seg_index.global_ids.shape[0]
+        if spd == 1:
+            g, scores, exp = _segment_to_global(
+                jax.tree.map(lambda a: a[0], seg_index.index),
+                seg_index.global_ids[0],
+                queries, weights, keywords, entities, params,
+            )
+            expanded_local = exp.sum()
+        else:
+            # several same-device segments: one vmapped batched pass, then a
+            # local per-row top-k merge in global-id space
+            g_all, s_all, exp = jax.vmap(
+                lambda idx, gids: _segment_to_global(
+                    idx, gids, queries, weights, keywords, entities, params
+                )
+            )(seg_index.index, seg_index.global_ids)  # (spd, B, k)
+            top, g = _merge_rows_topk(g_all, s_all, params.k)
+            scores = jnp.where(jnp.isfinite(top), top, -jnp.inf)
+            expanded_local = exp.sum()
 
         # reassemble the query batch across the model axis
         if q_axes:
@@ -471,7 +526,7 @@ def make_distributed_search_padded(
         ids = jnp.where(
             jnp.isfinite(top), jnp.take_along_axis(g_all, pos, axis=-1), PAD_IDX
         )
-        expanded = res.expanded.sum()
+        expanded = expanded_local
         all_axes = tuple(seg_axes) + tuple(q_axes)
         if all_axes:
             expanded = jax.lax.psum(expanded, all_axes)
@@ -506,6 +561,46 @@ def make_distributed_search_padded(
         )
         return SearchResult(ids, scores, jnp.broadcast_to(expanded, (ids.shape[0],)))
 
+    return run
+
+
+_local_group_search_cache: dict = {}
+
+
+def make_local_group_search(params: SearchParams):
+    """Single-host counterpart of ``make_distributed_search_padded``: search
+    a stacked ``SegmentedIndex`` (a segment-pool group) with one vmapped
+    ``search_padded`` pass over the leading segment axis and merge the
+    per-segment top-k in global-id space — no mesh, no collectives. This is
+    the executable the serving layer AOT-caches per pool shape-group when a
+    group is not placed on (or not divisible over) the mesh's segment axes.
+    Cached on ``params`` so every caller shares one jit cache."""
+    cached = _local_group_search_cache.get(params)
+    if cached is not None:
+        return cached
+    NEG_FILL = jnp.float32(-1e30)
+
+    @jax.jit
+    def run(
+        seg_index: SegmentedIndex,
+        queries: FusedVectors,
+        weights: PathWeights,
+        keywords: jax.Array,
+        entities: jax.Array,
+    ) -> SearchResult:
+        g_all, s_all, exp = jax.vmap(
+            lambda idx, gids: _segment_to_global(
+                idx, gids, queries, weights, keywords, entities, params
+            )
+        )(seg_index.index, seg_index.global_ids)  # (S, B, k)
+        top, ids = _merge_rows_topk(g_all, s_all, params.k)
+        scores = jnp.where(jnp.isfinite(top), top, NEG_FILL)
+        # whole-batch total broadcast per row — the same convention as the
+        # sharded executable, so pool reads can sum the two coherently
+        expanded = jnp.broadcast_to(exp.sum(), (ids.shape[0],))
+        return SearchResult(ids, scores, expanded)
+
+    _local_group_search_cache[params] = run
     return run
 
 

@@ -1,0 +1,399 @@
+"""Segment pool: a variable-length collection of sealed segments decoupled
+from the device layout (the GRAB-ANNS-style logical/physical split).
+
+``SegmentedIndex`` stacks same-shape segments on a leading axis — the unit
+one vmapped/sharded search pass consumes. A ``SegmentPool`` holds MANY such
+stacks ("shape groups"): segments of the same per-row capacity live in one
+group and are searched together; segments of different capacities live in
+different groups and are searched by different cached executables. That
+turns the old hard "S segments == S mesh devices" coupling into a placement
+decision:
+
+  * any group whose segment count divides over the mesh's segment axes is
+    served by the sharded ``make_distributed_search_padded`` executable
+    (several same-device segments per device, one vmapped pass each);
+  * every other group (including all groups of an off-mesh deployment) is
+    served by ``make_local_group_search`` — same math, no collectives;
+  * group results merge per-row in GLOBAL-id space, so a pool search is
+    exactly a segment search with more segments.
+
+Because segment capacities are quantized (the serving layer seals grow
+segments at power-of-two capacity), the number of distinct groups — and
+therefore of cached executables — is O(log corpus), and compacting a grow
+segment into the pool touches at most ONE group: every other group's
+executable survives byte-identical (the cache-survival guarantee DESIGN.md
+§8 documents and ``tests/test_segment_pool.py`` pins).
+
+All functions here are host-side orchestration; the device work happens in
+the search/build programs this module composes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build_pipeline import build_index, pad_index_rows
+from repro.core.distributed import (
+    SegmentedIndex,
+    _segment_spec,
+    alive_docs,
+    mark_deleted_segmented,
+    mesh_segment_count,
+    resolve_global_ids,
+)
+from repro.core.index import BuildConfig
+from repro.core.usms import PAD_IDX, FusedVectors
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["groups"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SegmentPool:
+    """A list of shape groups, each a stacked ``SegmentedIndex``.
+
+    Group g holds ``groups[g].n_segments`` segments of identical per-row
+    capacity ``groups[g].global_ids.shape[1]``; different groups may have
+    different capacities (the heterogeneity the pool exists for)."""
+
+    groups: list[SegmentedIndex]
+
+    @classmethod
+    def from_segmented(cls, seg: SegmentedIndex) -> "SegmentPool":
+        """Wrap an existing stacked index as a single-group pool. The group
+        is the SAME pytree (no copy), so shape-keyed executables compiled
+        for it keep serving after the wrap."""
+        return cls(groups=[seg])
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_segments(self) -> int:
+        return sum(g.n_segments for g in self.groups)
+
+    @property
+    def capacities(self) -> tuple[int, ...]:
+        """Per-group per-segment row capacity."""
+        return tuple(int(g.global_ids.shape[1]) for g in self.groups)
+
+    @property
+    def entity_width(self) -> int:
+        """Widest doc-entity row across groups (grow segments are born at
+        this width so entity-carrying inserts never hit a width check)."""
+        return max(int(g.index.doc_entities.shape[-1]) for g in self.groups)
+
+    @property
+    def has_kg(self) -> bool:
+        """True when any group carries knowledge-graph entity paths."""
+        return any(g.index.entity_adj.shape[-1] > 1 for g in self.groups)
+
+    def max_global_id(self) -> int:
+        """Largest global doc id present, or -1 for an all-pad pool."""
+        out = -1
+        for g in self.groups:
+            gids = np.asarray(g.global_ids)
+            if (gids >= 0).any():
+                out = max(out, int(gids.max()))
+        return out
+
+    def segments(self) -> list[tuple[int, int]]:
+        """Flat (group, local segment) enumeration of every pooled segment."""
+        return [(g, s) for g, grp in enumerate(self.groups)
+                for s in range(grp.n_segments)]
+
+
+def group_shape_key(group: SegmentedIndex) -> tuple:
+    """Exact shape signature of a group — the executable-cache key material.
+    Two groups with equal keys are served by the same compiled program."""
+    return ("seg",) + tuple(
+        tuple(leaf.shape) for leaf in jax.tree.leaves(group)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Global-id routing over a pool (deletion, compaction, introspection)
+# ---------------------------------------------------------------------------
+
+
+def resolve_global_ids_pool(
+    pool: SegmentPool, ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Global doc id -> (group, segment-in-group, local row); all -1 when
+    the id lives nowhere in the pool."""
+    ids = np.atleast_1d(np.asarray(ids, np.int64))
+    grp = np.full(ids.shape, -1, np.int32)
+    seg = np.full(ids.shape, -1, np.int32)
+    loc = np.full(ids.shape, -1, np.int32)
+    for g, group in enumerate(pool.groups):
+        todo = grp < 0
+        if not todo.any():
+            break
+        s, l = resolve_global_ids(group, ids[todo])
+        hit = s >= 0
+        idx = np.flatnonzero(todo)[hit]
+        grp[idx] = g
+        seg[idx] = s[hit]
+        loc[idx] = l[hit]
+    return grp, seg, loc
+
+
+def mark_deleted_pool(
+    pool: SegmentPool,
+    ids: np.ndarray,
+    *,
+    resolved: Optional[tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+) -> SegmentPool:
+    """Tombstone docs by global id wherever they live. Shape-preserving in
+    every group, so no executable is evicted. Unknown ids are ignored.
+    Pass ``resolved=(grp, seg, loc)`` when the caller already routed the
+    ids — skips a second full per-group resolve."""
+    grp, seg, loc = (
+        resolved if resolved is not None else resolve_global_ids_pool(pool, ids)
+    )
+    groups = list(pool.groups)
+    for g in range(len(groups)):
+        mine = grp == g
+        if mine.any():
+            groups[g] = mark_deleted_segmented(
+                groups[g], None, resolved=(seg[mine], loc[mine])
+            )
+    return SegmentPool(groups=groups)
+
+
+def widen_entities(ents: np.ndarray, width: int) -> np.ndarray:
+    """Pad (or clip) doc-entity rows to ``width`` columns with PAD_IDX —
+    the one place segment/grow entity widths are reconciled."""
+    ents = np.asarray(ents, np.int32)
+    if ents.shape[-1] == width:
+        return ents
+    out = np.full((ents.shape[0], width), PAD_IDX, np.int32)
+    w = min(width, ents.shape[-1])
+    out[:, :w] = ents[:, :w]
+    return out
+
+
+def alive_docs_pool(
+    pool: SegmentPool,
+) -> tuple[FusedVectors, np.ndarray, np.ndarray]:
+    """Every live (non-pad, non-tombstoned) doc in the pool: (corpus rows,
+    global ids, doc-entity rows padded to the pool's widest entity row) —
+    the full-rebuild compaction input."""
+    width = pool.entity_width
+    parts, gid_parts, ent_parts = [], [], []
+    for group in pool.groups:
+        corpus, gids, ents = alive_docs(group)
+        parts.append(corpus)
+        gid_parts.append(gids)
+        ent_parts.append(widen_entities(ents, width))
+    corpus = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    return corpus, np.concatenate(gid_parts), np.concatenate(ent_parts, axis=0)
+
+
+def live_counts(pool: SegmentPool) -> list[tuple[int, int, int, int]]:
+    """Per pooled segment: (group, segment-in-group, capacity, live docs) —
+    the merge policy's working set."""
+    out = []
+    for g, group in enumerate(pool.groups):
+        alive = np.asarray(group.index.alive)
+        cap = int(group.global_ids.shape[1])
+        for s in range(group.n_segments):
+            out.append((g, s, cap, int(alive[s].sum())))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pool surgery: build one segment, append it, remove segments
+# ---------------------------------------------------------------------------
+
+
+def build_pool_segment(
+    corpus: FusedVectors,
+    global_ids: np.ndarray,
+    cfg: BuildConfig = BuildConfig(),
+    *,
+    capacity: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    kg_triplets: Optional[np.ndarray] = None,
+    doc_entities: Optional[np.ndarray] = None,
+    n_entities: int = 0,
+) -> SegmentedIndex:
+    """Build ONE sealed segment of arbitrary size — O(rows given), never
+    re-entering the full sharded build. Returns a single-segment stacked
+    index (leaves (1, ...)) padded to ``capacity`` with dead rows (shape
+    bucketing: quantized capacities keep the pool's group count low),
+    carrying the caller's global ids."""
+    global_ids = np.asarray(global_ids, np.int32)
+    n = corpus.n
+    if n == 0:
+        raise ValueError("a pool segment needs at least one row")
+    if global_ids.shape[0] != n:
+        raise ValueError("global_ids must map every corpus row")
+    capacity = n if capacity is None else int(capacity)
+    if capacity < n:
+        raise ValueError(f"capacity {capacity} below row count {n}")
+    kg_kwargs = {}
+    if kg_triplets is not None and doc_entities is not None and n_entities > 0:
+        kg_kwargs = dict(
+            kg_triplets=kg_triplets,
+            doc_entities=doc_entities,
+            n_entities=n_entities,
+        )
+    idx = build_index(corpus, cfg, key=key, **kg_kwargs)
+    idx = pad_index_rows(idx, capacity)
+    # entry_points is built at min(cfg.n_entry, n) — normalize it to the
+    # CAPACITY-determined length (cycling real entries; duplicates are
+    # harmless, the search pool dedups) so two segments of equal capacity
+    # always share every leaf shape and stack into one group
+    n_entry = min(cfg.n_entry, capacity)
+    ep = idx.entry_points
+    if ep.shape[0] < n_entry:
+        reps = -(-n_entry // ep.shape[0])
+        idx = dataclasses.replace(
+            idx, entry_points=jnp.tile(ep, reps)[:n_entry]
+        )
+    gids = np.full((capacity,), PAD_IDX, np.int32)
+    gids[:n] = global_ids
+    stacked = jax.tree.map(lambda a: jnp.asarray(a)[None], idx)
+    return SegmentedIndex(index=stacked, global_ids=jnp.asarray(gids)[None])
+
+
+def append_segment(
+    pool: SegmentPool, segment: SegmentedIndex
+) -> tuple[SegmentPool, int]:
+    """Add sealed segments to the pool. Segments whose leaf shapes match an
+    existing group's per-segment shapes stack INTO that group (that group's
+    executable recompiles on next read — the documented cost of joining a
+    shape bucket); otherwise they form a new group. Every other group is
+    reused by reference, so its executables survive untouched. Returns
+    (new pool, index of the touched group)."""
+    seg_shapes = tuple(
+        tuple(leaf.shape[1:]) for leaf in jax.tree.leaves(segment)
+    )
+    groups = list(pool.groups)
+    for g, group in enumerate(groups):
+        if seg_shapes == tuple(
+            tuple(leaf.shape[1:]) for leaf in jax.tree.leaves(group)
+        ):
+            groups[g] = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), group, segment
+            )
+            return SegmentPool(groups=groups), g
+    groups.append(segment)
+    return SegmentPool(groups=groups), len(groups) - 1
+
+
+def remove_segments(
+    pool: SegmentPool, picks: Sequence[tuple[int, int]]
+) -> SegmentPool:
+    """Drop the (group, segment-in-group) picks. Groups losing segments
+    shrink (their executables recompile); groups losing ALL segments
+    disappear; untouched groups are reused by reference."""
+    by_group: dict[int, set[int]] = {}
+    for g, s in picks:
+        by_group.setdefault(g, set()).add(s)
+    groups = []
+    for g, group in enumerate(pool.groups):
+        drop = by_group.get(g)
+        if not drop:
+            groups.append(group)
+            continue
+        keep = [s for s in range(group.n_segments) if s not in drop]
+        if keep:
+            keep_idx = jnp.asarray(keep, jnp.int32)
+            groups.append(
+                jax.tree.map(lambda a: jnp.take(a, keep_idx, axis=0), group)
+            )
+    return SegmentPool(groups=groups)
+
+
+def extract_segment_docs(
+    pool: SegmentPool, g: int, s: int
+) -> tuple[FusedVectors, np.ndarray, np.ndarray]:
+    """Live docs of one pooled segment (corpus rows, global ids, entity
+    rows) — the merge input."""
+    group = pool.groups[g]
+    one = jax.tree.map(lambda a: a[s : s + 1], group)
+    return alive_docs(one)
+
+
+# ---------------------------------------------------------------------------
+# Placement: logical segments -> physical devices (many per device)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlacement:
+    """Where one shape group's segments live.
+
+    ``sharded=True``: the group's leading axis is split over the mesh's
+    segment axes — ``devices[s]`` is the segment-axis device index serving
+    segment s (each device owns a contiguous block of
+    ``n_segments / mesh_segment_count`` segments, searched in one vmapped
+    pass). ``sharded=False``: the group is replicated/host-local and served
+    by the collective-free local group search."""
+
+    group: int
+    n_segments: int
+    capacity: int
+    sharded: bool
+    devices: tuple[int, ...]
+
+
+def pool_placement(pool: SegmentPool, mesh=None) -> list[GroupPlacement]:
+    """The placement map: which device serves which pooled segment. A group
+    shards iff its segment count divides the mesh's segment-axes device
+    count product; everything else is replicated (served locally)."""
+    msc = mesh_segment_count(mesh) if mesh is not None else 1
+    out = []
+    for g, group in enumerate(pool.groups):
+        n_seg = group.n_segments
+        sharded = mesh is not None and msc > 1 and n_seg % msc == 0
+        if sharded:
+            per = n_seg // msc
+            devices = tuple(s // per for s in range(n_seg))
+        else:
+            devices = (0,) * n_seg
+        out.append(
+            GroupPlacement(
+                group=g,
+                n_segments=n_seg,
+                capacity=int(group.global_ids.shape[1]),
+                sharded=sharded,
+                devices=devices,
+            )
+        )
+    return out
+
+
+def place_pool(pool: SegmentPool, mesh=None) -> SegmentPool:
+    """Device_put each group per the placement map: sharded groups over the
+    mesh segment axes, the rest replicated. Off-mesh, a no-op."""
+    if mesh is None:
+        return pool
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    placements = pool_placement(pool, mesh)
+    seg_sharding = NamedSharding(mesh, _segment_spec(mesh))
+    rep_sharding = NamedSharding(mesh, P())
+    groups = []
+    for group, pl in zip(pool.groups, placements):
+        sharding = seg_sharding if pl.sharded else rep_sharding
+        groups.append(
+            jax.tree.map(
+                lambda a: jax.device_put(a, sharding)
+                if hasattr(a, "shape")
+                else a,
+                group,
+            )
+        )
+    return SegmentPool(groups=groups)

@@ -141,10 +141,31 @@ class IngestPipeline:
             )
         return self._projection
 
-    def fit(self, texts: Sequence[str]) -> IngestedCorpus:
+    def _check_dense(
+        self, dense_vectors, n: int
+    ) -> Optional[np.ndarray]:
+        """Validate caller-supplied embeddings (the embedder plug-in point:
+        any real model's vectors replace the hashed-projection stub)."""
+        if dense_vectors is None:
+            return None
+        dense = np.asarray(dense_vectors, np.float32)
+        if dense.shape != (n, self.config.d_dense):
+            raise ValueError(
+                f"dense_vectors must be ({n}, {self.config.d_dense}) to "
+                f"match the document count and IngestConfig.d_dense; got "
+                f"{dense.shape}"
+            )
+        return dense
+
+    def fit(
+        self, texts: Sequence[str], *, dense_vectors=None
+    ) -> IngestedCorpus:
         """One pass over the corpus: analyze, accumulate df/avg_dl, build
         the entity vocab + co-occurrence triplets, then encode every doc
-        with the just-frozen statistics."""
+        with the just-frozen statistics. ``dense_vectors`` (N, d_dense)
+        supplies precomputed embeddings in place of the hashed-projection
+        stub — queries and later inserts must then come from the SAME
+        embedder."""
         if self.fitted:
             raise RuntimeError(
                 "pipeline already fitted; stats are frozen — use "
@@ -174,7 +195,8 @@ class IngestPipeline:
         kg = KnowledgeGraph(triplets, n_entities=max(len(self.entity_vocab), 1))
 
         docs = self._encode_counts(
-            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical
+            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical,
+            dense=self._check_dense(dense_vectors, len(texts)),
         )
         return IngestedCorpus(
             docs=docs,
@@ -196,12 +218,15 @@ class IngestPipeline:
             [len(a) for a in analyzed],
         )
 
-    def _encode_counts(self, learned, lexical, lengths, nnz_l, nnz_f) -> FusedVectors:
+    def _encode_counts(
+        self, learned, lexical, lengths, nnz_l, nnz_f, *, dense=None
+    ) -> FusedVectors:
         tfidf_rows = [tfidf_weights(c, self.stats) for c in learned]
         bm25_rows = [
             bm25_weights(c, dl, self.stats) for c, dl in zip(lexical, lengths)
         ]
-        dense = hashed_dense_embedding(tfidf_rows, self.projection)
+        if dense is None:  # the hashed-projection stub is only the fallback
+            dense = hashed_dense_embedding(tfidf_rows, self.projection)
         norm = self.config.normalize_sparse
         return FusedVectors(
             dense,
@@ -210,15 +235,18 @@ class IngestPipeline:
         )
 
     def encode_docs(
-        self, texts: Sequence[str]
+        self, texts: Sequence[str], *, dense_vectors=None
     ) -> tuple[FusedVectors, np.ndarray]:
         """Encode new documents with the FROZEN stats (streaming path).
-        Entities unseen at fit time map to PAD (dropped until a refit)."""
+        Entities unseen at fit time map to PAD (dropped until a refit).
+        ``dense_vectors`` (N, d_dense) plugs in a real embedder's vectors
+        for these docs (use the same embedder the index was built with)."""
         self._require_fitted()
         cfg = self.config
         learned, lexical, lengths = self._analyze(texts)
         docs = self._encode_counts(
-            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical
+            learned, lexical, lengths, cfg.nnz_learned, cfg.nnz_lexical,
+            dense=self._check_dense(dense_vectors, len(texts)),
         )
         spans = [
             extract_entity_spans(t, gazetteer=cfg.gazetteer or None)
@@ -227,7 +255,9 @@ class IngestPipeline:
         ents = doc_entity_ids(spans, self.entity_vocab, cfg.entities_per_doc)
         return docs, ents
 
-    def encode_queries(self, texts: Sequence[str]) -> EncodedQueries:
+    def encode_queries(
+        self, texts: Sequence[str], *, dense_vectors=None
+    ) -> EncodedQueries:
         """Same tokenizer on the query side: TF-IDF/BM25 query vectors,
         double-quoted phrases -> required keywords, capitalized spans
         matched against the frozen vocab -> query entities.
@@ -242,7 +272,8 @@ class IngestPipeline:
         acfg = cfg.analyzer
         learned, lexical, lengths = self._analyze(texts)
         vectors = self._encode_counts(
-            learned, lexical, lengths, cfg.nnz_query_learned, cfg.nnz_query_lexical
+            learned, lexical, lengths, cfg.nnz_query_learned, cfg.nnz_query_lexical,
+            dense=self._check_dense(dense_vectors, len(texts)),
         )
 
         b = len(texts)
@@ -325,6 +356,7 @@ class IngestPipeline:
         *,
         key=None,
         with_entities: Optional[bool] = None,
+        dense_vectors=None,
     ) -> int:
         """Streaming ingestion: encode ``texts`` with the frozen stats and
         insert them through ``target.insert`` (a ``HybridSearchService`` or
@@ -332,10 +364,12 @@ class IngestPipeline:
         produced triplets — the same condition under which ``build``/
         ``build_sharded`` gave the index a KG (and the router its entity
         width); a triplet-less fit built a KG-less index whose inserts must
-        not carry entity rows. Override with ``with_entities``. Returns the
-        target's new snapshot version."""
+        not carry entity rows. Override with ``with_entities``. Pass
+        ``dense_vectors`` (N, d_dense) when the index was built from a real
+        embedder rather than the hashed stub. Returns the target's new
+        snapshot version."""
         self._require_fitted()
-        docs, ents = self.encode_docs(texts)
+        docs, ents = self.encode_docs(texts, dense_vectors=dense_vectors)
         if with_entities is None:
             with_entities = self.n_triplets > 0
         kwargs = {"new_doc_entities": ents} if with_entities else {}

@@ -21,6 +21,7 @@ import threading
 
 _lock = threading.Lock()
 _count = 0
+_built_rows = 0
 
 
 def tick(n: int = 1) -> None:
@@ -34,10 +35,25 @@ def count() -> int:
     return _count
 
 
+def build_rows_tick(n: int) -> None:
+    """Record ``n`` corpus rows entering a graph (re)build — the work measure
+    incremental compaction is gated on: ``compact_incremental`` must grow
+    this by O(grow segment), a full ``seal_and_compact`` by O(corpus)."""
+    global _built_rows
+    with _lock:
+        _built_rows += int(n)
+
+
+def build_rows() -> int:
+    """Total corpus rows fed through graph construction so far."""
+    return _built_rows
+
+
 def reset() -> None:
-    global _count
+    global _count, _built_rows
     with _lock:
         _count = 0
+        _built_rows = 0
 
 
 class _Tracker:

@@ -48,7 +48,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.distributed import SegmentedIndex, make_distributed_search_padded
+from repro.core.distributed import (
+    SegmentedIndex,
+    make_distributed_search_padded,
+    make_local_group_search,
+    mesh_segment_count,
+)
+from repro.core.segment_pool import SegmentPool, group_shape_key
 from repro.core.build_pipeline import insert as index_insert
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.index import mark_deleted as index_mark_deleted
@@ -102,7 +108,7 @@ class _Snapshot:
     optional grow segment of a segmented deployment: a small mutable-by-
     replacement HybridIndex plus its local-row -> global-id map."""
 
-    index: Union[HybridIndex, SegmentedIndex]
+    index: Union[HybridIndex, SegmentedIndex, SegmentPool]
     version: int
     grow: Optional[HybridIndex] = None
     grow_gids: Optional[jax.Array] = None  # (n_grow,) int32
@@ -113,7 +119,7 @@ class HybridSearchService:
 
     def __init__(
         self,
-        index: Union[HybridIndex, SegmentedIndex],
+        index: Union[HybridIndex, SegmentedIndex, SegmentPool],
         params: SearchParams,
         config: Optional[ServiceConfig] = None,
         *,
@@ -133,12 +139,21 @@ class HybridSearchService:
         self._cache_lock = threading.Lock()
         self._batcher = MicroBatcher(self.config.batcher)
         self._exec_cache: dict = {}
-        self._segmented = isinstance(index, SegmentedIndex)
+        self._pool = isinstance(index, SegmentPool)
+        self._segmented = isinstance(index, SegmentedIndex) or self._pool
         self._mesh = mesh
-        if self._segmented:
+        self._dist_fn = None
+        if isinstance(index, SegmentedIndex):
+            # a plain stacked index is served through the sharded executable
             if mesh is None:
                 raise ValueError("a SegmentedIndex service requires a mesh")
+        if self._segmented and mesh is not None:
             self._dist_fn = make_distributed_search_padded(mesh, params)
+        # pool groups off the mesh's segment axes (or the whole pool of an
+        # off-mesh deployment) are served by the collective-free local pass;
+        # any segmented service can become pool-fronted after an incremental
+        # compaction, so the local factory is always on hand
+        self._local_fn = make_local_group_search(params) if self._segmented else None
         self._build_cfg = build_cfg
         self._router = None  # set by serving.segment_router.SegmentRouter
         self._admission = (
@@ -228,15 +243,18 @@ class HybridSearchService:
             new_index, self._snap.version + 1, grow=grow, grow_gids=grow_gids
         )
         if not self.config.keep_stale_executables:
-            # prune on the SEALED index key only: the grow segment is read
+            # prune on the SEALED index keys only: the grow segment is read
             # through search_padded's own jit cache, so grow churn neither
             # adds nor evicts AOT entries — sealed executables stay warm
             # across every streaming insert (the cache-key invariant the
-            # grow-segment scheme exists to provide; DESIGN.md §6)
-            key_now = self._index_key(new_index)
+            # grow-segment scheme exists to provide; DESIGN.md §6). A pool
+            # publish keeps every executable whose shape group SURVIVED the
+            # mutation: compacting into one group never evicts the others
+            # (the cache-survival guarantee, DESIGN.md §8)
+            valid = self._valid_index_keys(new_index)
             with self._cache_lock:
                 self._exec_cache = {
-                    k: v for k, v in self._exec_cache.items() if k[0] == key_now
+                    k: v for k, v in self._exec_cache.items() if k[0] in valid
                 }
 
     def insert(
@@ -296,27 +314,31 @@ class HybridSearchService:
     @staticmethod
     def _index_key(index) -> tuple:
         if isinstance(index, SegmentedIndex):
-            return ("seg", index.n_segments, int(index.index.semantic_edges.shape[1]))
+            # the full shape signature: a stacked index serving as a pool
+            # group keeps the SAME key either way, so wrapping it into a
+            # SegmentPool never invalidates its cached executable
+            return group_shape_key(index)
         return ("single", index.n)
+
+    def _valid_index_keys(self, index) -> set:
+        """Executable-cache keys the given snapshot index can serve."""
+        if isinstance(index, SegmentPool):
+            return {group_shape_key(g) for g in index.groups}
+        return {self._index_key(index)}
 
     @property
     def executable_cache(self) -> dict:
-        """(index key, Bucket, SearchParams) -> AOT-compiled executable."""
+        """(index/group key, Bucket, SearchParams) -> AOT executable."""
         return self._exec_cache
 
-    def _get_executable(self, snap: _Snapshot, bucket: Bucket, args):
-        key = (self._index_key(snap.index), bucket, self.params)
+    def _compile_cached(self, key: tuple, lower):
         with self._cache_lock:
             exe = self._exec_cache.get(key)
         if exe is not None:
             return exe
         # compile outside the lock: a cold bucket must not stall warm-bucket
         # batches or snapshot publishes behind a multi-second XLA compile
-        if self._segmented:
-            lowered = self._dist_fn.lower(snap.index, *args)
-        else:
-            lowered = search_padded.lower(snap.index, *args, self.params)
-        exe = lowered.compile()
+        exe = lower().compile()
         with self._cache_lock:
             winner = self._exec_cache.get(key)
             if winner is not None:
@@ -325,11 +347,34 @@ class HybridSearchService:
             # don't re-add an executable its prune already evicted
             if (
                 self.config.keep_stale_executables
-                or key[0] == self._index_key(self._snap.index)
+                or key[0] in self._valid_index_keys(self._snap.index)
             ):
                 self._exec_cache[key] = exe
             self.stats.compiles += 1
         return exe
+
+    def _get_executable(self, snap: _Snapshot, bucket: Bucket, args):
+        key = (self._index_key(snap.index), bucket, self.params)
+        if self._segmented:
+            lower = lambda: self._dist_fn.lower(snap.index, *args)
+        else:
+            lower = lambda: search_padded.lower(snap.index, *args, self.params)
+        return self._compile_cached(key, lower)
+
+    def _group_runner(self, group: SegmentedIndex):
+        """Pick the executable factory for one pool group per the placement
+        map: the sharded pass when the group divides over the mesh's segment
+        devices, else the collective-free local pass."""
+        if self._dist_fn is not None and self._mesh is not None:
+            msc = mesh_segment_count(self._mesh)
+            if msc > 1 and group.n_segments % msc == 0:
+                return self._dist_fn
+        return self._local_fn
+
+    def _get_group_executable(self, group: SegmentedIndex, bucket: Bucket, args):
+        key = (group_shape_key(group), bucket, self.params)
+        fn = self._group_runner(group)
+        return self._compile_cached(key, lambda: fn.lower(group, *args))
 
     # -- request path -------------------------------------------------------
 
@@ -421,6 +466,28 @@ class HybridSearchService:
     # large-negative fill for merged pad slots (matches distributed NEG_FILL)
     _NEG_FILL = np.float32(-1e30)
 
+    @classmethod
+    def _merge_host(cls, ids_parts, score_parts, k):
+        """Per-row top-k merge of several result blocks in global-id space.
+        Every global id lives in exactly one segment, so the merged rows are
+        duplicate-free by construction."""
+        all_ids = np.concatenate(ids_parts, axis=1)
+        all_scores = np.concatenate(
+            [
+                np.where(i >= 0, s, -np.inf)
+                for i, s in zip(ids_parts, score_parts)
+            ],
+            axis=1,
+        )
+        order = np.argsort(-all_scores, axis=1, kind="stable")[:, :k]
+        m_ids = np.take_along_axis(all_ids, order, axis=1)
+        m_scores = np.take_along_axis(all_scores, order, axis=1)
+        valid = np.isfinite(m_scores)
+        return (
+            np.where(valid, m_ids, PAD_IDX).astype(np.int32),
+            np.where(valid, m_scores, cls._NEG_FILL).astype(np.float32),
+        )
+
     def _merge_grow(self, snap: _Snapshot, args, ids, scores, expanded):
         """Phase two of a segmented read: search the grow segment and merge
         per-row top-k with the sealed results in global-id space.
@@ -439,28 +506,46 @@ class HybridSearchService:
             PAD_IDX,
         )
         g_scores = np.where(g_local >= 0, np.asarray(gres.scores), -np.inf)
-        all_ids = np.concatenate([ids, g_ids], axis=1)
-        all_scores = np.concatenate(
-            [np.where(ids >= 0, scores, -np.inf), g_scores], axis=1
+        m_ids, m_scores = self._merge_host(
+            [ids, g_ids], [scores, g_scores], ids.shape[1]
         )
-        k = ids.shape[1]
-        order = np.argsort(-all_scores, axis=1, kind="stable")[:, :k]
-        m_ids = np.take_along_axis(all_ids, order, axis=1)
-        m_scores = np.take_along_axis(all_scores, order, axis=1)
-        valid = np.isfinite(m_scores)
-        m_ids = np.where(valid, m_ids, PAD_IDX).astype(ids.dtype)
-        m_scores = np.where(valid, m_scores, self._NEG_FILL).astype(np.float32)
         return m_ids, m_scores, expanded + np.asarray(gres.expanded)
+
+    def _run_pool(self, pool: SegmentPool, bucket: Bucket, args):
+        """Pool read: one cached executable per shape group, merged per-row
+        in global-id space. Groups untouched by a compaction keep hitting
+        their existing executables."""
+        # dispatch EVERY group before blocking on any result: jax executes
+        # asynchronously, so the groups' device work overlaps instead of
+        # paying the sum of per-group latencies
+        results = [
+            self._get_group_executable(group, bucket, args)(group, *args)
+            for group in pool.groups
+        ]
+        ids_parts, score_parts = [], []
+        expanded = np.int64(0)
+        for res in results:
+            ids_parts.append(np.asarray(res.ids))
+            score_parts.append(np.asarray(res.scores))
+            expanded = expanded + np.asarray(res.expanded)
+        if len(ids_parts) == 1:
+            return ids_parts[0], score_parts[0], expanded
+        k = ids_parts[0].shape[1]
+        m_ids, m_scores = self._merge_host(ids_parts, score_parts, k)
+        return m_ids, m_scores, expanded
 
     def _run_batch(self, bucket: Bucket, entries) -> None:
         try:
             snap = self._snap  # one snapshot for the whole batch
             args = self._assemble(bucket, entries)
-            exe = self._get_executable(snap, bucket, args)
-            res = exe(snap.index, *args)
-            ids = np.asarray(res.ids)
-            scores = np.asarray(res.scores)
-            expanded = np.asarray(res.expanded)
+            if isinstance(snap.index, SegmentPool):
+                ids, scores, expanded = self._run_pool(snap.index, bucket, args)
+            else:
+                exe = self._get_executable(snap, bucket, args)
+                res = exe(snap.index, *args)
+                ids = np.asarray(res.ids)
+                scores = np.asarray(res.scores)
+                expanded = np.asarray(res.expanded)
             if snap.grow is not None:
                 ids, scores, expanded = self._merge_grow(
                     snap, args, ids, scores, expanded

@@ -24,16 +24,19 @@ module closes that gap with the classic vector-DB grow-segment scheme
     (``core.distributed.mark_deleted_segmented``) — shape-preserving, so no
     recompiles;
   * **compacted** — when the grow segment's live docs cross
-    ``RouterConfig.seal_threshold``, ``seal_and_compact`` rebuilds ALL
-    surviving docs (sealed minus tombstones, plus live grow docs) into a
-    fresh S-segment sealed index via ``build_index_sharded`` (or the
-    sequential ``build_segmented_index`` off-mesh), preserving global ids,
-    and atomically publishes it through ``HybridSearchService._publish``.
-    S stays equal to the mesh's segment-device count — the
-    one-segment-per-device contract of the sharded search — so the same
-    distributed executable factory keeps serving; per-segment shapes do
-    change here, which is the one (documented) point where sealed
-    executables recompile.
+    ``RouterConfig.seal_threshold``, ``compact()`` runs the configured
+    compaction. ``compact_incremental`` (the default for pool-fronted
+    services) seals the grow segment into ONE new pooled segment — O(grow)
+    build work, tombstoned grow rows dropped, entity rows carried — and
+    appends it to the ``core.segment_pool.SegmentPool`` at pow2 capacity;
+    untouched shape groups keep their compiled executables (DESIGN.md §8),
+    and a size-tiered ``merge_segments`` policy (``maybe_merge_segments``)
+    bounds fragmentation LSM-style. ``seal_and_compact`` remains the full
+    rebuild: ALL surviving docs (sealed minus tombstones, plus live grow
+    docs) rebuilt into a fresh stacked index via ``build_index_sharded``
+    (or the sequential ``build_segmented_index`` off-mesh), preserving
+    global ids — O(corpus), total tombstone reclamation, every sealed
+    executable recompiles.
 
 Every mutation happens under the service's write lock and lands as one
 atomic ``_Snapshot`` publish: readers either see (old sealed, old grow) or
@@ -59,11 +62,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.build_pipeline import build_index, insert as index_insert
+from repro.core.build_pipeline import (
+    build_index,
+    insert as index_insert,
+    map_index_rows,
+    pad_index_rows,
+    slice_index_rows,
+)
 from repro.core.distributed import (
     alive_docs,
     compact_segmented_index,
     mark_deleted_segmented,
+    mesh_segment_count,
     place_segmented_index,
     resolve_global_ids,
 )
@@ -72,15 +82,29 @@ from repro.core.index import (
     HybridIndex,
     mark_deleted as index_mark_deleted,
 )
+from repro.core.logical_edges import build_logical_edges
 from repro.core.search import SearchParams
-from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+from repro.core.segment_pool import (
+    SegmentPool,
+    alive_docs_pool,
+    append_segment,
+    build_pool_segment,
+    extract_segment_docs,
+    live_counts,
+    mark_deleted_pool,
+    place_pool,
+    remove_segments,
+    resolve_global_ids_pool,
+    widen_entities,
+)
+from repro.core.usms import PAD_IDX, FusedVectors
 from repro.serving.batcher import _next_pow2
 from repro.serving.hybrid_service import HybridSearchService
 
 
 @dataclasses.dataclass(frozen=True)
 class RouterConfig:
-    seal_threshold: int = 256  # live grow docs that trigger seal-and-compact
+    seal_threshold: int = 256  # live grow docs that trigger compaction
     auto_compact: bool = True  # compact from insert() when over threshold
     # optional override for the insert probe's search breadth (k and the
     # edge paths are forced by the build config; see build_pipeline.insert)
@@ -94,56 +118,29 @@ class RouterConfig:
     # are dead — alive=False, PAD edges — and unreachable: no entry point or
     # edge ever references them)
     grow_pow2: bool = True
+    # compaction mode: "incremental" seals the grow segment into ONE pooled
+    # segment (O(grow) build work); "full" rebuilds every surviving doc into
+    # a fresh stacked index (O(corpus), reclaims all tombstones). None =
+    # auto: incremental when the service fronts a SegmentPool, full for a
+    # plain SegmentedIndex (back-compat with pre-pool deployments)
+    compaction: Optional[str] = None
+    # quantize sealed pool-segment capacity to the next power of two, so
+    # segments land in O(log corpus) shape groups and executables are reused
+    seal_pow2: bool = True
+    # size-tiered (LSM-style) merge invariant: at most tier_fanout segments
+    # per pow2-capacity tier; maybe_merge_segments() coalesces the smallest
+    # two of an offending tier. auto_merge runs it after each incremental
+    # compaction
+    tier_fanout: int = 4
+    auto_merge: bool = True
 
 
-def _map_grow_rows(index: HybridIndex, fn) -> HybridIndex:
-    """Apply ``fn(array, pad_fill)`` to every per-row (axis-0 == N) leaf of a
-    grow-segment index; entity tables and entry points are N-independent."""
-    return dataclasses.replace(
-        index,
-        corpus=FusedVectors(
-            fn(index.corpus.dense, 0),
-            SparseVec(
-                fn(index.corpus.learned.idx, PAD_IDX),
-                fn(index.corpus.learned.val, 0),
-            ),
-            SparseVec(
-                fn(index.corpus.lexical.idx, PAD_IDX),
-                fn(index.corpus.lexical.val, 0),
-            ),
-        ),
-        semantic_edges=fn(index.semantic_edges, PAD_IDX),
-        keyword_edges=fn(index.keyword_edges, PAD_IDX),
-        logical_edges=fn(index.logical_edges, PAD_IDX),
-        doc_entities=fn(index.doc_entities, PAD_IDX),
-        alive=fn(index.alive, False),
-        self_ip=fn(index.self_ip, 0.0),
-    )
-
-
-def pad_grow_to_capacity(index: HybridIndex, capacity: int) -> HybridIndex:
-    """Pad a grow segment's per-row arrays with DEAD rows up to ``capacity``
-    (shape-bucketing). Pad rows are unreachable by construction: entry
-    points and edges only reference real rows, ``alive`` is False, and the
-    grow-gid map never covers them."""
-    n = index.n
-    if capacity <= n:
-        return index
-
-    def pad(a, fill):
-        return jnp.concatenate(
-            [a, jnp.full((capacity - n,) + a.shape[1:], fill, a.dtype)]
-        )
-
-    return _map_grow_rows(index, pad)
-
-
-def slice_grow_rows(index: HybridIndex, n: int) -> HybridIndex:
-    """Drop a padded grow segment's dead tail (inverse of
-    ``pad_grow_to_capacity`` — the raw index inserts extend)."""
-    if index.n == n:
-        return index
-    return _map_grow_rows(index, lambda a, _fill: a[:n])
+# retained names: the row pad/slice helpers moved to core.build_pipeline so
+# the segment pool can share them (pool segments are shape-bucketed the same
+# way the published grow segment is)
+_map_grow_rows = map_index_rows
+pad_grow_to_capacity = pad_index_rows
+slice_grow_rows = slice_index_rows
 
 
 @dataclasses.dataclass
@@ -154,7 +151,9 @@ class RouterStats:
     deleted_sealed: int = 0  # ids tombstoned in sealed segments
     deleted_grow: int = 0  # ids tombstoned in the grow segment
     unknown_deletes: int = 0  # ids found nowhere (already compacted away?)
-    compactions: int = 0
+    compactions: int = 0  # all compactions (full + incremental)
+    incremental_compactions: int = 0
+    merges: int = 0  # background segment merges
 
 
 class SegmentRouter:
@@ -190,7 +189,14 @@ class SegmentRouter:
         # anything wider means the sealed index carries entity paths that a
         # triplet-less compaction would silently destroy — fail fast unless
         # the caller explicitly opted into that loss
-        sealed_has_kg = service._snap.index.index.entity_adj.shape[-1] > 1
+        sealed = service._snap.index
+        if isinstance(sealed, SegmentPool):
+            sealed_has_kg = sealed.has_kg
+            self._next_gid = sealed.max_global_id() + 1
+        else:
+            sealed_has_kg = sealed.index.entity_adj.shape[-1] > 1
+            gids = np.asarray(sealed.global_ids)
+            self._next_gid = int(gids.max()) + 1 if (gids >= 0).any() else 0
         if (
             sealed_has_kg
             and self._kg_triplets is None
@@ -198,12 +204,10 @@ class SegmentRouter:
         ):
             raise ValueError(
                 "the sealed index carries knowledge-graph data but the "
-                "router has no kg_triplets: seal_and_compact would drop "
-                "every entity path. Pass kg_triplets/n_entities, or set "
+                "router has no kg_triplets: compaction would drop every "
+                "entity path. Pass kg_triplets/n_entities, or set "
                 "RouterConfig(allow_kg_loss_on_compact=True) to accept it."
             )
-        gids = np.asarray(service._snap.index.global_ids)
-        self._next_gid = int(gids.max()) + 1 if (gids >= 0).any() else 0
         self._grow_raw: Optional[HybridIndex] = None
         if service._snap.grow_gids is not None:
             # re-attaching over a live grow segment: its ids are allocated
@@ -241,6 +245,46 @@ class SegmentRouter:
         grow = self.service._snap.grow
         return 0 if grow is None else int(np.asarray(grow.alive).sum())
 
+    @property
+    def pool(self) -> Optional[SegmentPool]:
+        """The sealed segment pool (None while fronting a plain stacked
+        index that has never compacted incrementally)."""
+        idx = self.service._snap.index
+        return idx if isinstance(idx, SegmentPool) else None
+
+    @property
+    def compaction_mode(self) -> str:
+        """Resolved ``RouterConfig.compaction``: explicit setting, else
+        incremental for pool-fronted services and full otherwise."""
+        if self.config.compaction is not None:
+            return self.config.compaction
+        return "incremental" if self.pool is not None else "full"
+
+    @staticmethod
+    def _entity_width(index) -> int:
+        if isinstance(index, SegmentPool):
+            return index.entity_width
+        return int(index.index.doc_entities.shape[-1])
+
+    @staticmethod
+    def _as_pool(index) -> SegmentPool:
+        """Wrap a stacked index as a single-group pool (no copy: its cached
+        executable keeps serving — the keys are shape-identical)."""
+        return (
+            index
+            if isinstance(index, SegmentPool)
+            else SegmentPool.from_segmented(index)
+        )
+
+    def _kg_kwargs(self, doc_entities: Optional[np.ndarray]) -> dict:
+        if self._kg_triplets is None or self._n_entities <= 0:
+            return {}
+        return dict(
+            kg_triplets=self._kg_triplets,
+            doc_entities=doc_entities,
+            n_entities=self._n_entities,
+        )
+
     # -- writes (all under the service write lock, atomic publishes) --------
 
     def insert(
@@ -265,7 +309,7 @@ class SegmentRouter:
                     "graph: pass kg_triplets/n_entities at construction"
                 )
             new_doc_entities = np.asarray(new_doc_entities, np.int32)
-            ent_width = int(svc._snap.index.index.doc_entities.shape[-1])
+            ent_width = self._entity_width(svc._snap.index)
             if new_doc_entities.shape != (n_new, ent_width):
                 raise ValueError(
                     f"new_doc_entities must be ({n_new}, {ent_width}) to "
@@ -287,7 +331,7 @@ class SegmentRouter:
                     # hit build_pipeline.insert's width check
                     ents = new_doc_entities
                     if ents is None:
-                        width = int(snap.index.index.doc_entities.shape[-1])
+                        width = self._entity_width(snap.index)
                         ents = np.full((n_new, width), PAD_IDX, np.int32)
                     kg_kwargs = dict(
                         kg_triplets=self._kg_triplets,
@@ -308,6 +352,12 @@ class SegmentRouter:
                     new_doc_entities=new_doc_entities,
                     search_params=self.config.insert_search,
                 )
+                if new_doc_entities is not None:
+                    # logical edges append INCREMENTALLY: docs inserted into
+                    # an already-born grow segment get their entity paths
+                    # now, not at the next compaction (host-side numpy over
+                    # the small grow segment — O(grow))
+                    grow = self._rebuild_grow_logical_edges(grow)
                 gids = jnp.concatenate([snap.grow_gids, jnp.asarray(new_gids)])
             self._next_gid += n_new
             self._grow_raw = grow
@@ -321,8 +371,38 @@ class SegmentRouter:
             self.config.auto_compact
             and self.live_grow_size >= self.config.seal_threshold
         ):
-            return self.seal_and_compact()
+            return self.compact()
         return version
+
+    def _rebuild_grow_logical_edges(self, grow: HybridIndex) -> HybridIndex:
+        """Recompute the grow segment's logical edges over its FULL entity
+        table (``build_pipeline.insert`` only appends PAD logical rows).
+        Shape-stable: the caps and entity-table dims come from the build
+        config and the frozen entity vocab."""
+        if self._kg_triplets is None or self._n_entities <= 0:
+            return grow
+        log = build_logical_edges(
+            self._kg_triplets,
+            np.asarray(grow.doc_entities),
+            self._n_entities,
+            l_cap=self.build_cfg.logical_cap,
+            m_cap=self.build_cfg.entity_doc_cap,
+        )
+        return dataclasses.replace(
+            grow,
+            logical_edges=jnp.asarray(log.edges),
+            doc_entities=jnp.asarray(log.doc_entities),
+            entity_to_docs=jnp.asarray(log.entity_to_docs),
+            entity_adj=jnp.asarray(log.entity_adj),
+        )
+
+    def compact(self, *, key: Optional[jax.Array] = None) -> int:
+        """Run the configured compaction: ``compact_incremental`` seals the
+        grow segment into one pooled segment (O(grow) build work);
+        ``seal_and_compact`` rebuilds everything (O(corpus))."""
+        if self.compaction_mode == "incremental":
+            return self.compact_incremental(key=key)
+        return self.seal_and_compact(key=key)
 
     def delete(self, global_ids) -> int:
         """Tombstone docs by global id, wherever they live: sealed ids
@@ -334,8 +414,13 @@ class SegmentRouter:
         ids = np.atleast_1d(np.asarray(global_ids, np.int64))
         with svc._write_lock:
             snap = svc._snap
-            seg, loc = resolve_global_ids(snap.index, ids)
-            in_sealed = seg >= 0
+            pooled = isinstance(snap.index, SegmentPool)
+            if pooled:
+                grp, seg, loc = resolve_global_ids_pool(snap.index, ids)
+                in_sealed = grp >= 0
+            else:
+                seg, loc = resolve_global_ids(snap.index, ids)
+                in_sealed = seg >= 0
             grow, grow_gids = snap.grow, snap.grow_gids
             in_grow = np.zeros(ids.shape, bool)
             if grow is not None:
@@ -353,10 +438,17 @@ class SegmentRouter:
                     self._grow_raw = index_mark_deleted(self._grow_raw, rows)
             sealed = snap.index
             if in_sealed.any():
-                sealed = mark_deleted_segmented(
-                    sealed, ids[in_sealed],
-                    resolved=(seg[in_sealed], loc[in_sealed]),
-                )
+                if pooled:
+                    sealed = mark_deleted_pool(
+                        sealed, ids[in_sealed],
+                        resolved=(grp[in_sealed], seg[in_sealed],
+                                  loc[in_sealed]),
+                    )
+                else:
+                    sealed = mark_deleted_segmented(
+                        sealed, ids[in_sealed],
+                        resolved=(seg[in_sealed], loc[in_sealed]),
+                    )
             svc._publish(sealed, grow=grow, grow_gids=grow_gids)
             self.stats.deletes += 1
             self.stats.deleted_sealed += int(in_sealed.sum())
@@ -377,12 +469,30 @@ class SegmentRouter:
         svc = self.service
         with svc._write_lock:
             snap = svc._snap
-            if snap.grow is None and not bool(
-                (~np.asarray(snap.index.index.alive)
-                 & (np.asarray(snap.index.global_ids) >= 0)).any()
-            ):
-                return snap.version  # nothing growing, nothing tombstoned
-            sealed_corpus, sealed_gids, sealed_ents = alive_docs(snap.index)
+            pooled = isinstance(snap.index, SegmentPool)
+            if pooled:
+                tombstoned = any(
+                    bool(
+                        (~np.asarray(g.index.alive)
+                         & (np.asarray(g.global_ids) >= 0)).any()
+                    )
+                    for g in snap.index.groups
+                )
+                fragmented = snap.index.n_groups > 1
+            else:
+                tombstoned = bool(
+                    (~np.asarray(snap.index.index.alive)
+                     & (np.asarray(snap.index.global_ids) >= 0)).any()
+                )
+                fragmented = False
+            if snap.grow is None and not tombstoned and not fragmented:
+                return snap.version  # nothing growing, nothing to reclaim
+            if pooled:
+                sealed_corpus, sealed_gids, sealed_ents = alive_docs_pool(
+                    snap.index
+                )
+            else:
+                sealed_corpus, sealed_gids, sealed_ents = alive_docs(snap.index)
             parts_corpus, parts_gids = [sealed_corpus], [sealed_gids]
             parts_ents = [sealed_ents]
             ent_width = sealed_ents.shape[-1]
@@ -398,11 +508,9 @@ class SegmentRouter:
                     parts_gids.append(np.asarray(snap.grow_gids)[live])
                     # grow entity rows, padded/clipped to the sealed width
                     # (a KG-less grow segment has width-1 all-PAD rows)
-                    g_ents = np.asarray(snap.grow.doc_entities)[live]
-                    ents = np.full((live.size, ent_width), PAD_IDX, np.int32)
-                    w = min(ent_width, g_ents.shape[-1])
-                    ents[:, :w] = g_ents[:, :w]
-                    parts_ents.append(ents)
+                    parts_ents.append(widen_entities(
+                        np.asarray(snap.grow.doc_entities)[live], ent_width
+                    ))
             corpus = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=0), *parts_corpus
             )
@@ -416,17 +524,194 @@ class SegmentRouter:
                     doc_entities=np.concatenate(parts_ents, axis=0),
                     n_entities=self._n_entities,
                 )
+            if pooled:
+                # a pool full-rebuild collapses every group into one fresh
+                # stacked index spread over the mesh's segment devices —
+                # total tombstone/fragmentation reclamation
+                n_segments = (
+                    mesh_segment_count(svc._mesh)
+                    if svc._mesh is not None
+                    else 1
+                )
+            else:
+                n_segments = snap.index.n_segments
             new_seg = compact_segmented_index(
                 corpus,
                 gids,
-                snap.index.n_segments,
+                n_segments,
                 self.build_cfg,
                 mesh=svc._mesh,
                 key=key,
                 **kg_kwargs,
             )
-            new_seg = place_segmented_index(new_seg, svc._mesh)
-            svc._publish(new_seg, grow=None, grow_gids=None)
+            if svc._mesh is not None:
+                new_seg = place_segmented_index(new_seg, svc._mesh)
+            published = self._as_pool(new_seg) if pooled else new_seg
+            svc._publish(published, grow=None, grow_gids=None)
             self._grow_raw = None
             self.stats.compactions += 1
             return svc._snap.version
+
+    def compact_incremental(self, *, key: Optional[jax.Array] = None) -> int:
+        """Seal the grow segment into ONE new pooled segment: rebuild only
+        its live rows (O(grow segment) build work, asserted against the
+        ``dispatch.build_rows`` counter by tests), carry their entity rows,
+        drop its tombstones, and append to the pool — at pow2 capacity when
+        ``RouterConfig.seal_pow2``, so segments land in reusable shape
+        groups. Sealed segments are NEVER touched: their tombstones wait for
+        ``merge_segments``/``seal_and_compact``, and every group the new
+        segment does not join keeps its compiled executables byte-identical
+        (verified by ``test_segment_pool.py``). Publishes atomically with
+        the grow segment cleared; then runs the size-tier merge policy when
+        ``auto_merge`` is on."""
+        svc = self.service
+        with svc._write_lock:
+            snap = svc._snap
+            if snap.grow is None:
+                return snap.version
+            pool = self._as_pool(snap.index)
+            live = np.flatnonzero(np.asarray(snap.grow.alive))
+            if live.size == 0:
+                # every grow doc was tombstoned: dropping the grow segment
+                # IS the compaction
+                svc._publish(pool, grow=None, grow_gids=None)
+                self._grow_raw = None
+                self.stats.compactions += 1
+                self.stats.incremental_compactions += 1
+                return svc._snap.version
+            grow_corpus = jax.tree.map(
+                lambda a: jnp.asarray(np.asarray(a)[live]), snap.grow.corpus
+            )
+            gids = np.asarray(snap.grow_gids)[live]
+            ents = widen_entities(
+                np.asarray(snap.grow.doc_entities)[live],
+                self._entity_width(snap.index),
+            )
+            if key is None:
+                key = jax.random.fold_in(jax.random.key(29), snap.version)
+            capacity = (
+                _next_pow2(int(live.size))
+                if self.config.seal_pow2
+                else int(live.size)
+            )
+            segment = build_pool_segment(
+                grow_corpus,
+                gids,
+                self.build_cfg,
+                capacity=capacity,
+                key=key,
+                **self._kg_kwargs(ents),
+            )
+            pool, _ = append_segment(pool, segment)
+            pool = place_pool(pool, svc._mesh)
+            svc._publish(pool, grow=None, grow_gids=None)
+            self._grow_raw = None
+            self.stats.compactions += 1
+            self.stats.incremental_compactions += 1
+            version = svc._snap.version
+        if self.config.auto_merge:
+            self.maybe_merge_segments()
+            version = svc._snap.version
+        return version
+
+    def merge_segments(
+        self,
+        a: tuple[int, int],
+        b: tuple[int, int],
+        *,
+        key: Optional[jax.Array] = None,
+    ) -> int:
+        """Coalesce two pooled segments — (group, segment-in-group) pairs —
+        into one: gather their LIVE docs (tombstones are physically
+        reclaimed here), rebuild one segment, remove the two old ones, and
+        append the merged one. O(live docs of a + b); every group not
+        holding a or b keeps its executables."""
+        with self.service._write_lock:
+            return self._merge_segments_locked(a, b, key=key)
+
+    def _merge_segments_locked(
+        self,
+        a: tuple[int, int],
+        b: tuple[int, int],
+        *,
+        key: Optional[jax.Array] = None,
+    ) -> int:
+        svc = self.service
+        if a == b:
+            raise ValueError("cannot merge a segment with itself")
+        snap = svc._snap
+        pool = self._as_pool(snap.index)
+        for g, s in (a, b):
+            if g >= pool.n_groups or s >= pool.groups[g].n_segments:
+                raise ValueError(f"no pooled segment ({g}, {s})")
+        ca, ga, ea = extract_segment_docs(pool, *a)
+        cb, gb, eb = extract_segment_docs(pool, *b)
+        width = max(ea.shape[-1], eb.shape[-1])
+        corpus = jax.tree.map(
+            lambda x, y: jnp.concatenate([x, y], axis=0), ca, cb
+        )
+        gids = np.concatenate([ga, gb])
+        ents = np.concatenate(
+            [widen_entities(ea, width), widen_entities(eb, width)], axis=0
+        )
+        pool = remove_segments(pool, [a, b])
+        if corpus.n == 0:
+            # both segments were fully tombstoned: removal is the merge
+            if not pool.groups:
+                return snap.version  # never publish an empty pool
+        else:
+            if key is None:
+                key = jax.random.fold_in(jax.random.key(31), snap.version)
+            capacity = (
+                _next_pow2(int(corpus.n))
+                if self.config.seal_pow2
+                else int(corpus.n)
+            )
+            merged = build_pool_segment(
+                corpus,
+                gids,
+                self.build_cfg,
+                capacity=capacity,
+                key=key,
+                **self._kg_kwargs(ents),
+            )
+            pool, _ = append_segment(pool, merged)
+        pool = place_pool(pool, svc._mesh)
+        svc._publish(pool, grow=snap.grow, grow_gids=snap.grow_gids)
+        self.stats.merges += 1
+        return svc._snap.version
+
+    def maybe_merge_segments(self, *, key: Optional[jax.Array] = None) -> int:
+        """Enforce the size-tiered merge invariant: at most
+        ``RouterConfig.tier_fanout`` segments per pow2-capacity tier. While
+        a tier is over fanout, merge its two segments with the fewest live
+        docs (LSM-style: merges migrate small segments up the tiers, so
+        total merge work per doc is O(log corpus) over its lifetime).
+        Each pick-and-merge runs atomically under the service write lock
+        (a pick computed outside it could go stale against a concurrent
+        compaction or merge). Returns the number of merges performed."""
+        merges = 0
+        while True:
+            with self.service._write_lock:
+                snap = self.service._snap
+                if not isinstance(snap.index, SegmentPool):
+                    return merges
+                tiers: dict[int, list[tuple[int, int, int]]] = {}
+                for g, s, cap, live in live_counts(snap.index):
+                    tiers.setdefault(max(cap, 1).bit_length(), []).append(
+                        (live, g, s)
+                    )
+                offending = [
+                    members
+                    for members in tiers.values()
+                    if len(members) > self.config.tier_fanout
+                ]
+                if not offending:
+                    return merges
+                members = sorted(offending[0])
+                a, b = members[0][1:], members[1][1:]
+                v0 = snap.version
+                self._merge_segments_locked(a, b, key=key)
+                if self.service._snap.version == v0:
+                    return merges  # merge declined (would empty the pool)
+            merges += 1

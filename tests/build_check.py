@@ -87,6 +87,33 @@ def main():
     assert rec_par > 0.8, f"sharded-build recall too low: {rec_par}"
     assert abs(rec_par - rec_ref) < 0.05, (rec_par, rec_ref)
     print(f"recall: sharded={rec_par:.3f} sequential={rec_ref:.3f}")
+
+    # multi-segment-per-device (segment-pool contract): S=4 on the 2-device
+    # mesh — each device builds AND searches 2 segments (lax.map in the
+    # builder, the vmapped local pre-merge in the search). Same per-segment
+    # keys as the sequential build, so the id maps must agree exactly.
+    seg4_par = build_index_sharded(corpus.docs, 4, cfg, mesh=mesh, key=key)
+    seg4_ref = build_segmented_index(corpus.docs, 4, cfg, key=key)
+    np.testing.assert_array_equal(
+        np.asarray(seg4_par.global_ids), np.asarray(seg4_ref.global_ids)
+    )
+    sem4_par = np.asarray(seg4_par.index.semantic_edges)
+    sem4_ref = np.asarray(seg4_ref.index.semantic_edges)
+    overlap4 = np.mean(
+        [
+            len(set(a[a >= 0]) & set(b[b >= 0])) / max(len(set(a[a >= 0])), 1)
+            for seg_a, seg_b in zip(sem4_par, sem4_ref)
+            for a, b in zip(seg_a, seg_b)
+        ]
+    )
+    assert overlap4 > 0.75, f"S=4 edge overlap too low: {overlap4:.3f}"
+    rec4 = recall_at_k(
+        np.asarray(run(seg4_par, corpus.queries).ids), np.asarray(truth)
+    )
+    assert rec4 > 0.8, f"2-segments-per-device recall too low: {rec4}"
+    print(
+        f"S=4 on 2 devices: edge overlap={overlap4:.3f} recall={rec4:.3f}"
+    )
     print("BUILD_CHECK_PASS")
 
 

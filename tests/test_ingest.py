@@ -85,6 +85,39 @@ def test_encode_requires_fit():
         pipe.encode_queries(["some text"])
 
 
+def test_precomputed_dense_vectors_plugin(fitted):
+    """The embedder plug-in point: caller-supplied (N, d_dense) vectors
+    replace the hashed-projection stub verbatim (docs AND queries), and
+    wrong shapes are rejected before anything is encoded."""
+    pipe, _, texts, _ = fitted
+    d = pipe.config.d_dense
+    rng = np.random.default_rng(3)
+    mine = rng.standard_normal((2, d)).astype(np.float32)
+
+    docs, _ = pipe.encode_docs(texts[:2], dense_vectors=mine)
+    np.testing.assert_array_equal(np.asarray(docs.dense), mine)
+    # the sparse paths are untouched by the dense override
+    stub_docs, _ = pipe.encode_docs(texts[:2])
+    np.testing.assert_array_equal(
+        np.asarray(docs.learned.idx), np.asarray(stub_docs.learned.idx)
+    )
+    assert not np.array_equal(np.asarray(stub_docs.dense), mine)
+
+    enc = pipe.encode_queries(texts[:2], dense_vectors=mine)
+    np.testing.assert_array_equal(np.asarray(enc.vectors.dense), mine)
+
+    with pytest.raises(ValueError, match="d_dense"):
+        pipe.encode_docs(texts[:2], dense_vectors=mine[:, :-1])
+    with pytest.raises(ValueError, match="d_dense"):
+        pipe.encode_docs(texts[:3], dense_vectors=mine)
+
+    # a fresh fit accepts corpus-wide precomputed vectors end to end
+    pipe2 = IngestPipeline(IngestConfig(d_dense=8))
+    vecs = rng.standard_normal((len(texts), 8)).astype(np.float32)
+    ingested = pipe2.fit(texts, dense_vectors=vecs)
+    np.testing.assert_array_equal(np.asarray(ingested.docs.dense), vecs)
+
+
 # -- ELL invariants (the exhaustive hypothesis variant lives in
 # tests/test_ingest_properties.py; this keeps a deterministic smoke check
 # in the hypothesis-less tier) ----------------------------------------------

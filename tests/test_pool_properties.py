@@ -1,0 +1,213 @@
+"""Hypothesis properties for the segment pool: any interleaving of
+streaming inserts, deletions, incremental compactions, and background
+merges yields search results equivalent (up to tie order) to ONE full
+rebuild of the surviving docs — including tombstone exclusion and
+knowledge-graph reachability — and global-id routing stays consistent."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    build_segmented_index,
+    place_segmented_index,
+)
+from repro.core.search import SearchParams, search  # noqa: E402
+from repro.core.segment_pool import (  # noqa: E402
+    live_counts,
+    resolve_global_ids_pool,
+)
+from repro.core.usms import PathWeights  # noqa: E402
+from repro.data.corpus import CorpusConfig, make_corpus  # noqa: E402
+from repro.serving.batcher import BatcherConfig  # noqa: E402
+from repro.serving.hybrid_service import (  # noqa: E402
+    HybridSearchService,
+    ServiceConfig,
+)
+from repro.serving.segment_router import RouterConfig, SegmentRouter  # noqa: E402
+
+CFG = BuildConfig(
+    knn=KnnConfig(k=8, iters=2, node_chunk=128),
+    prune=PruneConfig(degree=8, keyword_degree=3, node_chunk=64),
+    path_refine_iters=0,
+)
+# saturating search: pool covers the whole tiny corpus, so both layouts
+# degenerate to (the same) exact scoring and results must agree
+PARAMS = SearchParams(k=10, iters=48, pool_size=128)
+W = PathWeights.make(1.0, 1.0, 1.0)
+
+N_TOTAL = 128
+N_QUERIES = 6
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=N_TOTAL, n_queries=N_QUERIES, n_topics=8,
+                     d_dense=16, nnz_sparse=8, nnz_lexical=6, seed=41)
+    )
+
+
+def _canonical(ids: np.ndarray, scores: np.ndarray):
+    """Rows as score-descending groups of id-sets: equal-score ties compare
+    as sets, so layouts that order ties differently still compare equal."""
+    rows = []
+    for row_ids, row_sc in zip(ids, scores):
+        valid = row_ids >= 0
+        groups: dict[float, set[int]] = {}
+        for i, s in zip(row_ids[valid], np.round(row_sc[valid], 4)):
+            groups.setdefault(float(s), set()).add(int(i))
+        rows.append(sorted(groups.items(), reverse=True))
+    return rows
+
+
+def _pool_service(corpus, n0: int):
+    from jax.sharding import Mesh
+
+    sealed = build_segmented_index(
+        corpus.docs[:n0], 1, CFG,
+        kg_triplets=corpus.kg.triplets,
+        doc_entities=corpus.doc_entities[:n0],
+        n_entities=corpus.kg.n_entities,
+    )
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sealed = place_segmented_index(sealed, mesh)
+    svc = HybridSearchService(
+        sealed, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(
+            flush_size=N_QUERIES, max_batch=8, flush_deadline_s=60.0)),
+        mesh=mesh,
+    )
+    router = SegmentRouter(
+        svc, CFG,
+        RouterConfig(seal_threshold=10**9, compaction="incremental",
+                     tier_fanout=2, auto_merge=False),
+        kg_triplets=corpus.kg.triplets,
+        n_entities=corpus.kg.n_entities,
+    )
+    return svc, router
+
+
+@settings(
+    max_examples=5, deadline=None, derandomize=True,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(data=st.data())
+def test_incremental_compaction_equals_full_rebuild(corpus, data):
+    n0 = data.draw(st.sampled_from([24, 32]), label="n0")
+    n_batches = data.draw(st.integers(1, 3), label="n_batches")
+    batch_size = data.draw(st.sampled_from([8, 16]), label="batch_size")
+    total = n0 + n_batches * batch_size
+    deletes = sorted(
+        data.draw(
+            st.sets(st.integers(0, total - 1), max_size=6), label="deletes"
+        )
+    )
+    merge_after = data.draw(st.booleans(), label="merge_after")
+
+    svc, router = _pool_service(corpus, n0)
+    for b in range(n_batches):
+        lo = n0 + b * batch_size
+        svc.insert(
+            corpus.docs[lo:lo + batch_size],
+            new_doc_entities=corpus.doc_entities[lo:lo + batch_size],
+        )
+        router.compact_incremental()
+    if deletes:
+        svc.mark_deleted(deletes)
+    if merge_after:
+        router.maybe_merge_segments()
+    pool = router.pool
+    assert pool is not None
+
+    # reference: ONE monolithic rebuild of exactly the surviving docs
+    live = np.asarray([g for g in range(total) if g not in deletes])
+    ref_rows = jax.tree.map(lambda a: a[live], corpus.docs)
+    ref_idx = build_index(
+        ref_rows, CFG,
+        kg_triplets=corpus.kg.triplets,
+        doc_entities=corpus.doc_entities[live],
+        n_entities=corpus.kg.n_entities,
+    )
+
+    got = svc.search(corpus.queries, W, k=PARAMS.k)
+    ref = search(ref_idx, corpus.queries, W, PARAMS)
+    ref_ids_local = np.asarray(ref.ids)
+    ref_ids = np.where(
+        ref_ids_local >= 0,
+        live[np.clip(ref_ids_local, 0, live.size - 1)],
+        -1,
+    )
+    assert _canonical(np.asarray(got.ids), np.asarray(got.scores)) == \
+        _canonical(ref_ids, np.asarray(ref.scores))
+
+    # tombstoned ids never surface, survivors resolve, tombstones of the
+    # SEALED part may still occupy rows but must not resolve post-merge
+    for d in deletes:
+        assert d not in np.asarray(got.ids)
+    alive_total = sum(lc[3] for lc in live_counts(pool))
+    grow_alive = (
+        0 if svc.grow_index is None
+        else int(np.asarray(svc.grow_index.alive).sum())
+    )
+    assert alive_total + grow_alive == live.size
+
+    # KG reachability: a surviving doc is reachable through its unique rare
+    # entity in the pooled layout exactly like in the monolithic one
+    kg_w = PathWeights.make(0.2, 0.2, 0.2, kg=2.0)
+    kg_params = SearchParams(
+        k=PARAMS.k, iters=PARAMS.iters, pool_size=PARAMS.pool_size,
+        use_kg=True,
+    )
+    svc_kg = HybridSearchService(
+        router.pool if svc.grow_index is None else svc.index,
+        kg_params,
+        ServiceConfig(batcher=BatcherConfig(flush_size=1, max_batch=2)),
+        mesh=svc._mesh,
+    )
+    probe = data.draw(st.sampled_from(sorted(set(range(total)) - set(deletes))),
+                      label="probe")
+    res = svc_kg.search(
+        corpus.queries[:1], kg_w,
+        entities=np.asarray([[probe]], np.int32), k=PARAMS.k,
+    )
+    assert probe in np.asarray(res.ids)[0]
+
+
+_ROUTING_POOL_CACHE: dict = {}
+
+
+@settings(max_examples=20, deadline=None, derandomize=True,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ids=st.lists(st.integers(-5, 200), min_size=1, max_size=32))
+def test_pool_routing_total_and_exclusive(corpus, ids):
+    """Every global id resolves to at most one pooled location; resolved
+    ids round-trip through the pool's gid tables."""
+    if "pool" not in _ROUTING_POOL_CACHE:
+        svc, router = _pool_service(corpus, 32)
+        svc.insert(corpus.docs[32:48])
+        router.compact_incremental()
+        svc.insert(corpus.docs[48:80])
+        router.compact_incremental()
+        _ROUTING_POOL_CACHE["pool"] = router.pool
+    pool = _ROUTING_POOL_CACHE["pool"]
+    arr = np.asarray(ids, np.int64)
+    grp, seg, loc = resolve_global_ids_pool(pool, arr)
+    known = {g for group in pool.groups
+             for g in np.asarray(group.global_ids).reshape(-1) if g >= 0}
+    for i, g in enumerate(arr):
+        if g in known:
+            assert grp[i] >= 0 and seg[i] >= 0 and loc[i] >= 0
+            back = int(
+                np.asarray(pool.groups[grp[i]].global_ids)[seg[i], loc[i]]
+            )
+            assert back == g
+        else:
+            assert grp[i] == -1 and seg[i] == -1 and loc[i] == -1

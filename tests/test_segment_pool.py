@@ -1,0 +1,424 @@
+"""Segment pool: incremental compaction is O(grow segment), untouched
+groups keep their compiled executables byte-identical, the size-tiered
+merge policy bounds fragmentation, logical edges append incrementally into
+a live grow segment, and a heterogeneous pool round-trips through the
+atomic checkpoint layout."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig
+from repro.core.distributed import (
+    build_segmented_index,
+    place_segmented_index,
+)
+from repro.core.search import SearchParams
+from repro.core.segment_pool import (
+    SegmentPool,
+    append_segment,
+    build_pool_segment,
+    live_counts,
+    mark_deleted_pool,
+    pool_placement,
+    remove_segments,
+    resolve_global_ids_pool,
+)
+from repro.core.usms import PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.runtime import dispatch
+from repro.serving.batcher import BatcherConfig
+from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+from repro.serving.segment_router import RouterConfig, SegmentRouter
+
+BUILD_CFG = BuildConfig(
+    knn=KnnConfig(k=12, iters=3, node_chunk=512),
+    prune=PruneConfig(degree=12, keyword_degree=4, node_chunk=256),
+    path_refine_iters=0,
+)
+PARAMS = SearchParams(k=8, iters=16, pool_size=48)
+W = PathWeights.make(1.0, 1.0, 1.0)
+N_SEALED = 320
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=448, n_queries=16, n_topics=12, d_dense=24,
+                     nnz_sparse=10, nnz_lexical=8, seed=37)
+    )
+
+
+@pytest.fixture(scope="module")
+def sealed(corpus):
+    return build_segmented_index(corpus.docs[:N_SEALED], 1, BUILD_CFG)
+
+
+def _service(sealed, **router_kw):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    seg = place_segmented_index(sealed, mesh)
+    svc = HybridSearchService(
+        seg, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(
+            flush_size=4, max_batch=4, flush_deadline_s=60.0)),
+        mesh=mesh,
+    )
+    router_kw.setdefault("seal_threshold", 10**9)
+    router = SegmentRouter(
+        svc, BUILD_CFG,
+        RouterConfig(compaction="incremental", **router_kw),
+    )
+    return svc, router
+
+
+def _probe(corpus, i):
+    return jax.tree.map(lambda a: a[i:i + 1], corpus.docs)
+
+
+# ---------------------------------------------------------------------------
+# pool data structure
+# ---------------------------------------------------------------------------
+
+
+def test_pool_wrap_resolve_and_tombstones(corpus, sealed):
+    pool = SegmentPool.from_segmented(sealed)
+    assert pool.n_groups == 1 and pool.n_segments == 1
+    seg1 = build_pool_segment(
+        corpus.docs[N_SEALED:N_SEALED + 12],
+        np.arange(N_SEALED, N_SEALED + 12), BUILD_CFG, capacity=16,
+    )
+    pool, touched = append_segment(pool, seg1)
+    assert pool.n_groups == 2 and touched == 1
+    assert pool.capacities == (N_SEALED, 16)
+
+    grp, seg, loc = resolve_global_ids_pool(
+        pool, [0, N_SEALED + 5, N_SEALED + 12, 10**6]
+    )
+    np.testing.assert_array_equal(grp, [0, 1, -1, -1])
+    assert loc[1] == 5  # pool-segment rows are in insertion order
+
+    pool = mark_deleted_pool(pool, [3, N_SEALED + 5])
+    assert sum(lc[3] for lc in live_counts(pool)) == N_SEALED + 12 - 2
+    # unknown ids are ignored, shapes unchanged
+    pool2 = mark_deleted_pool(pool, [10**6])
+    assert pool2.capacities == pool.capacities
+
+
+def test_append_stacks_same_shape_segments(corpus, sealed):
+    pool = SegmentPool.from_segmented(sealed)
+    a = build_pool_segment(
+        corpus.docs[N_SEALED:N_SEALED + 10],
+        np.arange(N_SEALED, N_SEALED + 10), BUILD_CFG, capacity=16,
+    )
+    b = build_pool_segment(
+        corpus.docs[N_SEALED + 10:N_SEALED + 24],
+        np.arange(N_SEALED + 10, N_SEALED + 24), BUILD_CFG, capacity=16,
+    )
+    pool, g1 = append_segment(pool, a)
+    pool, g2 = append_segment(pool, b)
+    assert g1 == g2 == 1  # same 16-capacity shape bucket
+    assert pool.groups[1].n_segments == 2
+    assert pool.n_segments == 3
+
+    pool = remove_segments(pool, [(1, 0)])
+    assert pool.groups[1].n_segments == 1
+    grp, _, _ = resolve_global_ids_pool(pool, [N_SEALED + 3, N_SEALED + 15])
+    assert grp[0] == -1 and grp[1] == 1  # a's docs gone, b's remain
+
+
+def test_build_pool_segment_validations(corpus):
+    with pytest.raises(ValueError, match="capacity"):
+        build_pool_segment(
+            corpus.docs[:8], np.arange(8), BUILD_CFG, capacity=4
+        )
+    with pytest.raises(ValueError, match="global_ids"):
+        build_pool_segment(corpus.docs[:8], np.arange(7), BUILD_CFG)
+
+
+def test_pool_placement_many_per_device(sealed, corpus):
+    pool = SegmentPool.from_segmented(sealed)
+    seg1 = build_pool_segment(
+        corpus.docs[N_SEALED:N_SEALED + 8],
+        np.arange(N_SEALED, N_SEALED + 8), BUILD_CFG,
+    )
+    pool, _ = append_segment(pool, seg1)
+    placements = pool_placement(pool, mesh=None)
+    assert [p.n_segments for p in placements] == [1, 1]
+    # off-mesh everything is local/replicated
+    assert not any(p.sharded for p in placements)
+    assert placements[0].capacity == N_SEALED
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: O(grow) compaction + executable survival
+# ---------------------------------------------------------------------------
+
+
+def test_compact_incremental_is_o_grow_and_preserves_executables(
+    corpus, sealed
+):
+    """`compact_incremental` rebuilds ONLY the grow segment's rows (the
+    dispatch.build_rows work counter grows by the grow size, not the corpus
+    size) and every sealed-segment AOT executable survives cache-identical;
+    a full seal_and_compact rebuilds O(corpus) by contrast."""
+    svc, router = _service(sealed)
+    svc.search(corpus.queries[:4], W, k=5)  # warm the sealed executable
+    warm = dict(svc.executable_cache)
+    assert warm
+
+    grow_n = 24
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + grow_n])
+    svc.search(corpus.queries[:4], W, k=5)
+
+    rows0 = dispatch.build_rows()
+    router.compact_incremental()
+    built = dispatch.build_rows() - rows0
+    assert built == grow_n, (
+        f"incremental compaction rebuilt {built} rows for a {grow_n}-doc "
+        f"grow segment — it must scale with the grow size, not the "
+        f"{N_SEALED}-doc corpus"
+    )
+    assert router.stats.incremental_compactions == 1
+    assert svc.grow_index is None
+    assert router.pool is not None and router.pool.n_groups == 2
+
+    # sealed executables: same keys, SAME objects — not recompiles
+    for k, exe in warm.items():
+        assert svc.executable_cache.get(k) is exe, f"evicted/replaced: {k}"
+
+    # both old and newly-sealed docs remain reachable under original ids
+    res = svc.search(_probe(corpus, 7), W, k=5)
+    assert int(np.asarray(res.ids)[0, 0]) == 7
+    res = svc.search(_probe(corpus, N_SEALED + 7), W, k=5)
+    assert int(np.asarray(res.ids)[0, 0]) == N_SEALED + 7
+    # ... and the warm sealed executable is STILL untouched after reads
+    for k, exe in warm.items():
+        assert svc.executable_cache.get(k) is exe
+
+    # contrast: the full rebuild is O(corpus)
+    svc.insert(corpus.docs[N_SEALED + grow_n:N_SEALED + 2 * grow_n])
+    rows1 = dispatch.build_rows()
+    router.seal_and_compact()
+    full_built = dispatch.build_rows() - rows1
+    assert full_built >= N_SEALED + grow_n  # every surviving row rebuilt
+
+
+def test_compact_incremental_drops_grow_tombstones(corpus, sealed):
+    """Grow tombstones are reclaimed at seal; sealed tombstones survive as
+    tombstones (their reclamation belongs to merge/full rebuild) but never
+    surface in results."""
+    svc, router = _service(sealed)
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 16])
+    svc.mark_deleted([N_SEALED + 3, 11])  # one grow, one sealed
+    router.compact_incremental()
+
+    grp, _, _ = resolve_global_ids_pool(
+        router.pool, [N_SEALED + 3, N_SEALED + 4, 11]
+    )
+    assert grp[0] == -1  # grow tombstone physically gone
+    assert grp[1] >= 0
+    assert grp[2] >= 0  # sealed tombstone still occupies its row...
+    res = svc.search(_probe(corpus, 11), W, k=5)
+    assert 11 not in np.asarray(res.ids)[0]  # ...but is never returned
+    res = svc.search(_probe(corpus, N_SEALED + 3), W, k=5)
+    assert N_SEALED + 3 not in np.asarray(res.ids)[0]
+
+
+def test_compact_incremental_empty_and_all_dead_grow(corpus, sealed):
+    svc, router = _service(sealed)
+    v0 = svc.snapshot_version
+    assert router.compact_incremental() == v0  # no grow: no-op
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 8])
+    svc.mark_deleted(list(range(N_SEALED, N_SEALED + 8)))
+    router.compact_incremental()  # all grow docs dead: grow just dropped
+    assert svc.grow_index is None
+    assert router.pool is None or router.pool.n_groups == 1
+
+
+def test_auto_compact_incremental_on_threshold(corpus, sealed):
+    svc, router = _service(sealed, seal_threshold=24, auto_compact=True)
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 16])
+    assert router.stats.compactions == 0
+    svc.insert(corpus.docs[N_SEALED + 16:N_SEALED + 32])
+    assert router.stats.incremental_compactions == 1
+    assert svc.grow_index is None
+    res = svc.search(_probe(corpus, N_SEALED + 20), W, k=5)
+    assert int(np.asarray(res.ids)[0, 0]) == N_SEALED + 20
+
+
+# ---------------------------------------------------------------------------
+# merge policy
+# ---------------------------------------------------------------------------
+
+
+def test_merge_segments_coalesces_and_reclaims(corpus, sealed):
+    svc, router = _service(sealed, auto_merge=False)
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 16])
+    router.compact_incremental()
+    svc.insert(corpus.docs[N_SEALED + 16:N_SEALED + 32])
+    router.compact_incremental()
+    pool = router.pool
+    assert pool.n_segments == 3
+    victim = N_SEALED + 5
+    svc.mark_deleted([victim])  # tombstone inside a pooled segment
+
+    segs = pool.segments()
+    router.merge_segments(segs[-2], segs[-1])
+    assert router.stats.merges == 1
+    pool = router.pool
+    assert pool.n_segments == 2
+    # merged capacity covers both segments' live docs at pow2
+    assert 32 in pool.capacities
+    # the tombstone was physically reclaimed by the merge
+    grp, _, _ = resolve_global_ids_pool(pool, [victim])
+    assert grp[0] == -1
+    res = svc.search(_probe(corpus, victim), W, k=5)
+    assert victim not in np.asarray(res.ids)[0]
+    # survivors of both merged segments stay reachable
+    for doc in (N_SEALED + 2, N_SEALED + 30):
+        res = svc.search(_probe(corpus, doc), W, k=5)
+        assert int(np.asarray(res.ids)[0, 0]) == doc
+
+    with pytest.raises(ValueError):
+        router.merge_segments((0, 0), (0, 0))
+    with pytest.raises(ValueError):
+        router.merge_segments((0, 0), (9, 9))
+
+
+def test_size_tier_merge_invariant(corpus, sealed):
+    """With tier_fanout=2, a third same-tier segment triggers a merge; the
+    pool never holds more than tier_fanout segments per pow2 tier."""
+    svc, router = _service(sealed, tier_fanout=2, auto_merge=True)
+    for b in range(4):
+        lo = N_SEALED + 16 * b
+        svc.insert(corpus.docs[lo:lo + 16])
+        router.compact_incremental()
+        tiers: dict[int, int] = {}
+        for _, _, cap, _ in live_counts(router.pool):
+            t = max(cap, 1).bit_length()
+            tiers[t] = tiers.get(t, 0) + 1
+        assert all(v <= 2 for v in tiers.values()), tiers
+    assert router.stats.merges >= 1
+    # every streamed doc is still reachable after the merge cascade
+    for doc in (N_SEALED + 1, N_SEALED + 17, N_SEALED + 63):
+        res = svc.search(_probe(corpus, doc), W, k=5)
+        assert int(np.asarray(res.ids)[0, 0]) == doc
+
+
+# ---------------------------------------------------------------------------
+# incremental logical edges (satellite): entity paths appear BEFORE compaction
+# ---------------------------------------------------------------------------
+
+
+def test_grow_insert_appends_logical_edges_incrementally():
+    kg_corpus = make_corpus(
+        CorpusConfig(n_docs=256, n_queries=8, n_topics=8, d_dense=16,
+                     nnz_sparse=8, nnz_lexical=6, seed=13)
+    )
+    n0 = 192
+    sealed = build_segmented_index(
+        kg_corpus.docs[:n0], 1, BUILD_CFG,
+        kg_triplets=kg_corpus.kg.triplets,
+        doc_entities=kg_corpus.doc_entities[:n0],
+        n_entities=kg_corpus.kg.n_entities,
+    )
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sealed = place_segmented_index(sealed, mesh)
+    params = SearchParams(k=8, iters=16, pool_size=64, use_kg=True)
+    svc = HybridSearchService(
+        sealed, params,
+        ServiceConfig(batcher=BatcherConfig(flush_size=2, max_batch=2)),
+        mesh=mesh,
+    )
+    router = SegmentRouter(
+        svc, BUILD_CFG,
+        RouterConfig(seal_threshold=10**9, compaction="incremental"),
+        kg_triplets=kg_corpus.kg.triplets,
+        n_entities=kg_corpus.kg.n_entities,
+    )
+    w = PathWeights.make(0.2, 0.2, 0.2, kg=2.0)
+
+    def entity_hits(doc):
+        res = svc.search(
+            kg_corpus.queries[:1], w,
+            entities=np.asarray([[doc]], np.int32), k=8,
+        )
+        return np.asarray(res.ids)[0]
+
+    # birth batch (has entities) — worked before this PR
+    svc.insert(kg_corpus.docs[n0:n0 + 16],
+               new_doc_entities=kg_corpus.doc_entities[n0:n0 + 16])
+    assert 200 in entity_hits(200)
+
+    # SECOND insert into the live grow segment: its entity paths must be
+    # searchable IMMEDIATELY (previously deferred to compaction)
+    svc.insert(kg_corpus.docs[n0 + 16:n0 + 32],
+               new_doc_entities=kg_corpus.doc_entities[n0 + 16:n0 + 32])
+    assert 220 in entity_hits(220), (
+        "doc inserted into an already-born grow segment has no entity path "
+        "before compaction"
+    )
+
+    # and they survive the incremental seal into the pool
+    router.compact_incremental()
+    assert svc.grow_index is None
+    assert 220 in entity_hits(220)
+    assert 100 in entity_hits(100)  # sealed path untouched
+
+
+# ---------------------------------------------------------------------------
+# persistence: heterogeneous pool round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_pool_persistence_roundtrip(corpus, sealed, tmp_path):
+    from repro.checkpoint import load_pool, save_pool
+
+    svc, router = _service(sealed, auto_merge=False)
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 16])
+    router.compact_incremental()
+    svc.insert(corpus.docs[N_SEALED + 16:N_SEALED + 56])
+    router.compact_incremental()
+    svc.mark_deleted([5])
+    pool = router.pool
+    assert pool.n_groups >= 2  # genuinely heterogeneous capacities
+    assert len(set(pool.capacities)) >= 2
+
+    save_pool(tmp_path / "pool", pool)
+    assert (tmp_path / "pool" / "step_0.done").exists()
+    loaded = load_pool(tmp_path / "pool")
+    assert loaded.n_groups == pool.n_groups
+    assert loaded.capacities == pool.capacities
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # a reloaded pool serves searches identically (fresh service, no mesh)
+    svc2 = HybridSearchService(
+        loaded, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(flush_size=4, max_batch=4)),
+    )
+    r_orig = svc.search(corpus.queries[:4], W, k=5)
+    r_load = svc2.search(corpus.queries[:4], W, k=5)
+    np.testing.assert_array_equal(
+        np.asarray(r_orig.ids), np.asarray(r_load.ids)
+    )
+
+    # second save = fresh committed step; load still sees the latest
+    save_pool(tmp_path / "pool", loaded)
+    assert (tmp_path / "pool" / "step_1.done").exists()
+    again = load_pool(tmp_path / "pool")
+    assert again.capacities == pool.capacities
+
+
+def test_load_pool_rejects_non_pool_checkpoint(tmp_path):
+    from repro.checkpoint import load_pool
+
+    with pytest.raises(FileNotFoundError):
+        load_pool(tmp_path / "nope")
