@@ -29,6 +29,22 @@ tightened (the ROADMAP item):
     means an incremental compaction evicted executables of untouched
     segments (the segment-pool cache-survival guarantee, DESIGN.md §8).
 
+**Scale gate** (``--all --only scale``, the nightly job): compares
+results/BENCH_scale.json against results/BENCH_scale_baseline.json:
+
+  * ``scaling_efficiency`` (replica-tier QPS efficiency from 1 to max
+    replicas, see ``benchmarks/fig14_scale.py``) must stay at or above the
+    ABSOLUTE floor (0.6) — this is the paper-facing scale-out claim, not a
+    relative drift check;
+  * per-replica-count ``model_qps`` may not collapse below
+    ``1 - replica_qps_tol`` of the baseline.
+
+**``--all`` mode**: run every gate in one invocation, driven by the
+committed ``results/gate_config.json`` — per-metric tolerances live in
+DATA, so tightening a gate is a one-line data diff, and the three
+historical CLI invocations collapse into one. ``--only build,serving``
+filters. The legacy single-gate flags keep working for local use.
+
 Wall-clock fields are reported but never gated: absolute seconds are
 machine-dependent and would flake.
 
@@ -37,9 +53,8 @@ used (the kernel-smoke job runs ``python -m benchmarks.run --quick --only
 table2``); a config mismatch fails with instructions rather than comparing
 apples to oranges.
 
-    PYTHONPATH=src python benchmarks/check_regression.py \
-        [--bench results/BENCH_build.json] \
-        [--baseline results/BENCH_build_baseline.json] [--tol 0.20]
+    PYTHONPATH=src python benchmarks/check_regression.py --all \
+        [--config results/gate_config.json] [--only build,serving,scale]
 
 Exit code 0 = pass, 1 = regression (or unusable inputs).
 """
@@ -61,6 +76,12 @@ SERVING_REGEN_HINT = (
     "regenerate with: PYTHONPATH=src python benchmarks/serving_bench.py "
     "--dry-run && cp results/BENCH_serving.json "
     "results/BENCH_serving_baseline.json"
+)
+
+SCALE_REGEN_HINT = (
+    "regenerate with: PYTHONPATH=src python benchmarks/fig14_scale.py "
+    "--docs 10000 && cp results/BENCH_scale.json "
+    "results/BENCH_scale_baseline.json"
 )
 
 
@@ -161,8 +182,170 @@ def check(bench: dict, baseline: dict, tol: float) -> list[str]:
     return failures
 
 
+def check_scale(
+    bench: dict,
+    baseline: dict,
+    efficiency_floor: float,
+    replica_qps_tol: float,
+) -> list[str]:
+    """Nightly scale gate: absolute scaling-efficiency floor plus relative
+    per-replica-count model-QPS collapse; returns failure messages."""
+    failures: list[str] = []
+    mismatched = _config_mismatch(
+        baseline.get("config", {}), bench.get("config", {})
+    )
+    if mismatched:
+        return [
+            f"scale bench config does not match the baseline ({mismatched}); "
+            f"the comparison would be meaningless — {SCALE_REGEN_HINT}"
+        ]
+    for size, base_scale in baseline.get("scales", {}).items():
+        scale = bench.get("scales", {}).get(size)
+        if scale is None:
+            failures.append(f"scale {size} missing from bench")
+            continue
+        eff = scale.get("scaling_efficiency", 0.0)
+        if eff < efficiency_floor:
+            failures.append(
+                f"n={size}: scaling efficiency {eff:.2f} below the "
+                f"{efficiency_floor:.2f} floor — replica-tier QPS no longer "
+                "scales (benchmarks/fig14_scale.py)"
+            )
+        for n_rep, base_vals in base_scale.get("replicas", {}).items():
+            vals = scale.get("replicas", {}).get(n_rep)
+            if vals is None:
+                failures.append(f"n={size} R={n_rep} missing from bench")
+                continue
+            floor = base_vals["model_qps"] * (1.0 - replica_qps_tol)
+            if vals["model_qps"] < floor:
+                failures.append(
+                    f"n={size} R={n_rep}: per-replica QPS collapsed "
+                    f"{base_vals['model_qps']:.0f} -> "
+                    f"{vals['model_qps']:.0f} (> {replica_qps_tol:.0%} "
+                    f"below baseline; floor {floor:.0f})"
+                )
+    return failures
+
+
+def _load_pair(
+    bench_path: str, base_path: str, hint: str
+) -> tuple[dict, dict] | list[str]:
+    bp, sp = pathlib.Path(bench_path), pathlib.Path(base_path)
+    if not bp.exists():
+        return [f"{bp} missing — run the bench first"]
+    if not sp.exists():
+        return [f"{sp} missing — {hint}"]
+    return json.loads(bp.read_text()), json.loads(sp.read_text())
+
+
+def run_gate(kind: str, cfg: dict) -> list[str]:
+    """Run one named gate from a gate_config.json section; prints the
+    bench-vs-baseline summary and returns failure messages."""
+    if kind == "build":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_build.json"),
+            cfg.get("baseline", "results/BENCH_build_baseline.json"),
+            REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            print(
+                f"[build] {name}: dispatches={data['pipeline']['dispatches']} "
+                f"speedup_warm={data['speedup_warm']:.3f} "
+                f"warm_s={data['pipeline']['build_s_warm']:.2f}"
+            )
+        return check(bench, baseline, cfg.get("tol", 0.20))
+    if kind == "serving":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_serving.json"),
+            cfg.get("baseline", "results/BENCH_serving_baseline.json"),
+            SERVING_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            buckets = data.get("steady", {}).get("buckets", {})
+            line = " ".join(
+                f"b{k}:qps={v['qps']:.0f},p99={v['p99_ms']:.1f}ms"
+                for k, v in sorted(buckets.items())
+            )
+            print(f"[serving] {name}: {line}")
+        return check_serving(
+            bench, baseline, cfg.get("qps_tol", 0.50), cfg.get("p99_tol", 1.5)
+        )
+    if kind == "scale":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_scale.json"),
+            cfg.get("baseline", "results/BENCH_scale_baseline.json"),
+            SCALE_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            line = " ".join(
+                f"n{size}:eff={s.get('scaling_efficiency', 0.0):.2f},"
+                + ",".join(
+                    f"r{r}={v['model_qps']:.0f}qps"
+                    for r, v in sorted(
+                        s.get("replicas", {}).items(), key=lambda kv: int(kv[0])
+                    )
+                )
+                for size, s in sorted(data.get("scales", {}).items())
+            )
+            print(f"[scale] {name}: {line}")
+        return check_scale(
+            bench,
+            baseline,
+            cfg.get("efficiency_floor", 0.6),
+            cfg.get("replica_qps_tol", 0.5),
+        )
+    return [f"unknown gate '{kind}' in gate config"]
+
+
+def run_all(config_path: str, only: str | None) -> int:
+    path = pathlib.Path(config_path)
+    if not path.exists():
+        print(f"FAIL: gate config {path} missing")
+        return 1
+    gates: dict = json.loads(path.read_text())
+    if only:
+        keep = {s.strip() for s in only.split(",")}
+        unknown = keep - set(gates)
+        if unknown:
+            print(f"FAIL: --only names absent from {path}: {sorted(unknown)}")
+            return 1
+        gates = {k: v for k, v in gates.items() if k in keep}
+    rc = 0
+    for kind, cfg in gates.items():
+        failures = run_gate(kind, cfg)
+        for f in failures:
+            print(f"FAIL [{kind}]: {f}")
+        if failures:
+            rc = 1
+        else:
+            print(f"PASS [{kind}]: no regression")
+    return rc
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--all",
+        action="store_true",
+        help="run every gate listed in the committed gate config (one "
+        "invocation replaces the per-gate CLI runs; tolerances come from "
+        "the config file, not argparse defaults)",
+    )
+    ap.add_argument("--config", default="results/gate_config.json")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="with --all: comma list of gate names to run (build,serving,scale)",
+    )
     ap.add_argument("--bench", default="results/BENCH_build.json")
     ap.add_argument("--baseline", default="results/BENCH_build_baseline.json")
     ap.add_argument(
@@ -191,6 +374,9 @@ def main() -> int:
         "tightened from the lenient 4.0 first pass)",
     )
     args = ap.parse_args()
+
+    if args.all:
+        return run_all(args.config, args.only)
 
     if args.serving_only:
         bench_path = pathlib.Path(args.serving_bench)

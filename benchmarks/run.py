@@ -42,7 +42,12 @@ def main() -> None:
         "fig11": lambda: fig11_keyword.run(*((2048, 32) if q else (4096, 64))),
         "fig12": lambda: fig12_weights.run(*((2048, 32) if q else (4096, 64))),
         "table5": lambda: table5_insert.run(*((2048, 32) if q else (4096, 64))),
-        "fig14": lambda: fig14_scale.run((1024, 2048) if q else (2048, 4096, 8192, 16384)),
+        "fig14": lambda: fig14_scale.run(
+            n_docs=2048 if q else 10_000,
+            replicas=(1, 2) if q else (1, 2, 4),
+            n_requests=64 if q else 256,
+            segment_docs=256,
+        ),
         "kernel": kernel_bench.run,
         "serving": lambda: serving_bench.run(*((1024, 64) if q else (4096, 256))),
     }

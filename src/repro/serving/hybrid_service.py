@@ -202,11 +202,16 @@ class HybridSearchService:
     def stop_pump(self, timeout_s: float = 5.0) -> None:
         with self._pump_lock:
             thread = self._pump_thread
-            if thread is None:
-                return
-            self._pump_stop.set()
-            thread.join(timeout=timeout_s)
-            self._pump_thread = None
+            if thread is not None:
+                self._pump_stop.set()
+                thread.join(timeout=timeout_s)
+                self._pump_thread = None
+        # clean shutdown extends to the attached router's background merge
+        # worker: an in-flight merge finishes its atomic publish, then the
+        # worker exits before this returns
+        router = getattr(self, "_router", None)
+        if router is not None and hasattr(router, "stop_merge_worker"):
+            router.stop_merge_worker()
 
     def __enter__(self) -> "HybridSearchService":
         return self

@@ -1,0 +1,400 @@
+"""Data-parallel replica tier: N ``HybridSearchService`` replicas behind a
+thin router — the scale-out front-end of the ROADMAP's "millions of users"
+item.
+
+Each replica owns a ``SegmentPool`` placement (its shard of the corpus,
+with its own grow segment, write lock, and — critically — its own AOT
+compiled-executable cache: replicas share no mutable state, so the tier
+maps 1:1 onto separate hosts). The router in front is deliberately thin:
+
+  * **placement** — documents map to replicas by consistent hashing of the
+    global doc id over a ring with virtual nodes (``virtual_nodes`` per
+    replica, BLAKE2-hashed, so adding/removing a replica only remaps
+    ~1/N of the id space — the exo-pt-style dynamic shard assignment).
+    ``insert()`` allocates global ids, splits the batch by home replica,
+    and forwards each slice to that replica's ``SegmentRouter`` with the
+    ids pinned (``SegmentRouter.insert(global_ids=...)``), so an id's home
+    is recomputable from the id alone; ``delete()`` routes the same way.
+  * **reads** — ``search()`` scatter-gathers: every *up* replica searches
+    the query batch over its shard, and the per-replica top-k blocks merge
+    per row in global-id space via ``HybridSearchService._merge_host``
+    (shards are disjoint, so the merge is duplicate-free by construction).
+    Replica passes run on a persistent per-replica thread pool and are
+    dispatched in least-outstanding-requests order, so a slow replica
+    backs up its own queue, not the whole tier.
+  * **mirror mode** (``placement="mirror"``) — every replica holds the
+    FULL corpus; a query is dispatched to exactly one replica, chosen by
+    least outstanding requests (the classic replicated-serving balancer),
+    and writes broadcast to all replicas to keep the copies identical.
+  * **failure** — ``mark_down(i)`` removes a replica from the ring: writes
+    rehash to the survivors, scatter reads skip its shard and the result
+    is counted in ``stats.partial_searches`` (degraded, not failed; see
+    DESIGN.md §9). ``mark_up`` restores it.
+
+Equivalence contract (pinned by ``tests/test_replica_router.py``): with
+saturating search parameters, scatter-gather over any replica partition
+returns the same results as one service holding every document — up to
+equal-score tie order — including tombstone exclusion and KG entity paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import SearchResult
+from repro.core.usms import FusedVectors, PathWeights
+from repro.serving.hybrid_service import HybridSearchService
+from repro.serving.segment_router import SegmentRouter
+
+
+def _hash64(data: bytes) -> int:
+    # stable across processes/runs (unlike hash()): placement must be
+    # recomputable from the id alone, anywhere, forever
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(), "big")
+
+
+def build_ring(
+    names: Sequence[str], virtual_nodes: int = 64
+) -> list[tuple[int, int]]:
+    """Sorted (hash, owner-index) consistent-hash ring with virtual nodes.
+    Offline shard builders (``benchmarks/fig14_scale.py``) use this with
+    ``ring_homes`` to pre-partition a corpus EXACTLY as the live tier
+    routes it."""
+    ring = [
+        (_hash64(f"{name}#{v}".encode()), i)
+        for i, name in enumerate(names)
+        for v in range(virtual_nodes)
+    ]
+    return sorted(ring)
+
+
+def ring_homes(ring: Sequence[tuple[int, int]], global_ids) -> np.ndarray:
+    """Vectorized ring-successor lookup: owner index per doc id."""
+    if not ring:
+        raise RuntimeError("no replica is up")
+    keys = np.asarray([k for k, _ in ring], np.uint64)
+    owners = np.asarray([o for _, o in ring], np.int64)
+    ids = np.atleast_1d(np.asarray(global_ids, np.int64))
+    h = np.asarray(
+        [_hash64(int(g).to_bytes(8, "big", signed=False)) for g in ids],
+        np.uint64,
+    )
+    pos = np.searchsorted(keys, h, side="right") % len(keys)
+    return owners[pos]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaTierConfig:
+    # virtual ring nodes per replica: more nodes -> smoother shard balance
+    # (64 keeps the max/min doc-count ratio under ~1.3 at 3+ replicas)
+    virtual_nodes: int = 64
+    # "hash": consistent-hash sharding, scatter-gather reads.
+    # "mirror": full copy per replica, least-outstanding single dispatch.
+    placement: str = "hash"
+    # raise instead of returning shard-degraded results when replicas are down
+    fail_on_partial: bool = False
+
+    def __post_init__(self):
+        if self.placement not in ("hash", "mirror"):
+            raise ValueError("placement must be 'hash' or 'mirror'")
+        if self.virtual_nodes < 1:
+            raise ValueError("virtual_nodes must be >= 1")
+
+
+@dataclasses.dataclass
+class ReplicaTierStats:
+    inserts: int = 0
+    inserted_docs: int = 0
+    deletes: int = 0
+    searches: int = 0
+    partial_searches: int = 0  # scatter reads served with >=1 replica down
+    dispatched: Optional[list[int]] = None  # per-replica search dispatches
+
+
+class Replica:
+    """One member of the tier: a service (its own executable cache and
+    snapshot) plus, for writable tiers, the grow-segment router that owns
+    its shard's streaming writes."""
+
+    def __init__(
+        self,
+        service: HybridSearchService,
+        router: Optional[SegmentRouter] = None,
+        *,
+        name: Optional[str] = None,
+    ):
+        self.service = service
+        self.router = router
+        self.name = name or f"replica{id(service):x}"
+        self.up = True
+        self.outstanding = 0  # in-flight search dispatches (LOR signal)
+
+
+class ReplicaRouter:
+    """Thin scatter/route layer over share-nothing service replicas."""
+
+    def __init__(
+        self,
+        replicas: Sequence[Union[Replica, HybridSearchService]],
+        config: Optional[ReplicaTierConfig] = None,
+    ):
+        if not replicas:
+            raise ValueError("a replica tier needs at least one replica")
+        self.config = config or ReplicaTierConfig()
+        self.replicas = [
+            r if isinstance(r, Replica) else Replica(r, name=f"replica{i}")
+            for i, r in enumerate(replicas)
+        ]
+        names = [r.name for r in self.replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique, got {names}")
+        self.stats = ReplicaTierStats(dispatched=[0] * len(self.replicas))
+        self._lock = threading.Lock()  # ring + outstanding counters
+        self._ring: list[tuple[int, int]] = []
+        self._rebuild_ring()
+        self._next_gid = 1 + max(
+            (self._max_gid(r) for r in self.replicas), default=-1
+        )
+        self._pool = ThreadPoolExecutor(
+            max_workers=len(self.replicas),
+            thread_name_prefix="replica-scatter",
+        )
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Join the scatter pool and every replica's pump/merge workers."""
+        self._pool.shutdown(wait=True)
+        for r in self.replicas:
+            r.service.stop_pump()
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- consistent-hash placement ------------------------------------------
+
+    _hash = staticmethod(_hash64)
+
+    def _rebuild_ring(self) -> None:
+        ring = []
+        for i, r in enumerate(self.replicas):
+            if not r.up:
+                continue
+            for v in range(self.config.virtual_nodes):
+                ring.append((_hash64(f"{r.name}#{v}".encode()), i))
+        self._ring = sorted(ring)
+
+    def homes_of(self, global_ids) -> np.ndarray:
+        """Home replica index per doc id (ring successor of each hash)."""
+        with self._lock:
+            ring = list(self._ring)
+        return ring_homes(ring, global_ids)
+
+    def replica_for(self, global_id: int) -> int:
+        """Home replica index of a single doc id."""
+        return int(self.homes_of([global_id])[0])
+
+    def mark_down(self, i: int) -> None:
+        """Take replica i out of rotation: writes rehash to survivors,
+        scatter reads skip its shard (degraded results, counted)."""
+        with self._lock:
+            self.replicas[i].up = False
+        self._rebuild_ring()
+
+    def mark_up(self, i: int) -> None:
+        with self._lock:
+            self.replicas[i].up = True
+        self._rebuild_ring()
+
+    def _up(self) -> list[int]:
+        return [i for i, r in enumerate(self.replicas) if r.up]
+
+    @staticmethod
+    def _max_gid(r: Replica) -> int:
+        if r.router is not None:
+            return r.router._next_gid - 1
+        idx = r.service.index
+        gids = getattr(idx, "global_ids", None)
+        if gids is None:
+            if hasattr(idx, "max_global_id"):
+                return idx.max_global_id()
+            return int(getattr(idx, "n", 0)) - 1
+        arr = np.asarray(gids)
+        return int(arr.max()) if (arr >= 0).any() else -1
+
+    # -- writes -------------------------------------------------------------
+
+    def insert(
+        self,
+        new_docs: FusedVectors,
+        *,
+        key: Optional[jax.Array] = None,
+        new_doc_entities: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Allocate global ids, split the batch by home replica, forward
+        each slice to that replica's grow segment. Returns the allocated
+        ids (the caller's handle for later deletes). Mirror tiers broadcast
+        the whole batch to every replica instead."""
+        n = int(new_docs.n)
+        if n == 0:
+            return np.zeros((0,), np.int64)
+        gids = np.arange(self._next_gid, self._next_gid + n, dtype=np.int64)
+        self._next_gid += n
+        mirror = self.config.placement == "mirror"
+        targets: dict[int, np.ndarray] = (
+            {i: np.arange(n) for i in self._up()}
+            if mirror
+            else {}
+        )
+        if not mirror:
+            homes = self.homes_of(gids)
+            for i in np.unique(homes):
+                targets[int(i)] = np.flatnonzero(homes == i)
+        for i, rows in targets.items():
+            r = self.replicas[i]
+            if r.router is None:
+                raise ValueError(
+                    f"replica {r.name} has no SegmentRouter: the tier "
+                    "cannot route writes to it"
+                )
+            sub = jax.tree.map(lambda a: jnp.asarray(a)[rows], new_docs)
+            ents = (
+                None
+                if new_doc_entities is None
+                else np.asarray(new_doc_entities)[rows]
+            )
+            r.router.insert(
+                sub, key=key, new_doc_entities=ents, global_ids=gids[rows]
+            )
+        self.stats.inserts += 1
+        self.stats.inserted_docs += n
+        return gids
+
+    def delete(self, global_ids) -> int:
+        """Tombstone docs on their home replicas (every replica, for a
+        mirror tier). Returns the number of ids routed."""
+        ids = np.atleast_1d(np.asarray(global_ids, np.int64))
+        if self.config.placement == "mirror":
+            for i in self._up():
+                self.replicas[i].router.delete(ids)
+        else:
+            homes = self.homes_of(ids)
+            for i in np.unique(homes):
+                self.replicas[int(i)].router.delete(ids[homes == i])
+        self.stats.deletes += 1
+        return int(ids.size)
+
+    # -- reads --------------------------------------------------------------
+
+    def _dispatch_order(self, up: list[int]) -> list[int]:
+        """Least-outstanding-requests first: the loaded replica's work is
+        queued last (scatter) or avoided entirely (mirror)."""
+        with self._lock:
+            return sorted(up, key=lambda i: (self.replicas[i].outstanding, i))
+
+    def _member_search(self, i: int, queries, weights, kw, en, k):
+        r = self.replicas[i]
+        with self._lock:
+            r.outstanding += 1
+            self.stats.dispatched[i] += 1
+        try:
+            return r.service.search(
+                queries, weights, keywords=kw, entities=en, k=k
+            )
+        finally:
+            with self._lock:
+                r.outstanding -= 1
+
+    def search(
+        self,
+        queries: FusedVectors,
+        weights: Union[PathWeights, Sequence[PathWeights]],
+        *,
+        keywords: Optional[np.ndarray] = None,
+        entities: Optional[np.ndarray] = None,
+        k: Optional[int] = None,
+    ) -> SearchResult:
+        """Batched read. Hash tiers scatter to every up replica and merge
+        per-row top-k in global-id space; mirror tiers dispatch the batch
+        to the single least-loaded replica."""
+        up = self._dispatch_order(self._up())
+        if not up:
+            raise RuntimeError("no replica is up")
+        self.stats.searches += 1
+        if self.config.placement == "mirror":
+            return self._member_search(
+                up[0], queries, weights, keywords, entities, k
+            )
+        if len(up) < len(self.replicas):
+            self.stats.partial_searches += 1
+            if self.config.fail_on_partial:
+                down = [r.name for r in self.replicas if not r.up]
+                raise RuntimeError(
+                    f"replicas down ({down}) and fail_on_partial is set"
+                )
+        if len(up) == 1:
+            return self._member_search(
+                up[0], queries, weights, keywords, entities, k
+            )
+        futures = [
+            (
+                i,
+                self._pool.submit(
+                    self._member_search, i, queries, weights,
+                    keywords, entities, k,
+                ),
+            )
+            for i in up
+        ]
+        parts = [f.result() for _, f in futures]
+        k_out = int(np.asarray(parts[0].ids).shape[1])
+        m_ids, m_scores = HybridSearchService._merge_host(
+            [np.asarray(p.ids) for p in parts],
+            [np.asarray(p.scores) for p in parts],
+            k_out,
+        )
+        expanded = np.sum(
+            [np.asarray(p.expanded) for p in parts], axis=0
+        )
+        return SearchResult(
+            ids=jnp.asarray(m_ids),
+            scores=jnp.asarray(m_scores),
+            expanded=jnp.asarray(expanded, jnp.int32),
+        )
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def shard_sizes(self) -> list[int]:
+        """Live docs per replica (balance diagnostic)."""
+        out = []
+        for r in self.replicas:
+            idx = r.service.index
+            if hasattr(idx, "groups"):  # SegmentPool
+                alive = sum(
+                    int(np.asarray(g.index.alive).sum()) for g in idx.groups
+                )
+            elif hasattr(idx, "global_ids"):  # SegmentedIndex
+                alive = int(np.asarray(idx.index.alive).sum())
+            else:
+                alive = int(np.asarray(idx.alive).sum())
+            grow = r.service.grow_index
+            if grow is not None:
+                alive += int(np.asarray(grow.alive).sum())
+            out.append(alive)
+        return out

@@ -55,6 +55,8 @@ without triplets over a KG-bearing sealed index fails fast unless
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Optional
 
 import numpy as np
@@ -133,6 +135,17 @@ class RouterConfig:
     # compaction
     tier_fanout: int = 4
     auto_merge: bool = True
+    # run auto merges on a background worker thread (each merge still takes
+    # the service write lock): compact_incremental returns as soon as the
+    # new segment publishes instead of paying the merge cascade inline.
+    # stop_pump()/stop_merge_worker() joins the worker; wait_merges() blocks
+    # until the policy is quiescent (tests use it for determinism)
+    background_merge: bool = True
+    # auto-checkpoint: every N compactions persist the sealed pool (and the
+    # paired ingest manifest) via checkpoint.index_io.save_pool, so a crash
+    # can never lose more than the current grow segment. 0 = off.
+    autocheckpoint_every: int = 0
+    autocheckpoint_dir: Optional[str] = None
 
 
 # retained names: the row pad/slice helpers moved to core.build_pipeline so
@@ -154,6 +167,7 @@ class RouterStats:
     compactions: int = 0  # all compactions (full + incremental)
     incremental_compactions: int = 0
     merges: int = 0  # background segment merges
+    autocheckpoints: int = 0  # pool checkpoints written by the router
 
 
 class SegmentRouter:
@@ -171,6 +185,7 @@ class SegmentRouter:
         *,
         kg_triplets: Optional[np.ndarray] = None,
         n_entities: int = 0,
+        ingest=None,
     ):
         if not getattr(service, "_segmented", False):
             raise ValueError(
@@ -181,6 +196,17 @@ class SegmentRouter:
         self.build_cfg = build_cfg
         self.config = config or RouterConfig()
         self.stats = RouterStats()
+        # fitted IngestPipeline paired with auto-checkpoints (an index
+        # restored without its frozen stats is silently wrong; DESIGN.md §7)
+        self._ingest = ingest
+        self._ckpt_lock = threading.Lock()  # serializes checkpoint writes
+        self._last_ckpt_compactions = 0
+        self._merge_lock = threading.Lock()  # merge-worker start/stop
+        self._merge_thread: Optional[threading.Thread] = None
+        self._merge_wake = threading.Event()
+        self._merge_idle = threading.Event()
+        self._merge_idle.set()
+        self._merge_stop = threading.Event()
         self._kg_triplets = (
             None if kg_triplets is None else np.asarray(kg_triplets, np.int32)
         )
@@ -293,15 +319,37 @@ class SegmentRouter:
         *,
         key: Optional[jax.Array] = None,
         new_doc_entities: Optional[np.ndarray] = None,
+        global_ids: Optional[np.ndarray] = None,
     ) -> int:
         """Absorb a batch of new docs into the grow segment; returns the new
         snapshot version. Never touches sealed segments (their executables
         stay cached). May trigger seal-and-compact when the grow segment
-        crosses the threshold and ``auto_compact`` is on."""
+        crosses the threshold and ``auto_compact`` is on.
+
+        ``global_ids`` pins the docs' ids instead of allocating them here —
+        the replica-tier path (``serving.replica_router``), where placement
+        is a function of the id and the TIER allocates: ids must be fresh
+        (>= this router's next id) and strictly increasing, preserving the
+        sorted-gid-map invariant the delete path relies on."""
         svc = self.service
         n_new = int(new_docs.n)
         if n_new == 0:
             return svc.snapshot_version
+        if global_ids is not None:
+            global_ids = np.asarray(global_ids, np.int64)
+            if global_ids.shape != (n_new,):
+                raise ValueError(
+                    f"global_ids must be ({n_new},) to map every new doc"
+                )
+            if global_ids.size and (
+                int(global_ids[0]) < self._next_gid
+                or (np.diff(global_ids) <= 0).any()
+            ):
+                raise ValueError(
+                    "pinned global_ids must be strictly increasing and >= "
+                    f"the router's next id ({self._next_gid}): grow gids "
+                    "stay sorted so deletes resolve by searchsorted"
+                )
         if new_doc_entities is not None:
             if self._kg_triplets is None:
                 raise ValueError(
@@ -319,8 +367,10 @@ class SegmentRouter:
             snap = svc._snap
             if key is None:
                 key = jax.random.fold_in(jax.random.key(17), snap.version)
-            new_gids = np.arange(
-                self._next_gid, self._next_gid + n_new, dtype=np.int32
+            new_gids = (
+                np.arange(self._next_gid, self._next_gid + n_new, dtype=np.int32)
+                if global_ids is None
+                else global_ids.astype(np.int32)
             )
             if snap.grow is None:
                 kg_kwargs = {}
@@ -359,7 +409,7 @@ class SegmentRouter:
                     # the small grow segment — O(grow))
                     grow = self._rebuild_grow_logical_edges(grow)
                 gids = jnp.concatenate([snap.grow_gids, jnp.asarray(new_gids)])
-            self._next_gid += n_new
+            self._next_gid = int(new_gids[-1]) + 1
             self._grow_raw = grow
             if self.config.grow_pow2:
                 grow = pad_grow_to_capacity(grow, _next_pow2(grow.n))
@@ -550,7 +600,9 @@ class SegmentRouter:
             svc._publish(published, grow=None, grow_gids=None)
             self._grow_raw = None
             self.stats.compactions += 1
-            return svc._snap.version
+            version = svc._snap.version
+        self._maybe_autocheckpoint()
+        return version
 
     def compact_incremental(self, *, key: Optional[jax.Array] = None) -> int:
         """Seal the grow segment into ONE new pooled segment: rebuild only
@@ -578,40 +630,45 @@ class SegmentRouter:
                 self._grow_raw = None
                 self.stats.compactions += 1
                 self.stats.incremental_compactions += 1
-                return svc._snap.version
-            grow_corpus = jax.tree.map(
-                lambda a: jnp.asarray(np.asarray(a)[live]), snap.grow.corpus
-            )
-            gids = np.asarray(snap.grow_gids)[live]
-            ents = widen_entities(
-                np.asarray(snap.grow.doc_entities)[live],
-                self._entity_width(snap.index),
-            )
-            if key is None:
-                key = jax.random.fold_in(jax.random.key(29), snap.version)
-            capacity = (
-                _next_pow2(int(live.size))
-                if self.config.seal_pow2
-                else int(live.size)
-            )
-            segment = build_pool_segment(
-                grow_corpus,
-                gids,
-                self.build_cfg,
-                capacity=capacity,
-                key=key,
-                **self._kg_kwargs(ents),
-            )
-            pool, _ = append_segment(pool, segment)
-            pool = place_pool(pool, svc._mesh)
-            svc._publish(pool, grow=None, grow_gids=None)
-            self._grow_raw = None
-            self.stats.compactions += 1
-            self.stats.incremental_compactions += 1
-            version = svc._snap.version
+                version = svc._snap.version
+            else:
+                grow_corpus = jax.tree.map(
+                    lambda a: jnp.asarray(np.asarray(a)[live]), snap.grow.corpus
+                )
+                gids = np.asarray(snap.grow_gids)[live]
+                ents = widen_entities(
+                    np.asarray(snap.grow.doc_entities)[live],
+                    self._entity_width(snap.index),
+                )
+                if key is None:
+                    key = jax.random.fold_in(jax.random.key(29), snap.version)
+                capacity = (
+                    _next_pow2(int(live.size))
+                    if self.config.seal_pow2
+                    else int(live.size)
+                )
+                segment = build_pool_segment(
+                    grow_corpus,
+                    gids,
+                    self.build_cfg,
+                    capacity=capacity,
+                    key=key,
+                    **self._kg_kwargs(ents),
+                )
+                pool, _ = append_segment(pool, segment)
+                pool = place_pool(pool, svc._mesh)
+                svc._publish(pool, grow=None, grow_gids=None)
+                self._grow_raw = None
+                self.stats.compactions += 1
+                self.stats.incremental_compactions += 1
+                version = svc._snap.version
         if self.config.auto_merge:
-            self.maybe_merge_segments()
-            version = svc._snap.version
+            if self.config.background_merge:
+                self._notify_merge_worker()
+            else:
+                self.maybe_merge_segments()
+                version = svc._snap.version
+        self._maybe_autocheckpoint()
         return version
 
     def merge_segments(
@@ -715,3 +772,96 @@ class SegmentRouter:
                 if self.service._snap.version == v0:
                     return merges  # merge declined (would empty the pool)
             merges += 1
+
+    # -- background merge worker --------------------------------------------
+
+    def _notify_merge_worker(self) -> None:
+        """Wake (starting lazily if needed) the background merge worker.
+        Called after each incremental compaction when ``background_merge``
+        is on: the compaction returns as soon as the new segment publishes
+        and the merge cascade runs off the caller's thread (each merge still
+        takes the service write lock, so readers/writers stay correct)."""
+        with self._merge_lock:
+            if self._merge_thread is None or not self._merge_thread.is_alive():
+                self._merge_stop.clear()
+                self._merge_thread = threading.Thread(
+                    target=self._merge_loop,
+                    name="segment-router-merge",
+                    daemon=True,
+                )
+                self._merge_thread.start()
+            self._merge_wake.set()
+
+    def _merge_loop(self) -> None:
+        while True:
+            self._merge_wake.wait()
+            if self._merge_stop.is_set():
+                return
+            # order matters for wait_merges(): drop idle BEFORE consuming
+            # the wake flag, so at every instant a pending merge shows as
+            # either wake-set or idle-clear
+            self._merge_idle.clear()
+            self._merge_wake.clear()
+            try:
+                self.maybe_merge_segments()
+            finally:
+                self._merge_idle.set()
+
+    def wait_merges(self, timeout_s: float = 120.0) -> None:
+        """Block until the size-tier merge policy is quiescent: no pending
+        wake-up and no merge cascade in flight. A no-op when nothing is
+        pending; tests use it to make background merges deterministic."""
+        deadline = time.monotonic() + timeout_s
+        while self._merge_wake.is_set() or not self._merge_idle.is_set():
+            if self._merge_stop.is_set():
+                return
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"merge worker still busy after {timeout_s}s"
+                )
+            time.sleep(0.005)
+
+    def stop_merge_worker(self, timeout_s: float = 60.0) -> None:
+        """Clean-shutdown join of the merge worker (idempotent;
+        ``HybridSearchService.stop_pump`` calls it). An in-flight policy run
+        finishes — the stop flag is only checked between runs — so no merge
+        is ever torn mid-publish."""
+        with self._merge_lock:
+            thread = self._merge_thread
+            if thread is None:
+                return
+            self._merge_stop.set()
+            self._merge_wake.set()
+            thread.join(timeout=timeout_s)
+            self._merge_thread = None
+            self._merge_wake.clear()
+            self._merge_stop.clear()
+
+    # -- auto-checkpoint ----------------------------------------------------
+
+    def _maybe_autocheckpoint(self) -> None:
+        """Persist the sealed pool — paired with the fitted ingest pipeline
+        when the router holds one — every ``autocheckpoint_every``
+        compactions, so a crash loses at most the current grow segment plus
+        one checkpoint window. Runs OUTSIDE the service write lock (the
+        snapshot is immutable once published; serialization is disk I/O the
+        write path must not wait on) and serializes concurrent writers on
+        its own lock."""
+        cfg = self.config
+        if cfg.autocheckpoint_every <= 0 or cfg.autocheckpoint_dir is None:
+            return
+        with self._ckpt_lock:
+            done = self.stats.compactions
+            if done - self._last_ckpt_compactions < cfg.autocheckpoint_every:
+                return
+            pool = self.pool
+            if pool is None:
+                return
+            # local import: checkpoint.index_io imports serving-adjacent
+            # modules at load time; importing it lazily keeps the router
+            # importable in minimal environments
+            from repro.checkpoint.index_io import save_pool
+
+            save_pool(cfg.autocheckpoint_dir, pool, ingest=self._ingest)
+            self._last_ckpt_compactions = done
+            self.stats.autocheckpoints += 1

@@ -1,0 +1,293 @@
+"""Replica-tier properties: scatter-gather top-k over N consistent-hash
+replicas equals a single service holding every document (up to tie order),
+including tombstone exclusion and KG entity paths; plus the router
+mechanics — stable placement, least-outstanding dispatch, degraded reads
+when a replica is down, and pinned-global-id validation."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.search import SearchParams, search
+from repro.core.segment_pool import (
+    SegmentPool,
+    build_pool_segment,
+    place_pool,
+)
+from repro.core.usms import PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.serving.batcher import BatcherConfig, _next_pow2
+from repro.serving.hybrid_service import (
+    HybridSearchService,
+    ServiceConfig,
+)
+from repro.serving.replica_router import (
+    Replica,
+    ReplicaRouter,
+    ReplicaTierConfig,
+    build_ring,
+    ring_homes,
+)
+from repro.serving.segment_router import RouterConfig, SegmentRouter
+
+CFG = BuildConfig(
+    knn=KnnConfig(k=8, iters=2, node_chunk=128),
+    prune=PruneConfig(degree=8, keyword_degree=3, node_chunk=64),
+    path_refine_iters=0,
+)
+# saturating search: the pool covers the whole tiny corpus, so any layout
+# degenerates to (the same) exact scoring and results must agree
+PARAMS = SearchParams(k=10, iters=48, pool_size=128, use_kg=True)
+W = PathWeights.make(1.0, 1.0, 1.0)
+VNODES = 16
+
+N_TOTAL = 96
+N_QUERIES = 6
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=N_TOTAL, n_queries=N_QUERIES, n_topics=8,
+                     d_dense=16, nnz_sparse=8, nnz_lexical=6, seed=43)
+    )
+
+
+def _canonical(ids: np.ndarray, scores: np.ndarray):
+    """Rows as score-descending groups of id-sets: equal-score ties compare
+    as sets, so layouts that order ties differently still compare equal."""
+    rows = []
+    for row_ids, row_sc in zip(ids, scores):
+        valid = row_ids >= 0
+        groups: dict[float, set[int]] = {}
+        for i, s in zip(row_ids[valid], np.round(row_sc[valid], 4)):
+            groups.setdefault(float(s), set()).add(int(i))
+        rows.append(sorted(groups.items(), reverse=True))
+    return rows
+
+
+def _make_tier(corpus, n0: int, n_replicas: int, **tier_kw) -> ReplicaRouter:
+    """Shard docs [0, n0) over n_replicas by the SAME ring the live tier
+    routes with, one sealed pool segment per replica."""
+    names = [f"replica{i}" for i in range(n_replicas)]
+    homes = ring_homes(build_ring(names, VNODES), np.arange(n0))
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    reps = []
+    for i, name in enumerate(names):
+        rows = np.flatnonzero(homes == i)
+        assert rows.size, f"{name} got an empty shard — reseed the test"
+        seg = build_pool_segment(
+            jax.tree.map(lambda a: a[rows], corpus.docs),
+            rows,
+            CFG,
+            capacity=_next_pow2(int(rows.size)),
+            key=jax.random.key(5 + i),
+            kg_triplets=corpus.kg.triplets,
+            doc_entities=corpus.doc_entities[rows],
+            n_entities=corpus.kg.n_entities,
+        )
+        pool = place_pool(SegmentPool.from_segmented(seg), mesh)
+        svc = HybridSearchService(
+            pool, PARAMS,
+            ServiceConfig(batcher=BatcherConfig(
+                flush_size=N_QUERIES, max_batch=8, flush_deadline_s=60.0)),
+            mesh=mesh,
+        )
+        router = SegmentRouter(
+            svc, CFG,
+            RouterConfig(seal_threshold=10**9, compaction="incremental",
+                         tier_fanout=2, auto_merge=False),
+            kg_triplets=corpus.kg.triplets,
+            n_entities=corpus.kg.n_entities,
+        )
+        reps.append(Replica(svc, router, name=name))
+    return ReplicaRouter(
+        reps, ReplicaTierConfig(virtual_nodes=VNODES, **tier_kw)
+    )
+
+
+@pytest.mark.parametrize(
+    "n_replicas,n0,n_insert,deletes,compact,probe",
+    [
+        # plain sharded read, no mutation after the tier insert
+        (2, 48, 16, [], False, 10),
+        # deletes spanning sealed and inserted ranges, with compaction
+        (2, 64, 32, [3, 50, 90], True, 70),
+        # three replicas, deletes at both shard boundaries
+        (3, 48, 32, [0, 47, 48, 79], True, 60),
+    ],
+)
+def test_scatter_gather_equals_single_service(
+    corpus, n_replicas, n0, n_insert, deletes, compact, probe
+):
+    """The equivalence contract: tier reads over any replica partition ==
+    one service over all surviving docs, up to equal-score tie order —
+    with streamed inserts, deletes, and per-replica compaction mixed in."""
+    total = n0 + n_insert
+    tier = _make_tier(corpus, n0, n_replicas)
+    try:
+        gids = tier.insert(
+            corpus.docs[n0:total],
+            new_doc_entities=corpus.doc_entities[n0:total],
+        )
+        assert gids.tolist() == list(range(n0, total))
+        if compact:
+            # compaction is per-replica and must not change tier results
+            tier.replicas[0].router.compact_incremental()
+        if deletes:
+            tier.delete(deletes)
+
+        live = np.asarray([g for g in range(total) if g not in deletes])
+        ref_idx = build_index(
+            jax.tree.map(lambda a: a[live], corpus.docs), CFG,
+            kg_triplets=corpus.kg.triplets,
+            doc_entities=corpus.doc_entities[live],
+            n_entities=corpus.kg.n_entities,
+        )
+        got = tier.search(corpus.queries, W, k=PARAMS.k)
+        ref = search(ref_idx, corpus.queries, W, PARAMS)
+        ref_ids_local = np.asarray(ref.ids)
+        ref_ids = np.where(
+            ref_ids_local >= 0,
+            live[np.clip(ref_ids_local, 0, live.size - 1)],
+            -1,
+        )
+        assert _canonical(np.asarray(got.ids), np.asarray(got.scores)) == \
+            _canonical(ref_ids, np.asarray(ref.scores))
+        for d in deletes:
+            assert d not in np.asarray(got.ids)
+
+        # KG reachability through the tier: a surviving doc's unique rare
+        # entity (entity id == doc id in make_corpus) reaches it across
+        # whichever replica holds it
+        assert probe not in deletes
+        kg_w = PathWeights.make(0.2, 0.2, 0.2, kg=2.0)
+        res = tier.search(
+            corpus.queries[:1], kg_w,
+            entities=np.asarray([[probe]], np.int32), k=PARAMS.k,
+        )
+        assert probe in np.asarray(res.ids)[0]
+    finally:
+        tier.close()
+
+
+def test_consistent_hash_placement_stable_and_minimal(corpus):
+    """Placement is a pure function of (names, id); removing a replica
+    remaps ONLY the ids homed on it."""
+    names = ["replica0", "replica1", "replica2"]
+    ids = np.arange(500)
+    h1 = ring_homes(build_ring(names, 64), ids)
+    h2 = ring_homes(build_ring(names, 64), ids)
+    assert (h1 == h2).all()
+    # all replicas get a meaningful share at 64 vnodes
+    counts = np.bincount(h1, minlength=3)
+    assert (counts > 50).all()
+
+    tier = _make_tier(corpus, 48, 3)
+    try:
+        before = tier.homes_of(ids)
+        tier.mark_down(1)
+        after = tier.homes_of(ids)
+        moved = before != after
+        assert (before[moved] == 1).all()  # only replica1's ids rehash
+        assert not (after == 1).any()
+        tier.mark_up(1)
+        assert (tier.homes_of(ids) == before).all()
+    finally:
+        tier.close()
+
+
+def test_degraded_reads_when_replica_down(corpus):
+    tier = _make_tier(corpus, 48, 2)
+    try:
+        down = 1
+        shard_gids = [
+            g for g in range(48) if ring_homes(
+                build_ring(["replica0", "replica1"], VNODES), [g]
+            )[0] == down
+        ]
+        tier.mark_down(down)
+        res = tier.search(corpus.queries, W, k=PARAMS.k)
+        assert tier.stats.partial_searches == 1
+        got = set(np.asarray(res.ids).ravel().tolist())
+        assert not (got & set(shard_gids))  # the down shard never surfaces
+        assert got - {-1}  # but the surviving shard still answers
+    finally:
+        tier.close()
+
+
+def test_fail_on_partial_raises(corpus):
+    tier = _make_tier(corpus, 48, 2, fail_on_partial=True)
+    try:
+        tier.mark_down(0)
+        with pytest.raises(RuntimeError, match="replicas down"):
+            tier.search(corpus.queries, W, k=PARAMS.k)
+    finally:
+        tier.close()
+
+
+def test_mirror_tier_least_outstanding_dispatch(corpus):
+    """Mirror placement: identical full copies, each query batch goes to
+    exactly ONE replica — the least-loaded one."""
+    names = ["replica0", "replica1"]
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    reps = []
+    for name in names:
+        seg = build_pool_segment(
+            corpus.docs[:48], np.arange(48), CFG,
+            capacity=64, key=jax.random.key(9),
+            kg_triplets=corpus.kg.triplets,
+            doc_entities=corpus.doc_entities[:48],
+            n_entities=corpus.kg.n_entities,
+        )
+        pool = place_pool(SegmentPool.from_segmented(seg), mesh)
+        svc = HybridSearchService(
+            pool, PARAMS,
+            ServiceConfig(batcher=BatcherConfig(
+                flush_size=N_QUERIES, max_batch=8, flush_deadline_s=60.0)),
+            mesh=mesh,
+        )
+        reps.append(Replica(svc, name=name))
+    tier = ReplicaRouter(
+        reps, ReplicaTierConfig(placement="mirror", virtual_nodes=VNODES)
+    )
+    try:
+        r1 = tier.search(corpus.queries, W, k=PARAMS.k)
+        # pretend replica0 is busy: dispatch must pick replica1
+        tier.replicas[0].outstanding = 5
+        r2 = tier.search(corpus.queries, W, k=PARAMS.k)
+        assert tier.stats.dispatched[1] >= 1
+        assert _canonical(np.asarray(r1.ids), np.asarray(r1.scores)) == \
+            _canonical(np.asarray(r2.ids), np.asarray(r2.scores))
+    finally:
+        tier.close()
+
+
+def test_pinned_global_ids_validation(corpus):
+    tier = _make_tier(corpus, 48, 2)
+    try:
+        router = tier.replicas[0].router
+        docs = corpus.docs[48:52]
+        with pytest.raises(ValueError, match="strictly increasing"):
+            router.insert(
+                docs, global_ids=np.asarray([60, 59, 61, 62]),
+                new_doc_entities=corpus.doc_entities[48:52],
+            )
+        with pytest.raises(ValueError, match="strictly increasing"):
+            # ids below the router's watermark would corrupt the sorted map
+            router.insert(
+                docs, global_ids=np.asarray([0, 1, 2, 3]),
+                new_doc_entities=corpus.doc_entities[48:52],
+            )
+        with pytest.raises(ValueError, match="map every new doc"):
+            router.insert(
+                docs, global_ids=np.asarray([100, 101]),
+                new_doc_entities=corpus.doc_entities[48:52],
+            )
+    finally:
+        tier.close()

@@ -298,6 +298,9 @@ def test_size_tier_merge_invariant(corpus, sealed):
         lo = N_SEALED + 16 * b
         svc.insert(corpus.docs[lo:lo + 16])
         router.compact_incremental()
+        # merges run on the background worker by default; the invariant
+        # holds once the notified policy run drains
+        router.wait_merges()
         tiers: dict[int, int] = {}
         for _, _, cap, _ in live_counts(router.pool):
             t = max(cap, 1).bit_length()
@@ -308,6 +311,58 @@ def test_size_tier_merge_invariant(corpus, sealed):
     for doc in (N_SEALED + 1, N_SEALED + 17, N_SEALED + 63):
         res = svc.search(_probe(corpus, doc), W, k=5)
         assert int(np.asarray(res.ids)[0, 0]) == doc
+    # clean shutdown: stop_pump joins the router's merge worker too
+    svc.stop_pump()
+    assert router._merge_thread is None
+
+
+def test_background_merge_equals_synchronous(corpus, sealed):
+    """The background worker applies the SAME size-tiered policy as the
+    synchronous path — after wait_merges the pool layouts agree."""
+    svc_bg, router_bg = _service(sealed, tier_fanout=2, auto_merge=True)
+    svc_sync, router_sync = _service(
+        sealed, tier_fanout=2, auto_merge=True, background_merge=False
+    )
+    for b in range(3):
+        lo = N_SEALED + 16 * b
+        for svc, router in ((svc_bg, router_bg), (svc_sync, router_sync)):
+            svc.insert(corpus.docs[lo:lo + 16])
+            router.compact_incremental()
+        router_bg.wait_merges()
+    assert sorted(c for _, _, c, _ in live_counts(router_bg.pool)) == \
+        sorted(c for _, _, c, _ in live_counts(router_sync.pool))
+    assert router_bg.stats.merges == router_sync.stats.merges
+    # stopping is idempotent and restart-safe: a new compaction after stop
+    # re-spawns the worker
+    router_bg.stop_merge_worker()
+    router_bg.stop_merge_worker()
+    svc_bg.insert(corpus.docs[N_SEALED + 48:N_SEALED + 64])
+    router_bg.compact_incremental()
+    router_bg.wait_merges()
+    svc_bg.stop_pump()
+    svc_sync.stop_pump()
+
+
+def test_autocheckpoint_on_compaction(corpus, sealed, tmp_path):
+    """RouterConfig.autocheckpoint_every wires save_pool into compaction:
+    every Nth compaction persists a loadable pool snapshot."""
+    from repro.checkpoint import load_pool
+
+    ckpt_dir = tmp_path / "auto"
+    svc, router = _service(
+        sealed, auto_merge=False,
+        autocheckpoint_every=2, autocheckpoint_dir=str(ckpt_dir),
+    )
+    svc.insert(corpus.docs[N_SEALED:N_SEALED + 16])
+    router.compact_incremental()
+    assert router.stats.autocheckpoints == 0  # 1 compaction < every=2
+    svc.insert(corpus.docs[N_SEALED + 16:N_SEALED + 32])
+    router.compact_incremental()
+    assert router.stats.autocheckpoints == 1
+    loaded = load_pool(ckpt_dir)
+    assert loaded.capacities == router.pool.capacities
+    # the checkpoint is the full live pool, tombstones included
+    assert sum(lc[3] for lc in live_counts(loaded)) == N_SEALED + 32
 
 
 # ---------------------------------------------------------------------------
