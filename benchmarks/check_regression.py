@@ -39,10 +39,29 @@ results/BENCH_scale.json against results/BENCH_scale_baseline.json:
   * per-replica-count ``model_qps`` may not collapse below
     ``1 - replica_qps_tol`` of the baseline.
 
+**Kernel gate** (``--all --only kernel``): compares results/BENCH_kernel.json
+against results/BENCH_kernel_baseline.json (both from
+``benchmarks/kernel_bench.py --dry-run`` in CI):
+
+  * every sweep pair's modeled ``bytes_fused`` must stay strictly below
+    ``bytes_unfused`` — exact and noise-free: the fused selection kernel's
+    whole point is eliminating the (B, C) score round-trip through HBM
+    (DESIGN.md §10), so a model regression means the fused path re-acquired
+    it;
+  * modeled selection-lane utilization must match the baseline exactly
+    (deterministic — it only moves if the K-padding rule changes);
+  * per-pair fused latency may not rise above ``1 + latency_tol`` of the
+    baseline (generous: dry-run shapes are dispatch-dominated);
+  * the MEAN fused/unfused latency ratio across the sweep may not rise
+    above ``1 + ratio_tol`` of the baseline mean — per-pair ratios on a
+    CPU runner are noise (both strategies lower to XLA there), but the
+    12-pair mean is stable enough to catch the fused path regressing
+    relative to the unfused one.
+
 **``--all`` mode**: run every gate in one invocation, driven by the
 committed ``results/gate_config.json`` — per-metric tolerances live in
 DATA, so tightening a gate is a one-line data diff, and the three
-historical CLI invocations collapse into one. ``--only build,serving``
+historical CLI invocations collapse into one. ``--only build,serving,kernel``
 filters. The legacy single-gate flags keep working for local use.
 
 Wall-clock fields are reported but never gated: absolute seconds are
@@ -82,6 +101,12 @@ SCALE_REGEN_HINT = (
     "regenerate with: PYTHONPATH=src python benchmarks/fig14_scale.py "
     "--docs 10000 && cp results/BENCH_scale.json "
     "results/BENCH_scale_baseline.json"
+)
+
+KERNEL_REGEN_HINT = (
+    "regenerate with: PYTHONPATH=src python benchmarks/kernel_bench.py "
+    "--dry-run && cp results/BENCH_kernel.json "
+    "results/BENCH_kernel_baseline.json"
 )
 
 
@@ -227,6 +252,81 @@ def check_scale(
     return failures
 
 
+def check_kernel(
+    bench: dict, baseline: dict, ratio_tol: float, latency_tol: float
+) -> list[str]:
+    """Fused-selection kernel gate; returns failure messages."""
+    failures: list[str] = []
+    mismatched = _config_mismatch(
+        baseline.get("config", {}), bench.get("config", {})
+    )
+    if mismatched:
+        return [
+            f"kernel bench config does not match the baseline ({mismatched}); "
+            f"the comparison would be meaningless — {KERNEL_REGEN_HINT}"
+        ]
+    sweep_b = bench.get("sweep", {})
+    sweep_base = baseline.get("sweep", {})
+    if not sweep_b or not sweep_base:
+        return ["sweep section missing from bench or baseline — "
+                + KERNEL_REGEN_HINT]
+    ratios_b: list[float] = []
+    ratios_base: list[float] = []
+    for name, base_vals in sweep_base.items():
+        vals = sweep_b.get(name)
+        if vals is None:
+            failures.append(f"sweep pair {name} missing from bench")
+            continue
+        model = vals.get("model", {})
+        if model.get("bytes_fused", 1) >= model.get("bytes_unfused", 0):
+            failures.append(
+                f"{name}: modeled bytes_fused "
+                f"{model.get('bytes_fused')} >= bytes_unfused "
+                f"{model.get('bytes_unfused')} — the fused path no longer "
+                "eliminates the (B, C) score round-trip (DESIGN.md §10)"
+            )
+        base_model = base_vals.get("model", {})
+        if model.get("lane_util_selection") != base_model.get(
+            "lane_util_selection"
+        ):
+            failures.append(
+                f"{name}: selection lane utilization drifted "
+                f"{base_model.get('lane_util_selection')} -> "
+                f"{model.get('lane_util_selection')} — the K-padding rule "
+                "changed (k_pad, DESIGN.md §10)"
+            )
+        ceiling = base_vals["fused_us_per_pair"] * (1.0 + latency_tol)
+        if vals["fused_us_per_pair"] > ceiling:
+            failures.append(
+                f"{name}: fused per-pair latency blew up "
+                f"{base_vals['fused_us_per_pair']:.3f}us -> "
+                f"{vals['fused_us_per_pair']:.3f}us "
+                f"(> {1 + latency_tol:.0f}x baseline; ceiling {ceiling:.3f}us)"
+            )
+        ratios_b.append(vals["fused_ratio"])
+        ratios_base.append(base_vals["fused_ratio"])
+    if ratios_b:
+        mean_b = sum(ratios_b) / len(ratios_b)
+        mean_base = sum(ratios_base) / len(ratios_base)
+        mean_ceiling = mean_base * (1.0 + ratio_tol)
+        if mean_b > mean_ceiling:
+            failures.append(
+                f"mean fused/unfused ratio regressed "
+                f"{mean_base:.3f} -> {mean_b:.3f} "
+                f"(> {ratio_tol:.0%} above baseline; ceiling "
+                f"{mean_ceiling:.3f}) — the fused path lost its edge over "
+                "score-then-top_k"
+            )
+    if bench.get("config", {}).get("dry_run") and (
+        bench.get("interpret_check") != "ok"
+    ):
+        failures.append(
+            "interpret_check missing or failed: the dry-run sweep must "
+            "verify Pallas-vs-oracle equality (kernel_bench.py --dry-run)"
+        )
+    return failures
+
+
 def _load_pair(
     bench_path: str, base_path: str, hint: str
 ) -> tuple[dict, dict] | list[str]:
@@ -303,6 +403,29 @@ def run_gate(kind: str, cfg: dict) -> list[str]:
             cfg.get("efficiency_floor", 0.6),
             cfg.get("replica_qps_tol", 0.5),
         )
+    if kind == "kernel":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_kernel.json"),
+            cfg.get("baseline", "results/BENCH_kernel_baseline.json"),
+            KERNEL_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            sweep = data.get("sweep", {})
+            ratios = [v["fused_ratio"] for v in sweep.values()]
+            mean = sum(ratios) / len(ratios) if ratios else float("nan")
+            print(
+                f"[kernel] {name}: pairs={len(sweep)} "
+                f"mean_fused_ratio={mean:.3f} "
+                f"backend={data.get('config', {}).get('backend')} "
+                f"use_kernel={data.get('config', {}).get('use_kernel')}"
+            )
+        return check_kernel(
+            bench, baseline,
+            cfg.get("ratio_tol", 0.5), cfg.get("latency_tol", 3.0),
+        )
     return [f"unknown gate '{kind}' in gate config"]
 
 
@@ -344,7 +467,8 @@ def main() -> int:
     ap.add_argument(
         "--only",
         default=None,
-        help="with --all: comma list of gate names to run (build,serving,scale)",
+        help="with --all: comma list of gate names to run "
+        "(build,serving,scale,kernel)",
     )
     ap.add_argument("--bench", default="results/BENCH_build.json")
     ap.add_argument("--baseline", default="results/BENCH_build_baseline.json")

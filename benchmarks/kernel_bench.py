@@ -1,8 +1,20 @@
-"""Hybrid distance kernel micro-bench: interpret-mode correctness timing on
-CPU + the analytic TPU roofline character of the kernel (it is the
-distance-computation hot spot the paper's warp kernel targets).
+"""Fused top-k kernel sweep: measured fused-vs-unfused latency + bytes model.
 
-    PYTHONPATH=src python benchmarks/kernel_bench.py [--dry-run]
+Sweeps the fused selection kernel over (C_TILE, K, expand) and times the two
+expansion-round strategies end to end on the current backend:
+
+  unfused : hybrid_scores_vs_ids -> (B, C) scores in HBM -> lax.top_k
+  fused   : fused_topk_vs_ids    -> (B, K_pad) ids+scores, selection in VMEM
+
+Per pair it reports µs/candidate-pair, the fused/unfused ratio, the modeled
+HBM bytes for both strategies (the fused path must eliminate the (B, C) score
+round-trip — gated exactly in check_regression.py), modeled selection-lane
+utilization (k / k_pad), and the analytic TPU roofline of the fused kernel.
+
+Results land in results/BENCH_kernel.json; the committed baseline is
+results/BENCH_kernel_baseline.json (regenerate with --dry-run to match CI).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--dry-run] [--out PATH]
 """
 
 from __future__ import annotations
@@ -14,65 +26,197 @@ if __package__ in (None, ""):  # script mode: python benchmarks/kernel_bench.py
     _root = pathlib.Path(__file__).resolve().parents[1]
     sys.path[:0] = [str(_root), str(_root / "src")]
 
+import argparse
+import functools
+import json
+
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
+from repro.kernels.fused_topk import k_pad
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 from tests.helpers import random_fused
 
 from benchmarks.common import timed
 
+C_TILES = (128, 256)
+KS = (10, 32, 64)
+EXPANDS = (1, 4)
 
-def run(dry_run: bool = False):
-    rows = []
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "BENCH_kernel.json"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "c_tile", "use_kernel"))
+def _unfused(q, corpus, ids, k, c_tile, use_kernel):
+    scores = ops.hybrid_scores_vs_ids(
+        q, corpus, ids, c_tile=c_tile, use_kernel=use_kernel
+    )
+    return jax.lax.top_k(scores, k)
+
+
+def _bytes_model(*, b, c, dd, ps, pf, k, c_tile, bpe):
+    """Modeled HBM traffic for one expansion round, both strategies.
+
+    Inputs (queries + gathered candidate tiles) are identical; the strategies
+    differ only in what crosses HBM after scoring: unfused writes the full
+    (B, C_pad) score matrix and top_k reads it back, fused writes only the
+    (B, K_pad) winner lanes.
+    """
+    c_pad = -(-c // c_tile) * c_tile
+    kp = k_pad(k)
+    vec_bytes = dd * bpe + ps * 8 + pf * 8  # dense + two ELL (idx i32 + val f32)
+    inputs = b * vec_bytes + b * c_pad * (vec_bytes + 4)  # +4: candidate id lane
+    score_roundtrip = 2 * b * c_pad * 4  # write (B, C_pad) f32, top_k reads it back
+    unfused = inputs + score_roundtrip + b * k * 8
+    fused = inputs + b * kp * 8
+    return {
+        "bytes_unfused": unfused,
+        "bytes_fused": fused,
+        "score_roundtrip_bytes": score_roundtrip,
+        "bytes_saved_ratio": round(1.0 - fused / unfused, 4),
+        "k_pad": kp,
+        "lane_util_selection": round(k / kp, 4),
+        "lane_util_candidates": round(c / c_pad, 4),
+    }
+
+
+def _roofline(*, b, c, dd, ps, pf, c_tile, bytes_fused):
+    c_pad = -(-c // c_tile) * c_tile
+    flops = b * c_pad * (2 * dd + 3 * ps * ps + 3 * pf * pf)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_fused / HBM_BW
+    return {
+        "model_flops": flops,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": 0.0,
+        "dominant": "memory" if memory_s > compute_s else "compute",
+    }
+
+
+def run(dry_run: bool = False) -> dict:
+    use_kernel = ops.resolve_use_kernel(None)
+    if dry_run:
+        b, w, dd, ps, pf, n_corpus = 2, 64, 32, 8, 4, 256
+        vs, vf = 997, 251
+    else:
+        b, w, dd, ps, pf, n_corpus = 8, 256, 256, 64, 32, 4096
+        vs, vf = 30522, 8192
+
     rng = np.random.default_rng(0)
-    b, c, dd, ps, pf = (2, 64, 64, 8, 4) if dry_run else (8, 512, 1024, 64, 32)
-    q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
-    cands = random_fused(rng, (b, c), d_dense=dd, ps=ps, pf=pf, vs=30522, vf=8192)
+    corpus = random_fused(rng, (n_corpus,), d_dense=dd, ps=ps, pf=pf, vs=vs, vf=vf)
+    q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=vs, vf=vf)
+    bpe = jnp.dtype(corpus.dense.dtype).itemsize
 
-    _, t_oracle = timed(
-        lambda: jax.block_until_ready(ops.hybrid_scores(q, cands, use_kernel=False))
-    )
-    _, t_kernel = timed(
-        lambda: jax.block_until_ready(
-            ops.hybrid_scores(q, cands, use_kernel=True, interpret=True)
+    sweep = {}
+    for c_tile in C_TILES:
+        for expand in EXPANDS:
+            c = expand * w  # multi-node batching: `expand` nodes' tiles stacked
+            ids = jnp.asarray(
+                rng.integers(0, n_corpus, size=(b, c), dtype=np.int32)
+            )
+            for k in KS:
+                k_eff = min(k, c)
+                _, t_unfused = timed(
+                    lambda: jax.block_until_ready(
+                        _unfused(q, corpus, ids, k_eff, c_tile, use_kernel)
+                    )
+                )
+                _, t_fused = timed(
+                    lambda: jax.block_until_ready(
+                        ops.fused_topk_vs_ids(
+                            q, corpus, ids, k_eff, c_tile=c_tile, use_kernel=use_kernel
+                        )
+                    )
+                )
+                n_pairs = b * c
+                model = _bytes_model(
+                    b=b, c=c, dd=dd, ps=ps, pf=pf, k=k_eff, c_tile=c_tile, bpe=bpe
+                )
+                row = {
+                    "c_tile": c_tile,
+                    "k": k,
+                    "expand": expand,
+                    "n_candidates": c,
+                    "unfused_us_per_pair": round(t_unfused * 1e6 / n_pairs, 4),
+                    "fused_us_per_pair": round(t_fused * 1e6 / n_pairs, 4),
+                    "fused_ratio": round(t_fused / t_unfused, 4),
+                    "model": model,
+                    "roofline": _roofline(
+                        b=b, c=c, dd=dd, ps=ps, pf=pf, c_tile=c_tile,
+                        bytes_fused=model["bytes_fused"],
+                    ),
+                }
+                sweep[f"c{c_tile}_k{k}_e{expand}"] = row
+
+    out = {
+        "config": {
+            "backend": jax.default_backend(),
+            "use_kernel": use_kernel,
+            "dry_run": dry_run,
+            "b": b,
+            "nbr_width": w,
+            "d_dense": dd,
+            "ps": ps,
+            "pf": pf,
+            "n_corpus": n_corpus,
+        },
+        "sweep": sweep,
+    }
+
+    if dry_run:
+        # CI smoke: the Pallas kernel (interpret) must agree with the oracle.
+        ids_s = jnp.asarray(rng.integers(0, n_corpus, size=(2, 96), dtype=np.int32))
+        ks, ki = ops.fused_topk_vs_ids(
+            q[:2] if b >= 2 else q, corpus, ids_s, 10,
+            c_tile=32, use_kernel=True, interpret=True,
         )
-    )
-    n_pairs = b * c
-    rows.append(("kernel.oracle_xla_cpu", t_oracle * 1e6 / n_pairs, f"pairs={n_pairs}"))
-    rows.append(("kernel.pallas_interpret", t_kernel * 1e6 / n_pairs,
-                 "interpret-mode (correctness harness, not TPU perf)"))
+        cands = jax.tree.map(
+            lambda a: a.reshape((2, 96) + a.shape[1:]),
+            corpus.take(ids_s.reshape(-1)),
+        )
+        ws, wi = ref.fused_topk_ref(q[:2] if b >= 2 else q, cands, ids_s, None, 10)
+        # scores agree up to summation order (MXU dot vs oracle einsum);
+        # positions agree exactly except across float-ulp ties
+        np.testing.assert_allclose(
+            np.asarray(ks), np.asarray(ws), rtol=1e-5, atol=1e-5,
+            err_msg="fused != oracle",
+        )
+        flip = np.asarray(ki) != np.asarray(wi)
+        assert np.all(
+            np.abs(np.asarray(ks) - np.asarray(ws))[flip] < 1e-4
+        ), "fused != oracle (pos beyond tie tolerance)"
+        out["interpret_check"] = "ok"
 
-    # analytic TPU roofline of one (query x C_TILE) grid cell
-    c_tile = 128
-    dense_flops = 2 * c_tile * dd
-    sparse_flops = 3 * c_tile * ps * ps + 3 * c_tile * pf * pf  # cmp+mul+acc
-    bytes_moved = c_tile * (dd * 2 + ps * 8 + pf * 8) + dd * 2 + ps * 8 + pf * 8
-    ai = (dense_flops + sparse_flops) / bytes_moved
-    t_compute = (dense_flops + sparse_flops) / PEAK_FLOPS_BF16
-    t_memory = bytes_moved / HBM_BW
-    rows.append((
-        "kernel.tpu_roofline_per_tile",
-        max(t_compute, t_memory) * 1e6,
-        f"arith_intensity={ai:.1f}flops/B;bound={'memory' if t_memory > t_compute else 'compute'}",
-    ))
-    return rows
+    return out
 
 
 def main() -> None:
-    import argparse
-
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--dry-run", action="store_true",
-        help="tiny shapes; verifies the kernel entry points run (CI smoke)",
+        help="tiny shapes + interpret-mode equality check (CI smoke)",
     )
+    ap.add_argument("--out", type=pathlib.Path, default=RESULTS)
     args = ap.parse_args()
-    print("name,us_per_call,derived")
-    for r in run(dry_run=args.dry_run):
-        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+    out = run(dry_run=args.dry_run)
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(out, indent=2) + "\n")
+
+    print("pair,unfused_us_per_pair,fused_us_per_pair,ratio,lane_util,bytes_saved")
+    for name, row in out["sweep"].items():
+        print(
+            f"{name},{row['unfused_us_per_pair']:.3f},{row['fused_us_per_pair']:.3f},"
+            f"{row['fused_ratio']:.3f},{row['model']['lane_util_selection']:.3f},"
+            f"{row['model']['bytes_saved_ratio']:.3f}"
+        )
+    if "interpret_check" in out:
+        print(f"interpret_check,{out['interpret_check']}")
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -154,12 +154,14 @@ def _descent_init(
         if nbr_ids.shape[1] < k:
             extra = knn_graph._init_graph(n, k - nbr_ids.shape[1], k0)
             nbr_ids = jnp.concatenate([nbr_ids, extra], axis=1)
-    scores = ops.hybrid_scores_vs_ids(
-        queries, corpus, nbr_ids, use_kernel=cfg.use_kernel
+    # fused score + full sort (k == row width) — operation-for-operation the
+    # same as knn_graph.build_knn_graph's prologue, so both paths agree bitwise
+    top, pos = ops.fused_topk_vs_ids(
+        queries, corpus, nbr_ids, k, use_kernel=cfg.use_kernel
     )
-    top, pos = jax.lax.top_k(scores, k)
-    nbr_ids = jnp.take_along_axis(nbr_ids, pos, axis=-1)
-    return BuildState(nbr_ids=nbr_ids, nbr_scores=top, key=key)
+    nbr_ids = ops.take_topk_ids(nbr_ids, pos)
+    scores = jnp.where(nbr_ids >= 0, top, -jnp.inf)
+    return BuildState(nbr_ids=nbr_ids, nbr_scores=scores, key=key)
 
 
 def _descent_rounds(
@@ -343,7 +345,7 @@ def _prune_all(
 
 
 def _entry_points(
-    corpus: FusedVectors, sip: jax.Array, n_entry: int, use_kernel: bool
+    corpus: FusedVectors, sip: jax.Array, n_entry: int, use_kernel: bool | None
 ) -> jax.Array:
     """Union of top-norm nodes under the fused metric AND each single path,
     so entry quality holds for any query weights."""

@@ -28,7 +28,7 @@ class KnnConfig:
     iters: int = 6
     extra_random: int = 8  # random candidates injected per round (escape lows)
     node_chunk: int = 2048  # nodes processed per jit call (memory bound)
-    use_kernel: bool = False  # pallas kernel (TPU) vs fused-jnp oracle (CPU)
+    use_kernel: bool | None = None  # None -> backend auto (Pallas off-CPU)
 
 
 def dedup_mask(ids: jax.Array) -> jax.Array:
@@ -83,10 +83,16 @@ def _descent_round_chunk(
     cand = jnp.where(already, PAD_IDX, cand)
     keep = jax.vmap(dedup_mask)(cand)
     cand = jnp.where(keep, cand, PAD_IDX)
-    scores = ops.hybrid_scores_vs_ids(
-        chunk_queries, corpus, cand, use_kernel=cfg.use_kernel
+    # fused distance + per-row top-k: the (C, K*K+R) candidate score matrix
+    # never materializes outside the kernel. Pre-selecting the candidates'
+    # top-k before the merge is exact — cand is internally deduped and
+    # disjoint from chunk_nbrs (the ``already`` mask above), so the merge
+    # can keep at most k of them anyway.
+    sel_scores, sel_pos = ops.fused_topk_vs_ids(
+        chunk_queries, corpus, cand, k, use_kernel=cfg.use_kernel
     )
-    return _merge_topk(chunk_nbrs, chunk_scores, cand, scores, k)
+    sel_ids = ops.take_topk_ids(cand, sel_pos)
+    return _merge_topk(chunk_nbrs, chunk_scores, sel_ids, sel_scores, k)
 
 
 # jitted wrapper for the legacy host-driven chunk loop; the device-resident
@@ -131,13 +137,15 @@ def build_knn_graph(
             nbr_ids = jnp.concatenate([nbr_ids, extra], axis=1)
     node_ids = jnp.arange(n, dtype=jnp.int32)
     dispatch.tick()
-    scores = ops.hybrid_scores_vs_ids(
-        queries, corpus, nbr_ids, use_kernel=cfg.use_kernel
+    # fused score + full sort of the initial rows (k == row width, so the
+    # fused top-k IS the sort); mirrored operation-for-operation by the
+    # pipeline prologue (build_pipeline._descent_init) so both build paths
+    # stay bitwise-identical
+    top, pos = ops.fused_topk_vs_ids(
+        queries, corpus, nbr_ids, k, use_kernel=cfg.use_kernel
     )
-    # sort initial rows by score
-    top, pos = jax.lax.top_k(scores, k)
-    nbr_ids = jnp.take_along_axis(nbr_ids, pos, axis=-1)
-    scores = top
+    nbr_ids = ops.take_topk_ids(nbr_ids, pos)
+    scores = jnp.where(nbr_ids >= 0, top, -jnp.inf)
 
     for it in range(cfg.iters):
         key, kr = jax.random.split(key)

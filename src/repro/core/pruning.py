@@ -46,7 +46,7 @@ class PruneConfig:
     degree: int = 16  # final semantic degree d
     keyword_degree: int = 8  # keyword-edge slots per node
     node_chunk: int = 1024
-    use_kernel: bool = False
+    use_kernel: bool | None = None  # None -> backend auto (Pallas off-CPU)
     mode: str = "joint"  # joint | rng (no IP rule) | ip (no detour ordering)
 
 
@@ -223,11 +223,12 @@ def _prune_chunk(
             PathWeights.make(0.0, 0.0, 1.0),
         ):
             qw = weighted_query(chunk_queries, w)
-            ps = ops.hybrid_scores_vs_ids(
-                qw, corpus, cand_ids, use_kernel=cfg.use_kernel
+            # fused per-path top-pk: selection happens in-kernel, the (C, K)
+            # per-path score matrix never leaves it
+            _, pos = ops.fused_topk_vs_ids(
+                qw, corpus, cand_ids, pk, use_kernel=cfg.use_kernel
             )
-            _, pos = jax.lax.top_k(jnp.where(cand_ids >= 0, ps, NEG), pk)
-            paths.append(jnp.take_along_axis(cand_ids, pos, axis=-1))
+            paths.append(ops.take_topk_ids(cand_ids, pos))
         path_ids = jnp.stack(paths, axis=1)  # (C, 3, pk)
     u_kw = chunk_queries.lexical.idx
     cand_kw = corpus.lexical.idx[jnp.clip(cand_ids, 0, corpus.n - 1)]
@@ -254,7 +255,7 @@ def _prune_chunk(
 _prune_chunk_jit = jax.jit(_prune_chunk, static_argnames=("cfg",))
 
 
-def self_scores(corpus: FusedVectors, use_kernel: bool = False) -> jax.Array:
+def self_scores(corpus: FusedVectors, use_kernel: bool | None = None) -> jax.Array:
     """IP(v, v) — fused self-similarity (squared fused norm)."""
     cands = jax.tree.map(lambda a: a[:, None], corpus)
     return ops.hybrid_scores(corpus, cands, use_kernel=use_kernel)[:, 0]

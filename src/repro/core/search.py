@@ -49,10 +49,27 @@ class SearchParams:
     kw_pool_size: int = 16  # twin pool for keyword-satisfying overflow
     expand: int = 1  # nodes expanded per round (CAGRA-style multi-expansion;
     # >1 cuts the sequential merge/top_k rounds ~expand-fold — §Perf)
-    use_kernel: bool = False
+    use_kernel: bool | None = None  # None -> backend auto: Pallas off-CPU,
+    # jnp oracle on CPU (ops.resolve_use_kernel); pin via resolve_params()
+    # before using params as a jit/AOT cache key
     use_keywords: bool = False  # enable keyword edge loading + filtering
     use_kg: bool = False  # enable logical edge traversal
     kg_max_hops: int = 3  # x: max entity hops for logical expansion
+
+
+def resolve_params(params: SearchParams) -> SearchParams:
+    """Pin backend-auto fields to concrete values.
+
+    ``use_kernel=None`` resolves to the backend default (Pallas off-CPU).
+    Callers that use ``SearchParams`` as a cache key — the serving AOT
+    executable cache above all — must key on the *resolved* params so a
+    kernel-mode change can never alias a stale executable.
+    """
+    if params.use_kernel is None:
+        return dataclasses.replace(
+            params, use_kernel=ops.resolve_use_kernel(None)
+        )
+    return params
 
 
 @partial(
@@ -218,17 +235,32 @@ def _search_one(
             o_hops = jnp.full(nbr_ids.shape, INF_HOP)
             reward = jnp.zeros(nbr_ids.shape, jnp.float32)
 
-        # ---- hybrid distances + logical reward (l.21-23) ----
-        nbr_scores = jnp.where(
-            nbr_ids >= 0, score_ids(nbr_ids) + reward, NEG
+        # ---- fused hybrid distance + top-k over the round (l.21-25) ----
+        # All E expanded nodes' neighbor lists ride the candidate axis of ONE
+        # fused kernel invocation (multi-node batching: the pinned query
+        # block amortizes over every node's tiles), the kg reward enters as
+        # the pre-selection bias, and only the round's top-kr survivors come
+        # back — the (W,) score vector never round-trips through HBM on the
+        # kernel path. Pre-selecting the round is exact:
+        # top_P(pool ∪ round) == top_P(pool ∪ top_kr(round)) for kr >= min(P, W),
+        # and tie order is preserved (fused selection prefers low positions,
+        # matching the concat order lax.top_k would have seen).
+        W = nbr_ids.shape[0]
+        kr = min(P, W)
+        sel_scores, sel_pos = ops.fused_topk_vs_ids(
+            q_b, index.corpus, nbr_ids[None], kr,
+            bias=reward[None], use_kernel=p.use_kernel,
         )
+        sel_scores, sel_pos = sel_scores[0], sel_pos[0]
+        sel_ids = ops.take_topk_ids(nbr_ids, sel_pos)
+        sel_ents = ops.take_topk(o_ents, sel_pos, PAD_IDX)
+        sel_hops = ops.take_topk(o_hops, sel_pos, INF_HOP)
 
-        # ---- merge into the pool (l.24-25) ----
-        all_ids = jnp.concatenate([pool_ids, nbr_ids])
-        all_scores = jnp.concatenate([pool_scores, nbr_scores])
-        all_visited = jnp.concatenate([pool_visited, jnp.zeros(nbr_ids.shape, bool)])
-        all_ents = jnp.concatenate([pool_ents, o_ents])
-        all_hops = jnp.concatenate([pool_hops, o_hops])
+        all_ids = jnp.concatenate([pool_ids, sel_ids])
+        all_scores = jnp.concatenate([pool_scores, sel_scores])
+        all_visited = jnp.concatenate([pool_visited, jnp.zeros(sel_ids.shape, bool)])
+        all_ents = jnp.concatenate([pool_ents, sel_ents])
+        all_hops = jnp.concatenate([pool_hops, sel_hops])
         top, pos = jax.lax.top_k(all_scores, P)
         pool_ids = jnp.where(top > NEG, all_ids[pos], PAD_IDX)
         pool_scores = top
@@ -237,14 +269,23 @@ def _search_one(
         pool_hops = all_hops[pos]
 
         # ---- twin pool: keyword-satisfying candidates (l.26-28) ----
+        # Same fused selection over the keyword-matching subset. Candidates
+        # already resident in the twin pool are PAD'd out *before* selection
+        # (the pre-selection dedup that makes top_kk exact), so
+        # top_kwP(kw ∪ matched) == top_kwP(kw ∪ top_kk(matched \ kw)).
         if p.use_keywords:
             cand_kw = index.corpus.lexical.idx[jnp.clip(nbr_ids, 0, n - 1)]
             matches = has_keyword_overlap(cand_kw, q_keywords) & (nbr_ids >= 0)
-            kwc_scores = jnp.where(matches, nbr_scores, NEG)
-            m_ids = jnp.concatenate([kw_ids, nbr_ids])
-            m_scores = jnp.concatenate([kw_scores, kwc_scores])
-            keep = dedup_mask(m_ids)
-            m_scores = jnp.where(keep, m_scores, NEG)
+            in_kw = (nbr_ids[:, None] == kw_ids[None, :]).any(-1)
+            kw_cand = jnp.where(matches & ~in_kw, nbr_ids, PAD_IDX)
+            kk = min(p.kw_pool_size, W)
+            kwsel_scores, kwsel_pos = ops.fused_topk_vs_ids(
+                q_b, index.corpus, kw_cand[None], kk,
+                bias=reward[None], use_kernel=p.use_kernel,
+            )
+            kwsel_ids = ops.take_topk_ids(kw_cand, kwsel_pos[0])
+            m_ids = jnp.concatenate([kw_ids, kwsel_ids])
+            m_scores = jnp.concatenate([kw_scores, kwsel_scores[0]])
             kw_top, kw_pos = jax.lax.top_k(m_scores, p.kw_pool_size)
             kw_ids = jnp.where(kw_top > NEG, m_ids[kw_pos], PAD_IDX)
             kw_scores = kw_top

@@ -1,14 +1,17 @@
-"""Jitted public wrappers around the hybrid distance kernel.
+"""Jitted public wrappers around the hybrid distance kernels.
 
 ``hybrid_scores``           — (B queries) x (B, C candidate rows) -> (B, C)
 ``hybrid_scores_vs_ids``    — gather candidate ids from a corpus, score, mask
+``fused_topk`` / ``_vs_ids``— distance + in-kernel top-k selection: (B, k)
+                              scores + candidate positions, no (B, C) output
 ``pairwise_scores_chunked`` — brute-force (N x M) scoring in memory-bounded
                               chunks (ground truth / rerank)
 
-On CPU (this container) the kernel runs in interpret mode automatically; on
-TPU it lowers to Mosaic. ``use_kernel=False`` falls back to the jnp oracle,
-which XLA fuses well — the distributed search path uses the oracle on CPU and
-the kernel on TPU via the same call sites.
+Every wrapper takes ``use_kernel: bool | None``. ``None`` (the default at
+the config layer) resolves by backend: Pallas on TPU, the jnp oracle on CPU
+— the same call sites serve both. An explicit ``True`` on CPU runs the
+kernel in interpret mode (tests use this for kernel/oracle equality);
+explicit ``False`` forces the oracle anywhere.
 """
 
 from __future__ import annotations
@@ -20,6 +23,8 @@ import jax.numpy as jnp
 
 from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
 from repro.kernels import ref
+from repro.kernels.fused_topk import NEG as NEG  # re-export: callers mask on it
+from repro.kernels.fused_topk import fused_topk_pallas
 from repro.kernels.hybrid_distance import DEFAULT_C_TILE, hybrid_distance_pallas
 from repro.kernels.pairwise_tile import pairwise_tile_pallas
 from repro.runtime import dispatch
@@ -27,6 +32,19 @@ from repro.runtime import dispatch
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def resolve_use_kernel(use_kernel: bool | None) -> bool:
+    """Backend-auto kernel dispatch: ``None`` -> Pallas iff not on CPU.
+
+    Config dataclasses (``SearchParams``, ``KnnConfig``, ``PruneConfig``)
+    default ``use_kernel`` to ``None``; resolving to a concrete bool happens
+    once, at construction/entry time, so jit cache keys and the serving AOT
+    executable-cache key always see a pinned kernel mode.
+    """
+    if use_kernel is None:
+        return not _on_cpu()
+    return bool(use_kernel)
 
 
 def _pad_candidates(cands: FusedVectors, c_tile: int) -> tuple[FusedVectors, int]:
@@ -52,14 +70,14 @@ def hybrid_scores(
     cands: FusedVectors,
     *,
     c_tile: int = DEFAULT_C_TILE,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Score B queries against their (B, C, ...) candidate rows -> (B, C) f32.
 
     Weights must already be folded into ``q`` (usms.weighted_query).
     """
-    if not use_kernel:
+    if not resolve_use_kernel(use_kernel):
         return ref.hybrid_scores_ref(q, cands)
     if interpret is None:
         interpret = _on_cpu()
@@ -93,7 +111,7 @@ def hybrid_scores_vs_ids(
     ids: jax.Array,  # (B, C) int32, PAD_IDX entries masked to -inf
     *,
     c_tile: int = DEFAULT_C_TILE,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
 ) -> jax.Array:
     flat = ids.reshape(-1)
     rows = corpus.take(flat)
@@ -104,10 +122,114 @@ def hybrid_scores_vs_ids(
     return jnp.where(ids >= 0, scores, -jnp.inf)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "c_tile", "use_kernel", "interpret")
+)
+def fused_topk(
+    q: FusedVectors,
+    cands: FusedVectors,
+    cid: jax.Array,  # (B, C) int32 candidate ids; PAD_IDX slots invalid
+    k: int,
+    *,
+    bias: jax.Array | None = None,  # (B, C) f32 pre-selection score bias
+    c_tile: int = DEFAULT_C_TILE,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused distance + top-k: score candidate rows, select in-kernel.
+
+    Returns ``(scores, positions)`` of shape (B, k) — the per-query top-k
+    biased hybrid scores (descending) and the positions along the C axis
+    they came from. The ``(B, C)`` score matrix never reaches HBM on the
+    kernel path. Invalid slots (PAD candidates, k beyond the live count)
+    hold ``(NEG, PAD_IDX)``; ``bias`` must be finite (mask via PAD ids, not
+    via bias). Tie order matches ``lax.top_k`` (lowest position wins).
+    """
+    if not resolve_use_kernel(use_kernel):
+        return ref.fused_topk_ref(q, cands, cid, bias, k)
+    if interpret is None:
+        interpret = _on_cpu()
+    cands, c_orig = _pad_candidates(cands, c_tile)
+    c_padded = cands.dense.shape[1]
+    if c_padded != c_orig:
+        grow = ((0, 0), (0, c_padded - c_orig))
+        cid = jnp.pad(cid, grow, constant_values=PAD_IDX)
+        if bias is not None:
+            bias = jnp.pad(bias, grow)
+    csi = jnp.swapaxes(cands.learned.idx, 1, 2)
+    csv = jnp.swapaxes(cands.learned.val, 1, 2)
+    cfi = jnp.swapaxes(cands.lexical.idx, 1, 2)
+    cfv = jnp.swapaxes(cands.lexical.val, 1, 2)
+    out_s, out_i = fused_topk_pallas(
+        q.dense,
+        q.learned.idx,
+        q.learned.val,
+        q.lexical.idx,
+        q.lexical.val,
+        cands.dense,
+        csi,
+        csv,
+        cfi,
+        cfv,
+        cid.astype(jnp.int32),
+        None if bias is None else bias.astype(jnp.float32),
+        k=k,
+        c_tile=c_tile,
+        interpret=interpret,
+    )
+    return out_s[:, :k], out_i[:, :k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "c_tile", "use_kernel", "interpret")
+)
+def fused_topk_vs_ids(
+    q: FusedVectors,
+    corpus: FusedVectors,
+    ids: jax.Array,  # (B, C) int32 candidate ids into the corpus
+    k: int,
+    *,
+    bias: jax.Array | None = None,
+    c_tile: int = DEFAULT_C_TILE,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather candidate rows by id, then fused distance + top-k selection.
+
+    The round's expansion consumer: callers stack a whole round's neighbor
+    lists into the C axis (multi-node batching) and gather ids plus any
+    per-candidate metadata from the returned positions via ``take_topk``.
+    """
+    flat = ids.reshape(-1)
+    rows = corpus.take(flat)
+    cands = jax.tree.map(lambda a: a.reshape(ids.shape + a.shape[1:]), rows)
+    return fused_topk(
+        q, cands, ids, k,
+        bias=bias, c_tile=c_tile, use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+def take_topk(values: jax.Array, pos: jax.Array, fill) -> jax.Array:
+    """Gather per-candidate values at fused-top-k positions (PAD -> fill).
+
+    ``values``: (..., C) aligned with the candidate axis the positions were
+    selected over; ``pos``: (..., k) from ``fused_topk*``.
+    """
+    got = jnp.take_along_axis(
+        values, jnp.clip(pos, 0, values.shape[-1] - 1), axis=-1
+    )
+    return jnp.where(pos >= 0, got, fill)
+
+
+def take_topk_ids(ids: jax.Array, pos: jax.Array) -> jax.Array:
+    """Resolve fused-top-k positions back to candidate ids (PAD -> PAD_IDX)."""
+    return take_topk(ids, pos, PAD_IDX)
+
+
 def pairwise_tile_scores(
     tile: FusedVectors,  # (C, K, ...) gathered candidate rows
     *,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """All-pairs hybrid scores within each node's candidate tile -> (C, K, K).
@@ -116,7 +238,7 @@ def pairwise_tile_scores(
     the caller (no per-pair re-gather); invalid-candidate masking stays with
     the caller, which holds the id list.
     """
-    if not use_kernel:
+    if not resolve_use_kernel(use_kernel):
         return ref.pairwise_tile_ref(tile)
     if interpret is None:
         interpret = _on_cpu()

@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.usms import FusedVectors
+from repro.core.usms import PAD_IDX, FusedVectors
+from repro.kernels.fused_topk import NEG
 
 
 def sparse_ip_ref(
@@ -45,6 +46,35 @@ def hybrid_scores_ref(q: FusedVectors, cands: FusedVectors) -> jax.Array:
     sp = sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
     fp = sparse_ip_ref(q.lexical.idx, q.lexical.val, cands.lexical.idx, cands.lexical.val)
     return dense + sp + fp
+
+
+def fused_topk_ref(
+    q: FusedVectors,
+    cands: FusedVectors,
+    cid: jax.Array,  # (B, C) int32 candidate ids; PAD_IDX slots are invalid
+    bias: jax.Array | None,  # (B, C) f32 pre-selection score bias, or None
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """jnp oracle for the fused distance+top-k kernel.
+
+    Returns ``(scores, positions)`` of shape (B, k): the top-k biased hybrid
+    scores per query (descending, ``lax.top_k`` tie order) and the candidate
+    positions along the C axis they came from. Invalid slots — PAD candidates,
+    or k exceeding the number of live candidates — hold (NEG, PAD_IDX).
+    """
+    scores = hybrid_scores_ref(q, cands)
+    if bias is not None:
+        scores = scores + bias.astype(jnp.float32)
+    scores = jnp.where(cid >= 0, scores, NEG)
+    b, c = scores.shape
+    k_eff = min(k, c)
+    top, pos = jax.lax.top_k(scores, k_eff)
+    pos = pos.astype(jnp.int32)
+    if k_eff < k:
+        top = jnp.pad(top, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+        pos = jnp.pad(pos, ((0, 0), (0, k - k_eff)), constant_values=PAD_IDX)
+    pos = jnp.where(top > NEG, pos, PAD_IDX)
+    return top, pos
 
 
 def pairwise_tile_ref(tile: FusedVectors) -> jax.Array:

@@ -58,7 +58,12 @@ from repro.core.segment_pool import SegmentPool, group_shape_key
 from repro.core.build_pipeline import insert as index_insert
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.index import mark_deleted as index_mark_deleted
-from repro.core.search import SearchParams, SearchResult, search_padded
+from repro.core.search import (
+    SearchParams,
+    SearchResult,
+    resolve_params,
+    search_padded,
+)
 from repro.core.usms import (
     PAD_IDX,
     FusedVectors,
@@ -126,7 +131,11 @@ class HybridSearchService:
         mesh=None,
         build_cfg: Optional[BuildConfig] = None,
     ):
-        self.params = params
+        # pin backend-auto fields (use_kernel=None) to concrete values up
+        # front: self.params is a component of every AOT executable-cache
+        # key, so kernel mode must be resolved — not deferred to the op
+        # layer — or a backend/flag change could alias a stale executable
+        self.params = resolve_params(params)
         self.config = config or ServiceConfig()
         self.stats = ServiceStats()
         self._snap = _Snapshot(index, version=0)
@@ -148,12 +157,14 @@ class HybridSearchService:
             if mesh is None:
                 raise ValueError("a SegmentedIndex service requires a mesh")
         if self._segmented and mesh is not None:
-            self._dist_fn = make_distributed_search_padded(mesh, params)
+            self._dist_fn = make_distributed_search_padded(mesh, self.params)
         # pool groups off the mesh's segment axes (or the whole pool of an
         # off-mesh deployment) are served by the collective-free local pass;
         # any segmented service can become pool-fronted after an incremental
         # compaction, so the local factory is always on hand
-        self._local_fn = make_local_group_search(params) if self._segmented else None
+        self._local_fn = (
+            make_local_group_search(self.params) if self._segmented else None
+        )
         self._build_cfg = build_cfg
         self._router = None  # set by serving.segment_router.SegmentRouter
         self._admission = (

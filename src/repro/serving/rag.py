@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.index import HybridIndex
-from repro.core.search import SearchParams, SearchResult, search
+from repro.core.search import SearchParams, SearchResult, resolve_params, search
 from repro.core.usms import FusedVectors, PathWeights
 from repro.serving.engine import ServingEngine
 from repro.serving.hybrid_service import HybridSearchService
@@ -73,7 +73,10 @@ class RagPipeline:
             # retrieval runs with the service's SearchParams; refuse a config
             # that silently diverges from it (k may differ: the service caps
             # per-request k, cfg.top_k just has to fit under it)
-            if dataclasses.replace(cfg.search, k=service.params.k) != service.params:
+            # compare backend-resolved params: the service pins use_kernel
+            # (auto -> concrete) at construction for its executable-cache key
+            resolved = resolve_params(dataclasses.replace(cfg.search, k=service.params.k))
+            if resolved != service.params:
                 raise ValueError(
                     "RagConfig.search and the attached service's SearchParams "
                     f"disagree: {cfg.search} vs {service.params}"

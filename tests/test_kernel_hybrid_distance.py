@@ -45,7 +45,7 @@ def test_kernel_matches_oracle(b, c, dd, ps, pf, dtype):
             SparseVec(f.lexical.idx, f.lexical.val.astype(jnp.bfloat16)),
         )
         q, cands = cast(q), cast(cands)
-    got = ops.hybrid_scores(q, cands, c_tile=64, interpret=True)
+    got = ops.hybrid_scores(q, cands, c_tile=64, use_kernel=True, interpret=True)
     want = ref.hybrid_scores_ref(q, cands)
     assert got.shape == (b, c)
     assert got.dtype == jnp.float32
@@ -59,7 +59,7 @@ def test_kernel_various_tiles():
     cands = random_fused(rng, (2, 96), d_dense=32, ps=8, pf=4)
     want = ref.hybrid_scores_ref(q, cands)
     for c_tile in (8, 32, 128, 256):
-        got = ops.hybrid_scores(q, cands, c_tile=c_tile, interpret=True)
+        got = ops.hybrid_scores(q, cands, c_tile=c_tile, use_kernel=True, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
@@ -68,7 +68,9 @@ def test_scores_vs_ids_masks_padding():
     corpus = random_fused(rng, (50,), d_dense=16, ps=4, pf=4)
     q = random_fused(rng, (2,), d_dense=16, ps=4, pf=4)
     ids = np.array([[0, 3, PAD_IDX, 7], [49, PAD_IDX, PAD_IDX, 1]], np.int32)
-    scores = ops.hybrid_scores_vs_ids(q, corpus, jnp.asarray(ids))
+    scores = ops.hybrid_scores_vs_ids(
+        q, corpus, jnp.asarray(ids), use_kernel=True
+    )
     assert np.isneginf(np.asarray(scores)[0, 2])
     assert np.isneginf(np.asarray(scores)[1, 1])
     # valid entries match a direct gather+score
@@ -104,7 +106,7 @@ def fused_pair(draw):
 @given(fused_pair())
 def test_property_kernel_equals_oracle(pair):
     q, cands = pair
-    got = ops.hybrid_scores(q, cands, c_tile=8, interpret=True)
+    got = ops.hybrid_scores(q, cands, c_tile=8, use_kernel=True, interpret=True)
     want = ref.hybrid_scores_ref(q, cands)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
 
@@ -123,7 +125,7 @@ def test_property_theorem1_weighted_mips(pair, weights):
     wd, ws, wf = weights
     w = PathWeights.make(wd, ws, wf)
     qw = usms.weighted_query(q, w)
-    got = ops.hybrid_scores(qw, cands, c_tile=8, interpret=True)
+    got = ops.hybrid_scores(qw, cands, c_tile=8, use_kernel=True, interpret=True)
 
     # oracle: materialize concatenated dense vectors and take inner products
     vs, vf_ = 97, 31
@@ -162,12 +164,12 @@ def test_zero_weights_isolate_paths():
     q = random_fused(rng, (2,), d_dense=16, ps=4, pf=4)
     cands = random_fused(rng, (2, 5), d_dense=16, ps=4, pf=4)
     dense_only = ops.hybrid_scores(
-        usms.weighted_query(q, PathWeights.make(1.0, 0.0, 0.0)), cands, c_tile=8, interpret=True
+        usms.weighted_query(q, PathWeights.make(1.0, 0.0, 0.0)), cands, c_tile=8, use_kernel=True, interpret=True
     )
     want = jnp.einsum("bd,bcd->bc", q.dense, cands.dense)
     np.testing.assert_allclose(np.asarray(dense_only), np.asarray(want), rtol=1e-5, atol=1e-5)
     sparse_only = ops.hybrid_scores(
-        usms.weighted_query(q, PathWeights.make(0.0, 1.0, 0.0)), cands, c_tile=8, interpret=True
+        usms.weighted_query(q, PathWeights.make(0.0, 1.0, 0.0)), cands, c_tile=8, use_kernel=True, interpret=True
     )
     want_s = ref.sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
     np.testing.assert_allclose(np.asarray(sparse_only), np.asarray(want_s), rtol=1e-5, atol=1e-5)
