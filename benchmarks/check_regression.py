@@ -109,6 +109,12 @@ KERNEL_REGEN_HINT = (
     "results/BENCH_kernel_baseline.json"
 )
 
+FUSION_REGEN_HINT = (
+    "regenerate with: PYTHONPATH=src python benchmarks/fig12_weights.py "
+    "--dry-run && cp results/BENCH_fusion.json "
+    "results/BENCH_fusion_baseline.json"
+)
+
 
 def _config_mismatch(cfg_base: dict, cfg_b: dict) -> dict:
     return {
@@ -327,6 +333,57 @@ def check_kernel(
     return failures
 
 
+def check_fusion(bench: dict, baseline: dict, recall_tol: float) -> list[str]:
+    """Fusion-sweep recall gate (benchmarks/fig12_weights.py); returns
+    failure messages. Recall on the bundled corpus is deterministic up to
+    tie order, so the tolerance is a small absolute slack, and the sweep's
+    trace count is gated EXACTLY: more than one trace means fusion params
+    leaked into the trace signature (the zero-recompile contract,
+    DESIGN.md §11)."""
+    failures: list[str] = []
+    # dry_run only flags the artifact (same corpus, same accuracy): the one
+    # config field allowed to differ between CI dry-runs and local full runs
+    strip = lambda cfg: {k: v for k, v in cfg.items() if k != "dry_run"}
+    mismatched = _config_mismatch(
+        strip(baseline.get("config", {})), strip(bench.get("config", {}))
+    )
+    if mismatched:
+        return [
+            f"fusion bench config does not match the baseline ({mismatched}); "
+            f"the comparison would be meaningless — {FUSION_REGEN_HINT}"
+        ]
+    rec_b = bench.get("recall_at_10", {})
+    rec_base = baseline.get("recall_at_10", {})
+    if not rec_b or not rec_base:
+        return ["recall_at_10 missing from bench or baseline — "
+                + FUSION_REGEN_HINT]
+    for cell, base_val in rec_base.items():
+        val = rec_b.get(cell)
+        if val is None:
+            failures.append(f"fusion cell {cell} missing from bench")
+            continue
+        floor = base_val - recall_tol
+        if val < floor:
+            failures.append(
+                f"{cell}: recall@10 dropped {base_val:.3f} -> {val:.3f} "
+                f"(below floor {floor:.3f})"
+            )
+    dense = rec_b.get("weighted_sum.dense_only")
+    if dense is not None and bench.get("hybrid_best", 0.0) < dense:
+        failures.append(
+            f"best hybrid fusion recall {bench.get('hybrid_best'):.3f} fell "
+            f"below dense-only {dense:.3f} — fusion must not hurt accuracy"
+        )
+    traces = bench.get("sweep_traces")
+    if traces != 1:
+        failures.append(
+            f"fusion sweep traced {traces} time(s), expected exactly 1: "
+            "switching mode/weights/stats retraced search_padded "
+            "(zero-recompile contract, DESIGN.md §11)"
+        )
+    return failures
+
+
 def _load_pair(
     bench_path: str, base_path: str, hint: str
 ) -> tuple[dict, dict] | list[str]:
@@ -426,6 +483,25 @@ def run_gate(kind: str, cfg: dict) -> list[str]:
             bench, baseline,
             cfg.get("ratio_tol", 0.5), cfg.get("latency_tol", 3.0),
         )
+    if kind == "fusion":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_fusion.json"),
+            cfg.get("baseline", "results/BENCH_fusion_baseline.json"),
+            FUSION_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            rec = data.get("recall_at_10", {})
+            print(
+                f"[fusion] {name}: cells={len(rec)} "
+                f"hybrid_best={data.get('hybrid_best', float('nan')):.3f} "
+                f"dense_only="
+                f"{rec.get('weighted_sum.dense_only', float('nan')):.3f} "
+                f"traces={data.get('sweep_traces')}"
+            )
+        return check_fusion(bench, baseline, cfg.get("recall_tol", 0.05))
     return [f"unknown gate '{kind}' in gate config"]
 
 

@@ -1,12 +1,13 @@
 """Serving-path benchmark: sustained QPS and p50/p99 request latency of the
-micro-batched ``HybridSearchService`` across bucket sizes and path-weight
+micro-batched ``HybridSearchService`` across bucket sizes and fusion
 mixes — the online counterpart of fig8's offline batched-search numbers.
 
 Per configuration, a closed-loop client replays a request stream (every
-request a random one of several ``PathWeights`` combinations, so every batch
-is weight-heterogeneous and still hits ONE cached executable) and measures
-per-request submit->result latency and wall-clock QPS after a warmup flush
-that absorbs compilation.
+request a random one of several ``FusionSpec`` combinations — different
+weights AND different fusion modes, so every batch is fusion-heterogeneous
+and still hits ONE cached executable) and measures per-request
+submit->result latency and wall-clock QPS after a warmup flush that absorbs
+compilation.
 
 ``--streaming`` adds the grow-segment router bench: insert QPS and search
 latency (p50/p99) measured WHILE a writer thread streams insert batches
@@ -35,18 +36,19 @@ import numpy as np
 
 import jax
 
-from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core import BuildConfig, FusionSpec, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams
-from repro.core.usms import PathWeights
 from repro.data.corpus import CorpusConfig, make_corpus
 from repro.serving.batcher import BatcherConfig, SearchRequest
 from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
 
-WEIGHT_MIXES = [
-    ("dense", PathWeights.make(1.0, 0.0, 0.0)),
-    ("sparse+full", PathWeights.make(0.0, 1.0, 1.0)),
-    ("three-path", PathWeights.make(1.0, 1.0, 1.0)),
-    ("skewed", PathWeights.make(0.6, 0.3, 0.1)),
+FUSION_MIXES = [
+    ("dense", FusionSpec.weighted(1.0, 0.0, 0.0)),
+    ("sparse+full", FusionSpec.weighted(0.0, 1.0, 1.0)),
+    ("three-path", FusionSpec.three_path()),
+    ("skewed", FusionSpec.weighted(0.6, 0.3, 0.1)),
+    ("rrf", FusionSpec.rrf()),
+    ("zscore", FusionSpec.zscore()),
 ]
 
 
@@ -61,7 +63,7 @@ def _drive(service, queries, n_requests, rng, k):
     for i in range(n_requests):
         req = SearchRequest(
             query=queries[int(rng.integers(b))],
-            weights=WEIGHT_MIXES[int(rng.integers(len(WEIGHT_MIXES)))][1],
+            fusion=FUSION_MIXES[int(rng.integers(len(FUSION_MIXES)))][1],
             k=k,
         )
         t_submit[i] = time.perf_counter()
@@ -150,12 +152,12 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
                 f"qps={qps:.0f};p50_ms={np.percentile(lat_ms, 50):.1f};"
                 f"p99_ms={np.percentile(lat_ms, 99):.1f};"
                 f"executables={len(service.executable_cache)};"
-                f"weight_mixes={len(WEIGHT_MIXES)}",
+                f"fusion_mixes={len(FUSION_MIXES)}",
             )
         )
     _update_bench_json("steady", steady)
 
-    # per-mix latency at the larger bucket: one homogeneous stream per path
+    # per-mix latency at the larger bucket: one homogeneous stream per fusion
     # combination, all through the SAME service (and executable)
     service = HybridSearchService(
         index,
@@ -163,13 +165,13 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
         ServiceConfig(batcher=BatcherConfig(flush_size=32, max_batch=32)),
     )
     _drive(service, corpus.queries, 32, np.random.default_rng(0), params.k)
-    for name, w in WEIGHT_MIXES:
+    for name, spec in FUSION_MIXES:
         pend = []
         t0 = time.perf_counter()
         for i in range(32):
             pend.append(
                 service.submit(
-                    SearchRequest(query=corpus.queries[i % 64], weights=w, k=params.k)
+                    SearchRequest(query=corpus.queries[i % 64], fusion=spec, k=params.k)
                 )
             )
         service.flush()

@@ -12,14 +12,14 @@ import numpy as np
 
 import jax
 
-from repro.core import BuildConfig, KnnConfig, PruneConfig
+from repro.core import BuildConfig, FusionSpec, KnnConfig, PruneConfig
 from repro.core.distributed import (
     build_segmented_index,
     make_distributed_search,
     place_segmented_index,
 )
 from repro.core.search import SearchParams
-from repro.core.usms import PathWeights, weighted_query
+from repro.core.usms import weighted_query
 from repro.data.corpus import CorpusConfig, make_corpus, recall_at_k
 from repro.kernels import ops
 
@@ -40,12 +40,12 @@ def main():
     print(f"{n_segments} segments x {seg.global_ids.shape[1]} docs, "
           f"queries sharded over the model axis")
 
-    w = PathWeights.three_path()
+    spec = FusionSpec.three_path()
     params = SearchParams(k=10, iters=32, pool_size=64)
-    run = make_distributed_search(mesh, w, params)
+    run = make_distributed_search(mesh, spec, params)
     res = run(seg, corpus.queries)
 
-    qw = weighted_query(corpus.queries, w)
+    qw = weighted_query(corpus.queries, spec.weights)
     truth = jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1]
     rec = recall_at_k(np.asarray(res.ids), np.asarray(truth))
     print(f"global recall@10 vs brute force: {rec:.3f}")

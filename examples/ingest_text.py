@@ -16,9 +16,9 @@ import tempfile
 import numpy as np
 
 from repro.checkpoint import load_index, load_ingest, save_index
-from repro.core import BuildConfig, KnnConfig, PruneConfig
+from repro.core import BuildConfig, FusionSpec, KnnConfig, PruneConfig
 from repro.core.search import SearchParams, search
-from repro.core.usms import PathWeights
+from repro.ingest import adaptive_fusion_for
 from repro.data.textcorpus import load_bundled_corpus
 from repro.ingest import IngestConfig, IngestPipeline
 
@@ -54,17 +54,19 @@ def main():
     ]
     enc = pipe.encode_queries(questions)
     params = SearchParams(k=5, iters=48, pool_size=64)
-    for w_name, w in [("dense-only", PathWeights.make(1, 0, 0)),
-                      ("hybrid    ", PathWeights.three_path())]:
-        res = search(index, enc.vectors, w, params)
-        print(f"\n{w_name} top-3:")
+    for f_name, spec in [("dense-only", FusionSpec.weighted(1, 0, 0)),
+                         ("hybrid    ", FusionSpec.three_path()),
+                         ("rrf       ", FusionSpec.rrf()),
+                         ("adaptive  ", adaptive_fusion_for(enc))]:
+        res = search(index, enc.vectors, spec, params)
+        print(f"\n{f_name} top-3:")
         for q, row in zip(questions, np.asarray(res.ids)):
             tops = ", ".join(titles[d] for d in row[:3] if d >= 0)
             print(f"  {q[:48]:50s} -> {tops}")
 
     # 4. required keywords: quote a phrase and every hit must contain it
     enc = pipe.encode_queries(['the voyage home "scurvy"'])
-    res = search(index, enc.vectors, PathWeights.three_path(),
+    res = search(index, enc.vectors, FusionSpec.three_path(),
                  SearchParams(k=5, iters=48, pool_size=64, use_keywords=True),
                  keywords=enc.keywords)
     hits = [titles[d] for d in np.asarray(res.ids)[0] if d >= 0]
@@ -75,7 +77,7 @@ def main():
         save_index(tmp, index, ingest=pipe)
         index2, pipe2 = load_index(tmp), load_ingest(tmp)
         enc2 = pipe2.encode_queries([questions[0]])
-        res2 = search(index2, enc2.vectors, PathWeights.three_path(), params)
+        res2 = search(index2, enc2.vectors, FusionSpec.three_path(), params)
         print(f"\nrestored from disk: top hit for {questions[0]!r} -> "
               f"{titles[int(np.asarray(res2.ids)[0, 0])]!r}")
 

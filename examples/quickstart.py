@@ -9,9 +9,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core import BuildConfig, FusionSpec, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams, search
-from repro.core.usms import PathWeights, weighted_query
+from repro.core.usms import weighted_query
 from repro.data.corpus import CorpusConfig, make_corpus, ndcg_at_k, recall_at_k
 from repro.kernels import ops
 
@@ -46,25 +46,38 @@ def main():
     params = SearchParams(k=10, iters=48, pool_size=64)
     print("\npath combination -> vector recall@10 / end-to-end nDCG@10 "
           "(same index, weights changed at query time):")
-    for name, w in [
-        ("dense only      ", PathWeights.make(1, 0, 0)),
-        ("sparse only     ", PathWeights.make(0, 1, 0)),
-        ("full-text only  ", PathWeights.make(0, 0, 1)),
-        ("dense+sparse    ", PathWeights.make(1, 1, 0)),
-        ("three-path      ", PathWeights.three_path()),
-        ("custom 0.7/0.3  ", PathWeights.make(0.7, 0.3, 0.1)),
+    for name, spec in [
+        ("dense only      ", FusionSpec.weighted(1, 0, 0)),
+        ("sparse only     ", FusionSpec.weighted(0, 1, 0)),
+        ("full-text only  ", FusionSpec.weighted(0, 0, 1)),
+        ("dense+sparse    ", FusionSpec.weighted(1, 1, 0)),
+        ("three-path      ", FusionSpec.three_path()),
+        ("custom 0.7/0.3  ", FusionSpec.weighted(0.7, 0.3, 0.1)),
     ]:
-        res = search(index, corpus.queries, w, params)
-        qw = weighted_query(corpus.queries, w)
+        res = search(index, corpus.queries, spec, params)
+        qw = weighted_query(corpus.queries, spec.weights)
         truth = jax.lax.top_k(ops.pairwise_scores_chunked(qw, corpus.docs), 10)[1]
         rec = recall_at_k(np.asarray(res.ids), np.asarray(truth))
         nd = ndcg_at_k(np.asarray(res.ids), corpus.query_relevant, 10)
         print(f"  {name} recall={rec:.3f}  ndcg={nd:.3f}")
 
+    # fusion modes beyond weighted-sum (DESIGN.md §11): same index, same
+    # compiled executable — the mode is traced query data
+    print("\nfusion mode -> end-to-end nDCG@10 (same executable, no recompile):")
+    for name, spec in [
+        ("weighted_sum", FusionSpec.three_path()),
+        ("minmax      ", FusionSpec.minmax()),
+        ("zscore      ", FusionSpec.zscore()),
+        ("rrf         ", FusionSpec.rrf()),
+    ]:
+        res = search(index, corpus.queries, spec, params)
+        nd = ndcg_at_k(np.asarray(res.ids), corpus.query_relevant, 10)
+        print(f"  {name} ndcg={nd:.3f}")
+
     # keyword-constrained search (§4.2.2)
     kw = jnp.asarray(corpus.query_keywords)
     res = search(
-        index, corpus.queries, PathWeights.three_path(),
+        index, corpus.queries, FusionSpec.three_path(),
         SearchParams(k=10, iters=48, pool_size=64, use_keywords=True),
         keywords=kw,
     )
@@ -72,9 +85,9 @@ def main():
           f"(checked: {int((np.asarray(res.ids) >= 0).sum())} results)")
 
     # knowledge-graph multi-hop (§4.2.3)
-    base = search(index, corpus.queries, PathWeights.three_path(), params)
+    base = search(index, corpus.queries, FusionSpec.three_path(), params)
     kg = search(
-        index, corpus.queries, PathWeights.make(1, 1, 1, kg=30.0),
+        index, corpus.queries, FusionSpec.weighted(1, 1, 1, kg=30.0),
         SearchParams(k=10, iters=48, pool_size=64, use_kg=True),
         entities=jnp.asarray(corpus.query_entities),
     )

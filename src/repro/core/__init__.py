@@ -1,6 +1,18 @@
 """Allan-Poe core: the paper's all-in-one hybrid graph index in JAX."""
 
 from repro.core.build_pipeline import build_graph, build_index, insert, nn_descent
+from repro.core.fusion import (
+    FUSION_MODES,
+    MINMAX,
+    RRF,
+    WEIGHTED_SUM,
+    ZSCORE,
+    FusionSpec,
+    PathStats,
+    adaptive_fusion,
+    as_fusion_spec,
+    stack_specs,
+)
 from repro.core.index import BuildConfig, HybridIndex, mark_deleted
 from repro.core.knn_graph import KnnConfig, build_knn_graph
 from repro.core.pruning import PruneConfig, rng_ip_prune
@@ -17,6 +29,16 @@ from repro.core.usms import (
 __all__ = [
     "BuildConfig",
     "HybridIndex",
+    "FUSION_MODES",
+    "WEIGHTED_SUM",
+    "MINMAX",
+    "ZSCORE",
+    "RRF",
+    "FusionSpec",
+    "PathStats",
+    "adaptive_fusion",
+    "as_fusion_spec",
+    "stack_specs",
     "build_graph",
     "build_index",
     "nn_descent",

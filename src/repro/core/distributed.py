@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.build_pipeline import GraphArrays, _build_graph_program, build_index
+from repro.core.fusion import (
+    FusionSpec,
+    PathStats,
+    broadcast_spec,
+    merge_rows_fused,
+)
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.logical_edges import LogicalEdges, build_logical_edges
 from repro.core.search import SearchParams, SearchResult, search_padded
@@ -429,24 +435,29 @@ def _segment_to_global(
     idx: HybridIndex,
     gids: jax.Array,
     queries: FusedVectors,
-    weights: PathWeights,
+    fusion: FusionSpec,
     keywords: jax.Array,
     entities: jax.Array,
     params: SearchParams,
 ):
     """One segment's search with local row ids mapped to GLOBAL doc ids
     (-inf scores on pad slots) — the unit every segment/pool merge
-    composes."""
-    res = search_padded(idx, queries, weights, keywords, entities, params)
+    composes. Per-path scores ride along so fusion-aware merges can
+    recompute RRF ranks over the union (the merge contract, §11)."""
+    res = search_padded(idx, queries, fusion, keywords, entities, params)
     g = jnp.where(
         res.ids >= 0, gids[jnp.clip(res.ids, 0, gids.shape[0] - 1)], PAD_IDX
     )
-    return g, jnp.where(g >= 0, res.scores, -jnp.inf), res.expanded
+    scores = jnp.where(g >= 0, res.scores, -jnp.inf)
+    ps = jnp.where((g >= 0)[:, :, None], res.path_scores, 0.0)
+    return g, scores, ps, res.expanded
 
 
 def _merge_rows_topk(g_all: jax.Array, s_all: jax.Array, k: int):
     """Per-row top-k over stacked (S, B, k) global-id results; returns
-    (top scores, ids) with PAD ids on non-finite slots."""
+    (top scores, ids) with PAD ids on non-finite slots. Raw-score merge:
+    correct for weighted/normalized fusion only — RRF results go through
+    ``fusion.merge_rows_fused`` instead."""
     b = g_all.shape[1]
     g_flat = jnp.moveaxis(g_all, 0, 1).reshape(b, -1)
     s_flat = jnp.moveaxis(s_all, 0, 1).reshape(b, -1)
@@ -463,16 +474,18 @@ def make_distributed_search_padded(
 ):
     """Build the jitted shard_map search for a given mesh, shape-stable form.
 
-    Returns fn(seg_index, queries, weights, keywords, entities) ->
-    SearchResult with globally-merged ids. Weights/keywords/entities travel
-    as traced data per call (weight leaves must be (B,) arrays so they shard
-    with the query batch), so one executable serves every path combination —
-    this is the entry point the serving layer fronts sharded indexes with.
-    Queries are sharded over the "model" axis (if present); the segmented
-    index is sharded over ("pod", "data"). S may be any MULTIPLE of the
-    segment-axes device count: a device owning several segments searches
-    them in one vmapped pass and pre-merges their top-k locally before the
-    cross-device merge (the segment-pool contract).
+    Returns fn(seg_index, queries, fusion, keywords, entities) ->
+    SearchResult with globally-merged ids. Fusion/keywords/entities travel
+    as traced data per call (fusion leaves must be (B,)/(B, 3) arrays so
+    they shard with the query batch), so one executable serves every path
+    combination AND every fusion mode — this is the entry point the serving
+    layer fronts sharded indexes with. Queries are sharded over the "model"
+    axis (if present); the segmented index is sharded over ("pod", "data").
+    S may be any MULTIPLE of the segment-axes device count: a device owning
+    several segments searches them in one vmapped pass; all S segments'
+    top-k then merge in ONE fusion-aware pass after the segment-axes gather
+    (RRF rows re-rank over the union — merging local RRF scores by value
+    across segments would be meaningless, §11).
     """
     seg_axes = _present_axes(mesh, SEGMENT_AXES)
     q_axes = _present_axes(mesh, (QUERY_AXIS,))
@@ -483,54 +496,52 @@ def make_distributed_search_padded(
     def local_search(
         seg_index: SegmentedIndex,
         queries: FusedVectors,
-        weights: PathWeights,
+        fusion: FusionSpec,
         keywords: jax.Array,
         entities: jax.Array,
     ):
         # shard_map gives each device a (segments_per_device, ...) block
         spd = seg_index.global_ids.shape[0]
         if spd == 1:
-            g, scores, exp = _segment_to_global(
+            g, scores, ps, exp = _segment_to_global(
                 jax.tree.map(lambda a: a[0], seg_index.index),
                 seg_index.global_ids[0],
-                queries, weights, keywords, entities, params,
+                queries, fusion, keywords, entities, params,
             )
-            expanded_local = exp.sum()
+            g, scores, ps = g[None], scores[None], ps[None]
         else:
-            # several same-device segments: one vmapped batched pass, then a
-            # local per-row top-k merge in global-id space
-            g_all, s_all, exp = jax.vmap(
+            # several same-device segments: one vmapped batched pass
+            g, scores, ps, exp = jax.vmap(
                 lambda idx, gids: _segment_to_global(
-                    idx, gids, queries, weights, keywords, entities, params
+                    idx, gids, queries, fusion, keywords, entities, params
                 )
             )(seg_index.index, seg_index.global_ids)  # (spd, B, k)
-            top, g = _merge_rows_topk(g_all, s_all, params.k)
-            scores = jnp.where(jnp.isfinite(top), top, -jnp.inf)
-            expanded_local = exp.sum()
+        expanded_local = exp.sum()
+
+        # gather the OTHER devices' segment results FIRST, while rows are
+        # still aligned with this device's local query shard (the fusion
+        # spec rows are local), and fuse-merge all S segments in one pass
+        if seg_axes:
+            g = jax.lax.all_gather(g, seg_axes, axis=0, tiled=True)
+            scores = jax.lax.all_gather(scores, seg_axes, axis=0, tiled=True)
+            ps = jax.lax.all_gather(ps, seg_axes, axis=0, tiled=True)
+        ids, top, ps_m = merge_rows_fused(g, scores, ps, fusion, params.k)
 
         # reassemble the query batch across the model axis
         if q_axes:
-            g = jax.lax.all_gather(g, q_axes[0], axis=0, tiled=True)
-            scores = jax.lax.all_gather(scores, q_axes[0], axis=0, tiled=True)
-
-        # merge segment top-k across (pod, data)
-        if seg_axes:
-            g_all = jax.lax.all_gather(g, seg_axes, axis=0)  # (S, B, k)
-            s_all = jax.lax.all_gather(scores, seg_axes, axis=0)
-            b = g.shape[0]
-            g_all = jnp.moveaxis(g_all, 0, 1).reshape(b, -1)
-            s_all = jnp.moveaxis(s_all, 0, 1).reshape(b, -1)
-        else:
-            g_all, s_all = g, scores
-        top, pos = jax.lax.top_k(s_all, params.k)
-        ids = jnp.where(
-            jnp.isfinite(top), jnp.take_along_axis(g_all, pos, axis=-1), PAD_IDX
-        )
+            ids = jax.lax.all_gather(ids, q_axes[0], axis=0, tiled=True)
+            top = jax.lax.all_gather(top, q_axes[0], axis=0, tiled=True)
+            ps_m = jax.lax.all_gather(ps_m, q_axes[0], axis=0, tiled=True)
         expanded = expanded_local
         all_axes = tuple(seg_axes) + tuple(q_axes)
         if all_axes:
             expanded = jax.lax.psum(expanded, all_axes)
-        return ids, jnp.where(jnp.isfinite(top), top, NEG_FILL), expanded
+        return (
+            ids,
+            jnp.where(jnp.isfinite(top), top, NEG_FILL),
+            ps_m,
+            expanded,
+        )
 
     shard_fn = _shard_map(
         local_search,
@@ -541,25 +552,30 @@ def make_distributed_search_padded(
                 global_ids=seg_spec,
             ),
             jax.tree.map(lambda _: q_spec, _queries_struct()),
-            jax.tree.map(lambda _: q_spec, _weights_struct()),
+            jax.tree.map(lambda _: q_spec, _fusion_struct()),
             q_spec,
             q_spec,
         ),
-        out_specs=(P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
     )
 
     @jax.jit
     def run(
         seg_index: SegmentedIndex,
         queries: FusedVectors,
-        weights: PathWeights,
+        fusion: Union[FusionSpec, PathWeights],
         keywords: jax.Array,
         entities: jax.Array,
     ) -> SearchResult:
-        ids, scores, expanded = shard_fn(
-            seg_index, queries, weights, keywords, entities
+        if isinstance(fusion, PathWeights):
+            fusion = FusionSpec.from_weights(fusion)
+        spec = broadcast_spec(fusion, queries.dense.shape[0])
+        ids, scores, ps, expanded = shard_fn(
+            seg_index, queries, spec, keywords, entities
         )
-        return SearchResult(ids, scores, jnp.broadcast_to(expanded, (ids.shape[0],)))
+        return SearchResult(
+            ids, scores, jnp.broadcast_to(expanded, (ids.shape[0],)), ps
+        )
 
     return run
 
@@ -584,21 +600,24 @@ def make_local_group_search(params: SearchParams):
     def run(
         seg_index: SegmentedIndex,
         queries: FusedVectors,
-        weights: PathWeights,
+        fusion: Union[FusionSpec, PathWeights],
         keywords: jax.Array,
         entities: jax.Array,
     ) -> SearchResult:
-        g_all, s_all, exp = jax.vmap(
+        if isinstance(fusion, PathWeights):
+            fusion = FusionSpec.from_weights(fusion)
+        spec = broadcast_spec(fusion, queries.dense.shape[0])
+        g_all, s_all, ps_all, exp = jax.vmap(
             lambda idx, gids: _segment_to_global(
-                idx, gids, queries, weights, keywords, entities, params
+                idx, gids, queries, spec, keywords, entities, params
             )
         )(seg_index.index, seg_index.global_ids)  # (S, B, k)
-        top, ids = _merge_rows_topk(g_all, s_all, params.k)
+        ids, top, ps = merge_rows_fused(g_all, s_all, ps_all, spec, params.k)
         scores = jnp.where(jnp.isfinite(top), top, NEG_FILL)
         # whole-batch total broadcast per row — the same convention as the
         # sharded executable, so pool reads can sum the two coherently
         expanded = jnp.broadcast_to(exp.sum(), (ids.shape[0],))
-        return SearchResult(ids, scores, expanded)
+        return SearchResult(ids, scores, expanded, ps)
 
     _local_group_search_cache[params] = run
     return run
@@ -606,10 +625,11 @@ def make_local_group_search(params: SearchParams):
 
 def make_distributed_search(
     mesh: Mesh,
-    weights: PathWeights,
+    fusion: Union[FusionSpec, PathWeights],
     params: SearchParams,
 ):
-    """Fixed-weights convenience wrapper over the shape-stable form.
+    """Fixed-fusion convenience wrapper over the shape-stable form (accepts
+    a ``FusionSpec`` or bare ``PathWeights`` = weighted-sum).
 
     Returns fn(seg_index, queries) -> SearchResult with globally-merged ids.
     """
@@ -617,11 +637,8 @@ def make_distributed_search(
 
     def fn(seg_index: SegmentedIndex, queries: FusedVectors) -> SearchResult:
         b = queries.dense.shape[0]
-        w = jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,)), weights
-        )
         pad = jnp.full((b, 1), PAD_IDX, jnp.int32)
-        return run(seg_index, queries, w, pad, pad)
+        return run(seg_index, queries, fusion, pad, pad)
 
     return fn
 
@@ -653,6 +670,19 @@ def _queries_struct():
 def _weights_struct():
     z = 0
     return PathWeights(dense=z, sparse=z, full=z, kg=z)
+
+
+def _fusion_struct():
+    """A FusionSpec-shaped pytree of placeholders (stats RESOLVED: the
+    sharded entry point broadcasts specs before crossing into shard_map, so
+    the in-spec tree always carries concrete stats leaves)."""
+    z = 0
+    return FusionSpec(
+        mode=z,
+        weights=_weights_struct(),
+        rrf_k=z,
+        stats=PathStats(minv=z, maxv=z, mean=z, std=z),
+    )
 
 
 def place_segmented_index(

@@ -1,0 +1,595 @@
+"""Dynamic fusion framework — the query-side half of the paper's "any
+combination of retrieval paths and weights without index reconstruction"
+claim, extended beyond weighted-sum (DESIGN.md §11).
+
+A ``FusionSpec`` is the single query-side fusion object: it carries the
+fusion *mode*, the per-path weights, the RRF constant, and the per-path
+normalization stats — all as traced data. Four modes share one compiled
+executable per shape bucket:
+
+  * ``weighted_sum`` (mode 0) — today's behavior, bit-compatible: the fused
+    score IS the traversal score (Theorem 1's single inner product).
+  * ``minmax`` (mode 1) — per-path scores affinely rescaled by the corpus
+    min/max stats, then weighted-summed.
+  * ``zscore`` (mode 2) — per-path scores standardized by the corpus
+    mean/std stats, then weighted-summed.
+  * ``rrf`` (mode 3) — Reciprocal Rank Fusion over the per-path ranks of
+    the final candidate pool: fused(i) = sum_p w_p / (k_rrf + 1 + rank_p(i)).
+
+Shape stability: the mode is an int32 *array* selected with ``jnp.select``
+(the per-query-batched form of ``lax.switch`` — under ``vmap`` a switch on a
+traced (B,) operand lowers to a select anyway), so switching mode, weights,
+or rrf_k NEVER retraces or recompiles ``search_padded``. Traversal always
+navigates with the weighted-sum score (the USMS inner product); modes 1-3
+re-score the final candidate pool from per-path raw scores.
+
+Merge contract (cross-segment / cross-replica): raw weighted-sum scores are
+globally comparable, normalized scores are comparable ONLY under shared
+stats (a router must resolve ONE stats object for all members), and local
+RRF scores are NOT comparable at all — every merge level must recompute
+ranks over the union from the per-path raw scores that ride along as
+``SearchResult.path_scores``. ``merge_fused_host`` enforces this and raises
+if asked to merge RRF rows without per-path scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from functools import partial
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.usms import PAD_IDX, FusedVectors, PathWeights
+
+# fusion mode ids (traced int32 data, never part of a cache key)
+WEIGHTED_SUM = 0
+MINMAX = 1
+ZSCORE = 2
+RRF = 3
+
+FUSION_MODES = {
+    "weighted_sum": WEIGHTED_SUM,
+    "minmax": MINMAX,
+    "zscore": ZSCORE,
+    "rrf": RRF,
+}
+FUSION_MODE_NAMES = {v: k for k, v in FUSION_MODES.items()}
+
+DEFAULT_RRF_K = 60.0  # the classic RRF constant (Cormack et al.)
+N_SCORE_PATHS = 3  # dense / learned-sparse / lexical (kg is a traversal bias)
+_EPS = 1e-6
+_NEG_FILL = np.float32(-1e30)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["minv", "maxv", "mean", "std"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class PathStats:
+    """Per-path running normalization stats, (3,) or (B, 3) f32 leaves in
+    [dense, learned, lexical] order. ``minmax`` normalizes with
+    (minv, maxv - minv); ``zscore`` with (mean, std). The identity stats
+    make both transforms the identity map."""
+
+    minv: jax.Array
+    maxv: jax.Array
+    mean: jax.Array
+    std: jax.Array
+
+    @classmethod
+    def identity(cls) -> "PathStats":
+        z = jnp.zeros((N_SCORE_PATHS,), jnp.float32)
+        o = jnp.ones((N_SCORE_PATHS,), jnp.float32)
+        return cls(minv=z, maxv=o, mean=z, std=o)
+
+    @classmethod
+    def from_corpus_parts(cls, parts) -> "PathStats":
+        """Stats over one or more (corpus: FusedVectors, alive mask | None)
+        pairs — per-path L2 norms of the live rows proxy the per-path score
+        scale (scores are inner products against ~unit-scale queries).
+        Leaves may carry extra leading axes (stacked segments); they are
+        flattened. Host-side numpy: stats refresh is a publish-time event,
+        never traced."""
+        norms = [[] for _ in range(N_SCORE_PATHS)]
+        for corpus, alive in parts:
+            dense = np.asarray(corpus.dense)
+            dense = dense.reshape(-1, dense.shape[-1])
+            lv = np.asarray(corpus.learned.val)
+            lv = lv.reshape(-1, lv.shape[-1])
+            fv = np.asarray(corpus.lexical.val)
+            fv = fv.reshape(-1, fv.shape[-1])
+            mask = (
+                np.ones(dense.shape[0], bool)
+                if alive is None
+                else np.asarray(alive).reshape(-1)
+            )
+            if not mask.any():
+                continue
+            norms[0].append(np.linalg.norm(dense[mask], axis=-1))
+            norms[1].append(np.linalg.norm(lv[mask], axis=-1))
+            norms[2].append(np.linalg.norm(fv[mask], axis=-1))
+        if not norms[0]:
+            return cls.identity()
+        f = lambda fn: jnp.asarray(
+            [fn(np.concatenate(n)) for n in norms], jnp.float32
+        )
+        return cls(
+            minv=f(np.min), maxv=f(np.max), mean=f(np.mean), std=f(np.std)
+        )
+
+    @classmethod
+    def from_corpus(cls, corpus: FusedVectors, alive=None) -> "PathStats":
+        return cls.from_corpus_parts([(corpus, alive)])
+
+    @classmethod
+    def ema(cls, old: "PathStats", new: "PathStats", alpha: float) -> "PathStats":
+        """Running blend across snapshot publishes: alpha weights the FRESH
+        stats (alpha=1 forgets history). Extremes widen monotonically under
+        the blend's min/max so normalized scores never overflow [0, 1] for
+        rows both snapshots contained."""
+        mix = lambda o, n: (1.0 - alpha) * o + alpha * n
+        return cls(
+            minv=jnp.minimum(old.minv, new.minv),
+            maxv=jnp.maximum(old.maxv, new.maxv),
+            mean=mix(old.mean, new.mean),
+            std=mix(old.std, new.std),
+        )
+
+    @classmethod
+    def merge(
+        cls, parts: Sequence["PathStats"], counts: Sequence[int]
+    ) -> "PathStats":
+        """Combine per-shard stats into ONE tier-wide stats object (the
+        shared-stats half of the merge contract): count-weighted moment
+        pooling for mean/std, extreme-of-extremes for min/max."""
+        if not parts:
+            return cls.identity()
+        c = np.maximum(np.asarray(counts, np.float64), 1.0)
+        w = c / c.sum()
+        means = np.stack([np.asarray(p.mean, np.float64) for p in parts])
+        varis = np.stack([np.asarray(p.std, np.float64) ** 2 for p in parts])
+        mean = (w[:, None] * means).sum(0)
+        var = (w[:, None] * (varis + means**2)).sum(0) - mean**2
+        return cls(
+            minv=jnp.asarray(
+                np.min([np.asarray(p.minv) for p in parts], axis=0), jnp.float32
+            ),
+            maxv=jnp.asarray(
+                np.max([np.asarray(p.maxv) for p in parts], axis=0), jnp.float32
+            ),
+            mean=jnp.asarray(mean, jnp.float32),
+            std=jnp.asarray(np.sqrt(np.maximum(var, 0.0)), jnp.float32),
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["mode", "weights", "rrf_k", "stats"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class FusionSpec:
+    """The single query-side fusion object: every field is traced data, so
+    one compiled executable serves every (mode, weights, rrf_k, stats) mix.
+
+    ``stats=None`` means "resolve downstream": the serving layer injects its
+    running corpus stats (``HybridSearchService.path_stats``); the direct
+    ``core.search`` path falls back to the identity stats. A batched spec
+    has (B,) mode/weight/rrf_k leaves and (B, 3) stats leaves."""
+
+    mode: jax.Array  # int32, scalar or (B,)
+    weights: PathWeights
+    rrf_k: jax.Array  # f32, scalar or (B,)
+    stats: Optional[PathStats] = None
+
+    @classmethod
+    def make(
+        cls,
+        mode="weighted_sum",
+        dense=1.0,
+        sparse=0.0,
+        full=0.0,
+        kg=0.0,
+        *,
+        rrf_k: float = DEFAULT_RRF_K,
+        stats: Optional[PathStats] = None,
+    ) -> "FusionSpec":
+        mode_id = FUSION_MODES[mode] if isinstance(mode, str) else int(mode)
+        return cls(
+            mode=jnp.asarray(mode_id, jnp.int32),
+            weights=PathWeights.make(dense, sparse, full, kg),
+            rrf_k=jnp.asarray(rrf_k, jnp.float32),
+            stats=stats,
+        )
+
+    @classmethod
+    def weighted(cls, dense=1.0, sparse=0.0, full=0.0, kg=0.0) -> "FusionSpec":
+        return cls.make("weighted_sum", dense, sparse, full, kg)
+
+    @classmethod
+    def three_path(cls) -> "FusionSpec":
+        return cls.weighted(1.0, 1.0, 1.0, 0.0)
+
+    @classmethod
+    def rrf(
+        cls, dense=1.0, sparse=1.0, full=1.0, *, rrf_k: float = DEFAULT_RRF_K
+    ) -> "FusionSpec":
+        return cls.make("rrf", dense, sparse, full, rrf_k=rrf_k)
+
+    @classmethod
+    def minmax(
+        cls, dense=1.0, sparse=1.0, full=1.0, stats: Optional[PathStats] = None
+    ) -> "FusionSpec":
+        return cls.make("minmax", dense, sparse, full, stats=stats)
+
+    @classmethod
+    def zscore(
+        cls, dense=1.0, sparse=1.0, full=1.0, stats: Optional[PathStats] = None
+    ) -> "FusionSpec":
+        return cls.make("zscore", dense, sparse, full, stats=stats)
+
+    @classmethod
+    def zero(cls) -> "FusionSpec":
+        """All-zero weighted-sum spec for batch pad rows."""
+        return cls.weighted(0.0, 0.0, 0.0, 0.0)
+
+    @classmethod
+    def from_weights(cls, w: PathWeights) -> "FusionSpec":
+        """PathWeights -> weighted-sum spec (no deprecation warning: the
+        silent form for internal/traced call sites)."""
+        b = jnp.broadcast_shapes(
+            jnp.shape(w.dense), jnp.shape(w.sparse), jnp.shape(w.full)
+        )
+        return cls(
+            mode=jnp.broadcast_to(jnp.asarray(WEIGHTED_SUM, jnp.int32), b),
+            weights=w,
+            rrf_k=jnp.broadcast_to(jnp.asarray(DEFAULT_RRF_K, jnp.float32), b),
+            stats=None,
+        )
+
+    def score_weights(self) -> jax.Array:
+        """The 3 score-path weights stacked on a trailing axis: (3,)/(B, 3)."""
+        return jnp.stack(
+            [
+                jnp.asarray(self.weights.dense, jnp.float32),
+                jnp.asarray(self.weights.sparse, jnp.float32),
+                jnp.asarray(self.weights.full, jnp.float32),
+            ],
+            axis=-1,
+        )
+
+
+def as_fusion_spec(x, *, warn: bool = True) -> FusionSpec:
+    """Coerce the query-side fusion argument: ``FusionSpec`` passes through;
+    ``PathWeights`` converts to a weighted-sum spec — the deprecated shim
+    (the emitted ``DeprecationWarning`` is the migration nudge; the paper's
+    dynamic-fusion surface is ``FusionSpec``)."""
+    if isinstance(x, FusionSpec):
+        return x
+    if isinstance(x, PathWeights):
+        if warn:
+            warnings.warn(
+                "passing PathWeights as the query-side fusion argument is "
+                "deprecated: use FusionSpec (PathWeights converts to "
+                "FusionSpec(mode=weighted_sum); see README migration note)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        return FusionSpec.from_weights(x)
+    raise TypeError(
+        f"expected FusionSpec or (deprecated) PathWeights, got {type(x)!r}"
+    )
+
+
+def stack_specs(specs: Sequence[FusionSpec]) -> FusionSpec:
+    """Stack per-request specs into one batched spec ((B,) / (B, 3) leaves),
+    preserving leaf dtypes (mode stays int32 — ``usms.stack_weights`` casts
+    to f32, which would corrupt the mode). Specs with unresolved
+    (``None``) stats must be resolved first — mixing would change the
+    pytree structure mid-stack."""
+    resolved = [s.stats is not None for s in specs]
+    if any(resolved) and not all(resolved):
+        raise ValueError(
+            "cannot stack FusionSpecs with mixed stats resolution: resolve "
+            "stats=None against the index stats (or identity) first"
+        )
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *specs
+    )
+
+
+def broadcast_spec(spec: FusionSpec, b: int) -> FusionSpec:
+    """Broadcast a scalar-leaf (or already-batched) spec to the (B,)-leaf
+    form ``search_padded`` vmaps over; ``stats=None`` resolves to identity
+    here (the direct-search fallback)."""
+    stats = spec.stats if spec.stats is not None else PathStats.identity()
+    v = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,))
+    s = lambda x: jnp.broadcast_to(
+        jnp.asarray(x, jnp.float32), (b, N_SCORE_PATHS)
+    )
+    return FusionSpec(
+        mode=jnp.broadcast_to(jnp.asarray(spec.mode, jnp.int32), (b,)),
+        weights=PathWeights(
+            dense=v(spec.weights.dense),
+            sparse=v(spec.weights.sparse),
+            full=v(spec.weights.full),
+            kg=v(spec.weights.kg),
+        ),
+        rrf_k=v(spec.rrf_k),
+        stats=PathStats(
+            minv=s(stats.minv),
+            maxv=s(stats.maxv),
+            mean=s(stats.mean),
+            std=s(stats.std),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-trace fused scoring (consumed by core.search / core.distributed).
+# ---------------------------------------------------------------------------
+
+
+def ranks_desc(ps: jax.Array, valid: jax.Array) -> jax.Array:
+    """Per-path descending ranks (0 = best) over a candidate list.
+
+    ps: (M, 3) per-path scores; valid: (M,) mask. rank_p(i) counts the valid
+    j with a strictly higher score, ties broken by position (stable — the
+    order a stable sort would produce). Invalid rows get arbitrary ranks;
+    callers mask them. O(M^2) compare matrices: M is the final-pool size
+    (~80) or a merged top-k union, small by construction."""
+    pos = jnp.arange(ps.shape[0])
+    gt = ps[None, :, :] > ps[:, None, :]  # [i, j, p]: j strictly beats i
+    tie = (ps[None, :, :] == ps[:, None, :]) & (
+        pos[None, :, None] < pos[:, None, None]
+    )
+    beats = (gt | tie) & valid[None, :, None]
+    return beats.sum(axis=1).astype(jnp.float32)  # (M, 3)
+
+
+def fuse_candidates(
+    base: jax.Array,  # (M,) traversal weighted-sum scores, NEG on invalid
+    ps: jax.Array,  # (M, 3) per-path raw scores (sanitized: 0 on invalid)
+    valid: jax.Array,  # (M,) candidate mask
+    spec: FusionSpec,  # scalar-leaf row ((3,) stats)
+    neg: float,
+) -> jax.Array:
+    """Mode-selected fused score of the final candidate pool. Mode 0 returns
+    ``base`` elementwise (bit-compatible with the pre-fusion pipeline); all
+    four branches are computed and selected arithmetically, keeping the
+    program shape-stable for every traced mode value."""
+    w3 = spec.score_weights()  # (3,)
+    st = spec.stats
+    mm_scale = jnp.maximum(st.maxv - st.minv, _EPS)
+    z_scale = jnp.maximum(st.std, _EPS)
+    minmax = (((ps - st.minv) / mm_scale) * w3).sum(-1)
+    zscore = (((ps - st.mean) / z_scale) * w3).sum(-1)
+    ranks = ranks_desc(ps, valid)
+    rrf = (w3 / (spec.rrf_k + 1.0 + ranks)).sum(-1)
+    fused = jnp.select(
+        [spec.mode == WEIGHTED_SUM, spec.mode == MINMAX, spec.mode == ZSCORE],
+        [base, minmax, zscore],
+        rrf,
+    )
+    return jnp.where(valid, fused, neg)
+
+
+def merge_rows_fused(
+    g_all: jax.Array,  # (S, B, k) global ids, PAD on empty slots
+    s_all: jax.Array,  # (S, B, k) fused scores, -inf on empty slots
+    ps_all: jax.Array,  # (S, B, k, 3) per-path raw scores of the winners
+    spec: FusionSpec,  # batched (B,)-leaf spec
+    k: int,
+):
+    """In-trace fusion-aware merge of stacked per-segment results. Non-RRF
+    rows merge by score (raw weighted sums are globally comparable;
+    normalized sums are comparable under the shared stats the batched spec
+    carries). RRF rows RE-RANK: per-path ranks are recomputed over the
+    merged union from ``ps_all`` and the rank contributions re-summed —
+    merging local RRF scores by value would compare ranks from different
+    local pools (the bug the merge contract exists to prevent)."""
+    b = g_all.shape[1]
+    g = jnp.moveaxis(g_all, 0, 1).reshape(b, -1)
+    s = jnp.moveaxis(s_all, 0, 1).reshape(b, -1)
+    ps = jnp.moveaxis(ps_all, 0, 1).reshape(b, -1, N_SCORE_PATHS)
+
+    def one(g_r, s_r, ps_r, mode, w3, rrf_k):
+        valid = (g_r >= 0) & jnp.isfinite(s_r)
+        ps_r = jnp.where(valid[:, None], ps_r, 0.0)
+        ranks = ranks_desc(ps_r, valid)
+        rrf = (w3 / (rrf_k + 1.0 + ranks)).sum(-1)
+        eff = jnp.where(
+            mode == RRF, jnp.where(valid, rrf, -jnp.inf), s_r
+        )
+        top, pos = jax.lax.top_k(eff, k)
+        ok = jnp.isfinite(top)
+        return (
+            jnp.where(ok, g_r[pos], PAD_IDX),
+            jnp.where(ok, top, -jnp.inf),
+            jnp.where(ok[:, None], ps_r[pos], 0.0),
+        )
+
+    return jax.vmap(one)(
+        g, s, ps, spec.mode, spec.score_weights(), spec.rrf_k
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side fusion-aware merge (serving scatter-gather: pool groups, grow
+# segment, replica tier).
+# ---------------------------------------------------------------------------
+
+
+def merge_fused_host(
+    ids_parts: Sequence[np.ndarray],  # each (B, k_i) global ids
+    score_parts: Sequence[np.ndarray],  # each (B, k_i) fused scores
+    path_parts,  # each (B, k_i, 3) per-path raw scores, or None
+    spec: Optional[FusionSpec],
+    k: int,
+):
+    """Numpy counterpart of ``merge_rows_fused`` for host-side scatter-
+    gather merges. Enforces the merge contract: merging rows in RRF mode
+    without per-path scores raises (silently falling back to raw-score
+    comparison is exactly the corruption this replaces)."""
+    all_ids = np.concatenate([np.asarray(p) for p in ids_parts], axis=1)
+    all_scores = np.concatenate(
+        [
+            np.where(np.asarray(i) >= 0, np.asarray(s, np.float32), -np.inf)
+            for i, s in zip(ids_parts, score_parts)
+        ],
+        axis=1,
+    )
+    b, m = all_ids.shape
+    if spec is None:
+        mode = np.full((b,), WEIGHTED_SUM, np.int32)
+        w3 = np.ones((b, N_SCORE_PATHS), np.float32)
+        rrf_k = np.full((b,), DEFAULT_RRF_K, np.float32)
+    else:
+        mode = np.broadcast_to(
+            np.asarray(spec.mode, np.int32).reshape(-1), (b,)
+        )
+        w3 = np.broadcast_to(
+            np.asarray(spec.score_weights(), np.float32).reshape(
+                -1, N_SCORE_PATHS
+            ),
+            (b, N_SCORE_PATHS),
+        )
+        rrf_k = np.broadcast_to(
+            np.asarray(spec.rrf_k, np.float32).reshape(-1), (b,)
+        )
+    rrf_rows = mode == RRF
+    if rrf_rows.any():
+        if path_parts is None or any(p is None for p in path_parts):
+            raise ValueError(
+                "merge contract violation: RRF results cannot be merged by "
+                "raw score — per-path scores (SearchResult.path_scores) are "
+                "required to recompute ranks over the union (DESIGN.md §11)"
+            )
+    if path_parts is None or any(p is None for p in path_parts):
+        all_ps = np.zeros((b, m, N_SCORE_PATHS), np.float32)
+    else:
+        all_ps = np.concatenate(
+            [np.asarray(p, np.float32) for p in path_parts], axis=1
+        )
+    valid = (all_ids >= 0) & np.isfinite(all_scores)
+    all_ps = np.where(valid[:, :, None], all_ps, 0.0)
+    if rrf_rows.any():
+        pos = np.arange(m)
+        gt = all_ps[:, None, :, :] > all_ps[:, :, None, :]  # [b, i, j, p]
+        tie = (all_ps[:, None, :, :] == all_ps[:, :, None, :]) & (
+            pos[None, None, :, None] < pos[None, :, None, None]
+        )
+        beats = (gt | tie) & valid[:, None, :, None]
+        ranks = beats.sum(axis=2).astype(np.float32)  # (b, m, 3)
+        rrf_scores = (w3[:, None, :] / (rrf_k[:, None, None] + 1.0 + ranks)).sum(
+            -1
+        )
+        rrf_scores = np.where(valid, rrf_scores, -np.inf)
+        eff = np.where(rrf_rows[:, None], rrf_scores, all_scores)
+    else:
+        eff = all_scores
+    order = np.argsort(-eff, axis=1, kind="stable")[:, :k]
+    m_ids = np.take_along_axis(all_ids, order, axis=1)
+    m_scores = np.take_along_axis(eff, order, axis=1)
+    m_ps = np.take_along_axis(all_ps, order[:, :, None], axis=1)
+    ok = np.isfinite(m_scores)
+    return (
+        np.where(ok, m_ids, PAD_IDX).astype(np.int32),
+        np.where(ok, m_scores, _NEG_FILL).astype(np.float32),
+        np.where(ok[:, :, None], m_ps, 0.0).astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-query adaptive selector (the ingest/query path hook).
+# ---------------------------------------------------------------------------
+
+
+def query_nnz(vectors: FusedVectors) -> np.ndarray:
+    """Live lexical terms per query row — the query-specificity signal the
+    adaptive selector keys on."""
+    return np.asarray((np.asarray(vectors.lexical.idx) >= 0).sum(axis=-1))
+
+
+def adaptive_fusion(
+    keywords,
+    entities,
+    nnz,
+    *,
+    stats: Optional[PathStats] = None,
+    rrf_k: float = DEFAULT_RRF_K,
+) -> FusionSpec:
+    """Per-query fusion-mode selector from query characteristics (the
+    adaptive policy both SNIPPETS exemplars ship, host-side and cheap):
+
+      * entity-bearing queries -> weighted_sum with the KG path on (entity
+        waypoints steer traversal; rank fusion would dilute the logical
+        reward, which only the weighted mode folds into final scores);
+      * >= 2 required keywords -> RRF (precision-shaped query: rank fusion
+        is robust to the paths' incomparable score scales);
+      * lexically rich queries (nnz >= 8) -> zscore-normalized weighted sum
+        (many live terms make the lexical magnitude dominate raw sums);
+      * else -> dense-leaning weighted sum (today's default shape).
+
+    Returns a batched (B,)-leaf FusionSpec; pass ``stats`` (e.g. a
+    service's running stats) to pin normalization, else it resolves
+    downstream."""
+    kw = np.asarray(keywords) if keywords is not None else None
+    en = np.asarray(entities) if entities is not None else None
+    nnz = np.asarray(nnz)
+    b = nnz.shape[0]
+    kw_count = (
+        (kw >= 0).sum(axis=-1) if kw is not None and kw.size else np.zeros(b)
+    )
+    has_ent = (
+        (en >= 0).any(axis=-1)
+        if en is not None and en.size
+        else np.zeros(b, bool)
+    )
+    mode = np.full(b, WEIGHTED_SUM, np.int32)
+    wd = np.ones(b, np.float32)
+    ws = np.full(b, 0.5, np.float32)
+    wf = np.full(b, 0.5, np.float32)
+    wk = np.zeros(b, np.float32)
+
+    lex_rich = nnz >= 8
+    mode[lex_rich] = ZSCORE
+    ws[lex_rich] = 1.0
+    wf[lex_rich] = 1.0
+
+    kw_rich = kw_count >= 2
+    mode[kw_rich] = RRF
+    ws[kw_rich] = 1.0
+    wf[kw_rich] = 1.0
+
+    mode[has_ent] = WEIGHTED_SUM
+    wd[has_ent] = 1.0
+    ws[has_ent] = 1.0
+    wf[has_ent] = 1.0
+    wk[has_ent] = 1.0
+
+    batched_stats = None
+    if stats is not None:
+        s = lambda x: jnp.broadcast_to(
+            jnp.asarray(x, jnp.float32), (b, N_SCORE_PATHS)
+        )
+        batched_stats = PathStats(
+            minv=s(stats.minv), maxv=s(stats.maxv),
+            mean=s(stats.mean), std=s(stats.std),
+        )
+    return FusionSpec(
+        mode=jnp.asarray(mode),
+        weights=PathWeights(
+            dense=jnp.asarray(wd), sparse=jnp.asarray(ws),
+            full=jnp.asarray(wf), kg=jnp.asarray(wk),
+        ),
+        rrf_k=jnp.full((b,), rrf_k, jnp.float32),
+        stats=batched_stats,
+    )

@@ -21,17 +21,24 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.fusion import (
+    FusionSpec,
+    as_fusion_spec,
+    broadcast_spec,
+    fuse_candidates,
+)
 from repro.core.index import HybridIndex
 from repro.core.knn_graph import dedup_mask
 from repro.core.usms import (
     PAD_IDX,
     FusedVectors,
     PathWeights,
+    SparseVec,
     has_keyword_overlap,
     weighted_query,
 )
@@ -74,14 +81,18 @@ def resolve_params(params: SearchParams) -> SearchParams:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["ids", "scores", "expanded"],
+    data_fields=["ids", "scores", "expanded", "path_scores"],
     meta_fields=[],
 )
 @dataclasses.dataclass
 class SearchResult:
     ids: jax.Array  # (B, k) int32
-    scores: jax.Array  # (B, k) f32
+    scores: jax.Array  # (B, k) f32 fused scores (mode-dependent scale)
     expanded: jax.Array  # (B,) int32 number of expanded nodes (work measure)
+    # per-path raw scores of the winners, (B, k, 3) f32 [dense, learned,
+    # lexical], zero on PAD slots — every downstream merge recomputes RRF
+    # ranks from these (the cross-segment/replica merge contract, §11)
+    path_scores: Optional[jax.Array] = None
 
 
 def _entry_state(index: HybridIndex, q_entities: jax.Array, p: SearchParams):
@@ -111,13 +122,15 @@ def _entry_state(index: HybridIndex, q_entities: jax.Array, p: SearchParams):
 def _search_one(
     index: HybridIndex,
     qw: FusedVectors,  # weight-scaled query (single, no batch dim)
+    q_raw: FusedVectors,  # UNWEIGHTED query (per-path re-scoring, modes 1-3)
     q_keywords: jax.Array,  # (Kw,) required keyword ids (PAD padded)
     q_entities: jax.Array,  # (Eq,) query entity ids (PAD padded)
-    w_kg: jax.Array,  # scalar kg weight
+    spec: FusionSpec,  # scalar-leaf spec row (mode/weights/rrf_k/stats)
     p: SearchParams,
 ):
     n = index.n
     P = p.pool_size
+    w_kg = spec.weights.kg  # logical-path traversal bias weight
     q_b = jax.tree.map(lambda a: a[None], qw)  # add batch dim for the kernel
 
     def score_ids(ids):
@@ -303,16 +316,56 @@ def _search_one(
     res_scores = jnp.concatenate([pool_scores, kw_scores])
     keep = dedup_mask(res_ids)
     alive = index.alive[jnp.clip(res_ids, 0, n - 1)] & (res_ids >= 0)
-    res_scores = jnp.where(keep & alive, res_scores, NEG)
+    valid = keep & alive
+    res_scores = jnp.where(valid, res_scores, NEG)
     if p.use_keywords:
         has_req = (q_keywords >= 0).any()
         match = has_keyword_overlap(
             index.corpus.lexical.idx[jnp.clip(res_ids, 0, n - 1)], q_keywords
         )
+        valid = valid & ~(has_req & ~match)
         res_scores = jnp.where(has_req & ~match, NEG, res_scores)
-    top, pos = jax.lax.top_k(res_scores, p.k)
-    out_ids = jnp.where(top > NEG, res_ids[pos], PAD_IDX)
-    return out_ids, top, n_expanded
+
+    # ---- dynamic fusion (§11): re-score the final candidate pool ----------
+    # Traversal always navigated with the weighted-sum score (qw); the
+    # fusion mode only re-scores the merged pool. Per-path raw scores come
+    # from the UNWEIGHTED query via three single-path-masked passes through
+    # the same scoring op — the shape-stable analogue of keeping separate
+    # per-path result lists. In weighted_sum mode the fused scores are
+    # exactly ``res_scores`` (bit-compatible default). The KG logical reward
+    # is a traversal bias in every mode but enters FINAL scores only through
+    # the weighted-sum branch (ranks/normalized sums are score-path-only).
+    zeros_like_val = lambda s: SparseVec(s.idx, jnp.zeros_like(s.val))
+
+    def path_score(q_single):
+        return ops.hybrid_scores_vs_ids(
+            jax.tree.map(lambda a: a[None], q_single),
+            index.corpus,
+            res_ids[None],
+            use_kernel=p.use_kernel,
+        )[0]
+
+    q_dense = FusedVectors(
+        q_raw.dense, zeros_like_val(q_raw.learned), zeros_like_val(q_raw.lexical)
+    )
+    q_learned = FusedVectors(
+        jnp.zeros_like(q_raw.dense), q_raw.learned, zeros_like_val(q_raw.lexical)
+    )
+    q_lexical = FusedVectors(
+        jnp.zeros_like(q_raw.dense), zeros_like_val(q_raw.learned), q_raw.lexical
+    )
+    ps = jnp.stack(
+        [path_score(q_dense), path_score(q_learned), path_score(q_lexical)],
+        axis=-1,
+    )  # (M, 3); -inf on PAD slots -> sanitize before any arithmetic
+    ps = jnp.where(valid[:, None], ps, 0.0)
+    fused = fuse_candidates(res_scores, ps, valid, spec, NEG)
+
+    top, pos = jax.lax.top_k(fused, p.k)
+    ok = top > NEG
+    out_ids = jnp.where(ok, res_ids[pos], PAD_IDX)
+    out_ps = jnp.where(ok[:, None], ps[pos], 0.0)
+    return out_ids, top, out_ps, n_expanded
 
 
 # incremented once per trace of search_padded (the Python body only runs
@@ -330,7 +383,7 @@ def search_padded_trace_count() -> int:
 def search_padded(
     index: HybridIndex,
     queries: FusedVectors,
-    weights: PathWeights,
+    fusion: Union[FusionSpec, PathWeights],
     keywords: jax.Array,  # (B, Kw) required keywords, PAD_IDX padded
     entities: jax.Array,  # (B, Eq) query entities, PAD_IDX padded
     params: SearchParams,
@@ -339,20 +392,26 @@ def search_padded(
     static pad cap and no data-dependent Python branching, so one traced
     executable serves every request mix of a given shape bucket.
 
-    ``weights`` leaves may be scalars (whole-batch weights) or (B,) arrays
-    (per-query weights): either way they enter as traced data per Theorem 1,
-    so changing weights never recompiles. This is the entry point the serving
-    layer AOT-compiles per (bucket shape, SearchParams); ``search()`` is the
+    ``fusion`` is a ``FusionSpec`` whose leaves may be scalars (whole-batch)
+    or (B,)/(B, 3) arrays (per-query fusion, as micro-batched serving
+    requires): mode, weights, rrf_k and stats all enter as traced data, so
+    switching ANY of them never recompiles (Theorem 1 extended to the
+    dynamic fusion framework, §11). A bare ``PathWeights`` still works
+    (silently: jitted code is no place for a once-per-trace warning) and
+    means weighted-sum. This is the entry point the serving layer
+    AOT-compiles per (bucket shape, SearchParams); ``search()`` is the
     convenience wrapper that fabricates the pad arrays.
     """
     _TRACE_COUNT[0] += 1
+    if isinstance(fusion, PathWeights):
+        fusion = FusionSpec.from_weights(fusion)
     b = queries.dense.shape[0]
-    qw = weighted_query(queries, weights)
-    w_kg = jnp.broadcast_to(jnp.asarray(weights.kg, jnp.float32), (b,))
-    ids, scores, expanded = jax.vmap(
-        lambda q, kw, en, wk: _search_one(index, q, kw, en, wk, params)
-    )(qw, keywords, entities, w_kg)
-    return SearchResult(ids, scores, expanded)
+    spec = broadcast_spec(fusion, b)
+    qw = weighted_query(queries, spec.weights)
+    ids, scores, ps, expanded = jax.vmap(
+        lambda q, qr, kw, en, sp: _search_one(index, q, qr, kw, en, sp, params)
+    )(qw, queries, keywords, entities, spec)
+    return SearchResult(ids, scores, expanded, ps)
 
 
 # retained name for callers of the private batched entry point
@@ -362,13 +421,16 @@ _search_batch = search_padded
 def search(
     index: HybridIndex,
     queries: FusedVectors,
-    weights: PathWeights,
+    fusion: Union[FusionSpec, PathWeights],
     params: SearchParams,
     *,
     keywords: Optional[jax.Array] = None,  # (B, Kw) required keywords
     entities: Optional[jax.Array] = None,  # (B, Eq) query entities
 ) -> SearchResult:
-    """Batched hybrid search with any path combination (public API)."""
+    """Batched hybrid search with any path combination and fusion mode
+    (public API). ``fusion`` is a ``FusionSpec``; passing ``PathWeights``
+    still works via the deprecated weighted-sum shim (DeprecationWarning)."""
+    spec = as_fusion_spec(fusion)
     b = queries.dense.shape[0]
 
     def as_padded(a):  # fabricate the PAD array only when absent/empty
@@ -378,5 +440,5 @@ def search(
         return a
 
     return search_padded(
-        index, queries, weights, as_padded(keywords), as_padded(entities), params
+        index, queries, spec, as_padded(keywords), as_padded(entities), params
     )

@@ -8,6 +8,7 @@ from repro.ingest.pipeline import (
     IngestedCorpus,
     IngestPipeline,
     NotFittedError,
+    adaptive_fusion_for,
 )
 from repro.ingest.weighting import CorpusStats
 
@@ -21,5 +22,6 @@ __all__ = [
     "IngestedCorpus",
     "IngestPipeline",
     "NotFittedError",
+    "adaptive_fusion_for",
     "CorpusStats",
 ]

@@ -104,6 +104,19 @@ class EncodedQueries:
     entities: np.ndarray  # (B, Eq) entity ids, PAD-padded
 
 
+def adaptive_fusion_for(enc: EncodedQueries, *, stats=None):
+    """Per-query ``FusionSpec`` from an encoded query batch — the ingest
+    side of the adaptive fusion selector (``core.fusion.adaptive_fusion``):
+    required-keyword count, live lexical nnz, and entity presence pick the
+    mode and weights per row. Pass a service's running ``PathStats`` to pin
+    normalization; otherwise it resolves downstream."""
+    from repro.core.fusion import adaptive_fusion, query_nnz
+
+    return adaptive_fusion(
+        enc.keywords, enc.entities, query_nnz(enc.vectors), stats=stats
+    )
+
+
 class NotFittedError(RuntimeError):
     pass
 

@@ -30,6 +30,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.fusion import FusionSpec, as_fusion_spec
 from repro.core.usms import FusedVectors, PathWeights
 
 
@@ -187,25 +188,48 @@ class Bucket:
 @dataclasses.dataclass
 class SearchRequest:
     """One user query. ``query`` leaves are unbatched (dense (Dd,), sparse
-    (P,)); ``weights`` leaves are scalars; keywords/entities are 1-D id
-    arrays (or None)."""
+    (P,)); ``fusion`` is a scalar-leaf ``FusionSpec`` (mode, weights, rrf_k,
+    stats — stats=None defers to the service's running index stats);
+    keywords/entities are 1-D id arrays (or None). ``weights`` is the
+    deprecated ``PathWeights`` form: it converts to a weighted-sum spec on
+    construction with a ``DeprecationWarning``."""
 
     query: FusedVectors
-    weights: PathWeights
+    fusion: Optional[FusionSpec] = None
     k: int = 10
     keywords: Optional[np.ndarray] = None
     entities: Optional[np.ndarray] = None
     tenant: Optional[str] = None  # admission-control quota key (None = global only)
+    weights: Optional[PathWeights] = None  # deprecated: use fusion
+
+    def __post_init__(self):
+        if self.fusion is not None and self.weights is not None:
+            raise ValueError("pass fusion= or (deprecated) weights=, not both")
+        if self.fusion is None:
+            if self.weights is not None:
+                self.fusion = as_fusion_spec(self.weights)  # warns
+            # else: left unset; the service rejects it at submit time
+        elif not isinstance(self.fusion, FusionSpec):
+            self.fusion = as_fusion_spec(self.fusion)  # warns on PathWeights
 
 
 class PendingResult:
     """Future-like handle filled when the request's batch executes."""
 
-    __slots__ = ("_ids", "_scores", "_expanded", "_error", "_event", "_service")
+    __slots__ = (
+        "_ids",
+        "_scores",
+        "_path_scores",
+        "_expanded",
+        "_error",
+        "_event",
+        "_service",
+    )
 
     def __init__(self, service=None):
         self._ids = None
         self._scores = None
+        self._path_scores = None
         self._expanded = 0
         self._error: Optional[BaseException] = None
         self._event = threading.Event()
@@ -220,8 +244,22 @@ class PendingResult:
         """Nodes the beam search expanded for this query (work measure)."""
         return self._expanded
 
-    def _fulfill(self, ids: np.ndarray, scores: np.ndarray, expanded: int) -> None:
+    @property
+    def path_scores(self) -> Optional[np.ndarray]:
+        """(k, 3) raw per-path scores of the returned ids (dense / learned /
+        lexical), or None before fulfillment. Required by cross-replica RRF
+        merges, which re-rank from raw path scores rather than fused ones."""
+        return self._path_scores
+
+    def _fulfill(
+        self,
+        ids: np.ndarray,
+        scores: np.ndarray,
+        expanded: int,
+        path_scores: Optional[np.ndarray] = None,
+    ) -> None:
         self._ids, self._scores, self._expanded = ids, scores, expanded
+        self._path_scores = path_scores
         self._event.set()
 
     def _fail(self, error: BaseException) -> None:

@@ -58,6 +58,13 @@ from repro.core.segment_pool import SegmentPool, group_shape_key
 from repro.core.build_pipeline import insert as index_insert
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.index import mark_deleted as index_mark_deleted
+from repro.core.fusion import (
+    FusionSpec,
+    PathStats,
+    as_fusion_spec,
+    merge_fused_host,
+    stack_specs,
+)
 from repro.core.search import (
     SearchParams,
     SearchResult,
@@ -69,7 +76,6 @@ from repro.core.usms import (
     FusedVectors,
     PathWeights,
     SparseVec,
-    stack_weights,
 )
 from repro.serving.batcher import (
     AdmissionConfig,
@@ -167,6 +173,11 @@ class HybridSearchService:
         )
         self._build_cfg = build_cfg
         self._router = None  # set by serving.segment_router.SegmentRouter
+        # running per-path normalization stats: recomputed lazily when the
+        # snapshot version moves, EMA-blended across publishes so normalized
+        # fusion scores stay stable under streaming churn (DESIGN.md §11)
+        self._stats_cache: Optional[PathStats] = None
+        self._stats_version = -1
         self._admission = (
             AdmissionController(self.config.admission)
             if self.config.admission is not None
@@ -244,6 +255,50 @@ class HybridSearchService:
     def grow_index(self) -> Optional[HybridIndex]:
         """The current grow segment (None when sealed-only)."""
         return self._snap.grow
+
+    # EMA weight of FRESH stats at each snapshot publish; extremes still
+    # widen monotonically (PathStats.ema), so minmax stays in-range for
+    # every row both snapshots contained
+    _STATS_EMA = 0.3
+
+    @staticmethod
+    def _norm_parts(snap: _Snapshot):
+        """(corpus, alive) pairs covering every live row of a snapshot —
+        the input to ``PathStats.from_corpus_parts``."""
+        idx = snap.index
+        if isinstance(idx, SegmentPool):
+            parts = [(g.index.corpus, g.index.alive) for g in idx.groups]
+        elif isinstance(idx, SegmentedIndex):
+            parts = [(idx.index.corpus, idx.index.alive)]
+        else:
+            parts = [(idx.corpus, idx.alive)]
+        if snap.grow is not None:
+            parts.append((snap.grow.corpus, snap.grow.alive))
+        return parts
+
+    @property
+    def path_stats(self) -> PathStats:
+        """Running per-path normalization stats of the served corpus
+        ((3,) leaves). Lazily refreshed when the snapshot version moves;
+        successive publishes EMA-blend rather than jump."""
+        snap = self._snap
+        if self._stats_cache is None or self._stats_version != snap.version:
+            fresh = PathStats.from_corpus_parts(self._norm_parts(snap))
+            stats = (
+                fresh
+                if self._stats_cache is None
+                else PathStats.ema(self._stats_cache, fresh, self._STATS_EMA)
+            )
+            self._stats_cache, self._stats_version = stats, snap.version
+        return self._stats_cache
+
+    def _resolve_spec(self, spec: FusionSpec) -> FusionSpec:
+        """Pin unresolved (stats=None) specs to the service's running
+        stats — the downstream resolution the ``FusionSpec`` contract
+        promises. Already-resolved specs pass through untouched."""
+        if spec.stats is not None:
+            return spec
+        return dataclasses.replace(spec, stats=self.path_stats)
 
     def _publish(self, new_index, *, grow=None, grow_gids=None) -> None:
         # materialize before publishing so readers never block on (or fail
@@ -396,6 +451,11 @@ class HybridSearchService:
 
     def _validate(self, request: SearchRequest) -> None:
         bcfg = self.config.batcher
+        if request.fusion is None:
+            raise ValueError(
+                "SearchRequest needs fusion=FusionSpec(...) "
+                "(or the deprecated weights=PathWeights form)"
+            )
         if request.k > self.params.k:
             raise ValueError(
                 f"request.k={request.k} exceeds the service cap params.k={self.params.k}"
@@ -482,29 +542,17 @@ class HybridSearchService:
     # large-negative fill for merged pad slots (matches distributed NEG_FILL)
     _NEG_FILL = np.float32(-1e30)
 
-    @classmethod
-    def _merge_host(cls, ids_parts, score_parts, k):
-        """Per-row top-k merge of several result blocks in global-id space.
-        Every global id lives in exactly one segment, so the merged rows are
-        duplicate-free by construction."""
-        all_ids = np.concatenate(ids_parts, axis=1)
-        all_scores = np.concatenate(
-            [
-                np.where(i >= 0, s, -np.inf)
-                for i, s in zip(ids_parts, score_parts)
-            ],
-            axis=1,
-        )
-        order = np.argsort(-all_scores, axis=1, kind="stable")[:, :k]
-        m_ids = np.take_along_axis(all_ids, order, axis=1)
-        m_scores = np.take_along_axis(all_scores, order, axis=1)
-        valid = np.isfinite(m_scores)
-        return (
-            np.where(valid, m_ids, PAD_IDX).astype(np.int32),
-            np.where(valid, m_scores, cls._NEG_FILL).astype(np.float32),
-        )
+    @staticmethod
+    def _merge_host(ids_parts, score_parts, k, path_parts=None, spec=None):
+        """Per-row top-k merge of several result blocks in global-id space
+        (every global id lives in exactly one segment, so merged rows are
+        duplicate-free). Fusion-aware: non-RRF rows merge by score, RRF rows
+        recompute ranks over the union from ``path_parts`` — merging local
+        RRF scores by value is a contract violation (DESIGN.md §11) and
+        raises inside ``merge_fused_host``."""
+        return merge_fused_host(ids_parts, score_parts, path_parts, spec, k)
 
-    def _merge_grow(self, snap: _Snapshot, args, ids, scores, expanded):
+    def _merge_grow(self, snap: _Snapshot, args, ids, scores, ps, expanded):
         """Phase two of a segmented read: search the grow segment and merge
         per-row top-k with the sealed results in global-id space.
 
@@ -522,10 +570,17 @@ class HybridSearchService:
             PAD_IDX,
         )
         g_scores = np.where(g_local >= 0, np.asarray(gres.scores), -np.inf)
-        m_ids, m_scores = self._merge_host(
-            [ids, g_ids], [scores, g_scores], ids.shape[1]
+        g_ps = np.where(
+            (g_local >= 0)[:, :, None], np.asarray(gres.path_scores), 0.0
         )
-        return m_ids, m_scores, expanded + np.asarray(gres.expanded)
+        m_ids, m_scores, m_ps = self._merge_host(
+            [ids, g_ids],
+            [scores, g_scores],
+            ids.shape[1],
+            path_parts=[ps, g_ps],
+            spec=args[1],
+        )
+        return m_ids, m_scores, m_ps, expanded + np.asarray(gres.expanded)
 
     def _run_pool(self, pool: SegmentPool, bucket: Bucket, args):
         """Pool read: one cached executable per shape group, merged per-row
@@ -538,33 +593,39 @@ class HybridSearchService:
             self._get_group_executable(group, bucket, args)(group, *args)
             for group in pool.groups
         ]
-        ids_parts, score_parts = [], []
+        ids_parts, score_parts, ps_parts = [], [], []
         expanded = np.int64(0)
         for res in results:
             ids_parts.append(np.asarray(res.ids))
             score_parts.append(np.asarray(res.scores))
+            ps_parts.append(np.asarray(res.path_scores))
             expanded = expanded + np.asarray(res.expanded)
         if len(ids_parts) == 1:
-            return ids_parts[0], score_parts[0], expanded
+            return ids_parts[0], score_parts[0], ps_parts[0], expanded
         k = ids_parts[0].shape[1]
-        m_ids, m_scores = self._merge_host(ids_parts, score_parts, k)
-        return m_ids, m_scores, expanded
+        m_ids, m_scores, m_ps = self._merge_host(
+            ids_parts, score_parts, k, path_parts=ps_parts, spec=args[1]
+        )
+        return m_ids, m_scores, m_ps, expanded
 
     def _run_batch(self, bucket: Bucket, entries) -> None:
         try:
             snap = self._snap  # one snapshot for the whole batch
             args = self._assemble(bucket, entries)
             if isinstance(snap.index, SegmentPool):
-                ids, scores, expanded = self._run_pool(snap.index, bucket, args)
+                ids, scores, ps, expanded = self._run_pool(
+                    snap.index, bucket, args
+                )
             else:
                 exe = self._get_executable(snap, bucket, args)
                 res = exe(snap.index, *args)
                 ids = np.asarray(res.ids)
                 scores = np.asarray(res.scores)
+                ps = np.asarray(res.path_scores)
                 expanded = np.asarray(res.expanded)
             if snap.grow is not None:
-                ids, scores, expanded = self._merge_grow(
-                    snap, args, ids, scores, expanded
+                ids, scores, ps, expanded = self._merge_grow(
+                    snap, args, ids, scores, ps, expanded
                 )
         except Exception as err:
             # entries are already dequeued: propagate to every waiter so no
@@ -574,15 +635,22 @@ class HybridSearchService:
             raise
         for i, e in enumerate(entries):
             e.pending._fulfill(
-                ids[i, : e.request.k], scores[i, : e.request.k], int(expanded[i])
+                ids[i, : e.request.k],
+                scores[i, : e.request.k],
+                int(expanded[i]),
+                path_scores=ps[i, : e.request.k],
             )
         with self._cache_lock:
             self.stats.batches += 1
             self.stats.padded_slots += bucket.batch - len(entries)
 
     def _assemble(self, bucket: Bucket, entries):
-        """Pack requests into the bucket's fixed shapes. Pad rows carry zero
-        weights and PAD ids; their results are discarded on delivery."""
+        """Pack requests into the bucket's fixed shapes. Pad rows carry the
+        all-zero fusion spec and PAD ids; their results are discarded on
+        delivery. Every request spec is resolved against the service's
+        running stats here, so the stacked spec has a FIXED pytree
+        structure — fusion mode/weights/stats remain traced data, never part
+        of the executable-cache key."""
         m = len(entries)
         b = bucket.batch
         queries = jax.tree.map(
@@ -599,9 +667,10 @@ class HybridSearchService:
                 SparseVec(grow(queries.learned.idx, PAD_IDX), grow(queries.learned.val, 0)),
                 SparseVec(grow(queries.lexical.idx, PAD_IDX), grow(queries.lexical.val, 0)),
             )
-        zero_w = PathWeights.make(0.0, 0.0, 0.0, 0.0)
-        weights = stack_weights(
-            [e.request.weights for e in entries] + [zero_w] * (b - m)
+        pad_spec = self._resolve_spec(FusionSpec.zero())
+        fusion = stack_specs(
+            [self._resolve_spec(e.request.fusion) for e in entries]
+            + [pad_spec] * (b - m)
         )
         kw = np.full((b, bucket.kw_width), PAD_IDX, np.int32)
         en = np.full((b, bucket.ent_width), PAD_IDX, np.int32)
@@ -612,24 +681,27 @@ class HybridSearchService:
             if e.request.entities is not None and len(e.request.entities):
                 ens = np.asarray(e.request.entities, np.int32)
                 en[i, : len(ens)] = ens
-        return queries, weights, jnp.asarray(kw), jnp.asarray(en)
+        return queries, fusion, jnp.asarray(kw), jnp.asarray(en)
 
     # -- synchronous convenience -------------------------------------------
 
     def search(
         self,
         queries: FusedVectors,
-        weights: Union[PathWeights, Sequence[PathWeights]],
+        fusion: Union[FusionSpec, PathWeights, Sequence, None] = None,
         *,
+        weights: Union[PathWeights, Sequence[PathWeights], None] = None,
         keywords: Optional[np.ndarray] = None,
         entities: Optional[np.ndarray] = None,
         k: Optional[int] = None,
     ) -> SearchResult:
         """Submit a whole batch and flush: per-row requests (row i of
-        ``queries`` with weights[i] if a sequence was given), results
-        reassembled into a SearchResult. Mirrors core.search.search but runs
-        through the batched request path. 2-D keyword/entity arrays may be
-        PAD_IDX padded (the core search() convention); pad slots are
+        ``queries`` with fusion[i] if a sequence / batched-leaf spec was
+        given), results reassembled into a SearchResult. Mirrors
+        core.search.search but runs through the batched request path.
+        ``weights=`` is the deprecated ``PathWeights`` spelling (converts to
+        a weighted-sum spec with a warning). 2-D keyword/entity arrays may
+        be PAD_IDX padded (the core search() convention); pad slots are
         stripped per row before the requests are formed."""
 
         def row_ids(arr, i):
@@ -639,19 +711,27 @@ class HybridSearchService:
             row = row[row >= 0]
             return row if len(row) else None
 
+        if fusion is not None and weights is not None:
+            raise ValueError("pass fusion= or (deprecated) weights=, not both")
+        if fusion is None:
+            if weights is None:
+                raise TypeError("search() requires fusion=FusionSpec(...)")
+            fusion = weights  # deprecated form; as_fusion_spec warns below
         b = queries.dense.shape[0]
         k = self.params.k if k is None else k
-        if isinstance(weights, PathWeights):
-            if np.ndim(weights.dense) >= 1:  # batched (B,)-leaf form
-                get_w = lambda i: jax.tree.map(lambda x: x[i], weights)
+        if isinstance(fusion, (FusionSpec, PathWeights)):
+            spec = as_fusion_spec(fusion)
+            if np.ndim(spec.mode) >= 1:  # batched (B,)-leaf form
+                get_f = lambda i: jax.tree.map(lambda x: x[i], spec)
             else:
-                get_w = lambda i: weights
-        else:
-            get_w = lambda i: weights[i]
+                get_f = lambda i: spec
+        else:  # per-row sequence of FusionSpec / deprecated PathWeights
+            rows = [as_fusion_spec(f) for f in fusion]
+            get_f = lambda i: rows[i]
         reqs = [
             SearchRequest(
                 query=queries[i],
-                weights=get_w(i),
+                fusion=get_f(i),
                 k=k,
                 keywords=row_ids(keywords, i),
                 entities=row_ids(entities, i),
@@ -677,8 +757,10 @@ class HybridSearchService:
             pass  # per-row errors surface from each result() below
         ids = np.stack([p.result()[0] for p in pendings])
         scores = np.stack([p.result()[1] for p in pendings])
+        ps = np.stack([p.path_scores for p in pendings])
         return SearchResult(
             ids=jnp.asarray(ids),
             scores=jnp.asarray(scores),
             expanded=jnp.asarray([p.expanded for p in pendings], jnp.int32),
+            path_scores=jnp.asarray(ps),
         )

@@ -29,6 +29,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.fusion import (
+    FusionSpec,
+    adaptive_fusion,
+    as_fusion_spec,
+    query_nnz,
+)
 from repro.core.index import HybridIndex
 from repro.core.search import SearchParams, SearchResult, resolve_params, search
 from repro.core.usms import FusedVectors, PathWeights
@@ -40,10 +46,22 @@ from repro.serving.hybrid_service import HybridSearchService
 class RagConfig:
     top_k: int = 4
     ctx_tokens_per_doc: int = 32
-    weights: PathWeights = dataclasses.field(
-        default_factory=PathWeights.three_path
+    # the query-side fusion object (DESIGN.md §11); stats resolve against
+    # the attached service's running corpus stats (identity when direct)
+    fusion: FusionSpec = dataclasses.field(
+        default_factory=FusionSpec.three_path
     )
+    # deprecated PathWeights spelling: converts to a weighted-sum FusionSpec
+    # (with a DeprecationWarning) and overrides ``fusion`` when set
+    weights: Optional[PathWeights] = None
+    # pick mode + weights per query from its text-derived characteristics
+    # (keyword count, lexical nnz, entity presence) on the text entry points
+    adaptive: bool = False
     search: SearchParams = SearchParams(k=4, iters=32, pool_size=64)
+
+    def __post_init__(self):
+        if self.weights is not None:
+            self.fusion = as_fusion_spec(self.weights)  # warns
 
 
 class RagPipeline:
@@ -92,25 +110,43 @@ class RagPipeline:
         *,
         keywords: Optional[jax.Array] = None,
         entities: Optional[jax.Array] = None,
+        fusion: Optional[FusionSpec] = None,
     ) -> SearchResult:
+        spec = self.cfg.fusion if fusion is None else as_fusion_spec(fusion)
         if self.service is not None:
             # mirror the direct path's semantics: keyword/entity operands are
             # inert when the params disable those paths, not request errors
             return self.service.search(
-                queries, self.cfg.weights,
+                queries, spec,
                 keywords=keywords if self.service.params.use_keywords else None,
                 entities=entities if self.service.params.use_kg else None,
                 k=self.cfg.top_k,
             )
         params = dataclasses.replace(self.cfg.search, k=self.cfg.top_k)
         return search(
-            self.index, queries, self.cfg.weights, params,
+            self.index, queries, spec, params,
             keywords=keywords, entities=entities,
+        )
+
+    def _adaptive_spec(self, enc) -> FusionSpec:
+        """Per-query fusion selection from the analyzer's view of the query
+        (the ingest/query-path hook): required-keyword count, lexical nnz,
+        and entity presence pick mode + weights per row. Normalization
+        stats pin to the attached service's running stats when available,
+        else resolve downstream."""
+        stats = self.service.path_stats if self.service is not None else None
+        return adaptive_fusion(
+            enc.keywords,
+            enc.entities,
+            query_nnz(enc.vectors),
+            stats=stats,
         )
 
     def retrieve_text(self, texts) -> SearchResult:
         """Raw query strings -> hybrid retrieval via the attached ingestion
-        analyzer (query SparseVec + required keywords + query entities)."""
+        analyzer (query SparseVec + required keywords + query entities).
+        With ``cfg.adaptive`` the fusion mode/weights are selected per query
+        from the analyzer's signals."""
         if self.ingest is None:
             raise ValueError(
                 "retrieve_text requires an IngestPipeline at construction"
@@ -120,6 +156,7 @@ class RagPipeline:
             enc.vectors,
             keywords=jnp.asarray(enc.keywords),
             entities=jnp.asarray(enc.entities),
+            fusion=self._adaptive_spec(enc) if self.cfg.adaptive else None,
         )
 
     def answer_text(
@@ -136,6 +173,7 @@ class RagPipeline:
             enc.vectors, prompts, n_tokens,
             keywords=jnp.asarray(enc.keywords),
             entities=jnp.asarray(enc.entities),
+            fusion=self._adaptive_spec(enc) if self.cfg.adaptive else None,
         )
 
     def build_context(self, result: SearchResult) -> jax.Array:
@@ -153,8 +191,11 @@ class RagPipeline:
         *,
         keywords: Optional[jax.Array] = None,
         entities: Optional[jax.Array] = None,
+        fusion: Optional[FusionSpec] = None,
     ) -> tuple[jax.Array, SearchResult]:
-        res = self.retrieve(queries, keywords=keywords, entities=entities)
+        res = self.retrieve(
+            queries, keywords=keywords, entities=entities, fusion=fusion
+        )
         ctx = self.build_context(res)
         full_prompt = jnp.concatenate([ctx, prompts], axis=1)
         out = self.engine.generate(full_prompt, n_tokens)

@@ -17,8 +17,13 @@ maps 1:1 onto separate hosts). The router in front is deliberately thin:
     is recomputable from the id alone; ``delete()`` routes the same way.
   * **reads** — ``search()`` scatter-gathers: every *up* replica searches
     the query batch over its shard, and the per-replica top-k blocks merge
-    per row in global-id space via ``HybridSearchService._merge_host``
+    per row in global-id space via ``core.fusion.merge_fused_host``
     (shards are disjoint, so the merge is duplicate-free by construction).
+    The merge honors the fusion contract (DESIGN.md §11): the router
+    resolves ONE ``FusionSpec`` — normalization stats pooled tier-wide via
+    ``PathStats.merge`` so normalized scores are comparable across shards —
+    and RRF rows merge by re-summed rank contributions recomputed over the
+    union from per-path scores, never by comparing local RRF score values.
     Replica passes run on a persistent per-replica thread pool and are
     dispatched in least-outstanding-requests order, so a slow replica
     backs up its own queue, not the whole tier.
@@ -50,6 +55,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.fusion import (
+    FusionSpec,
+    PathStats,
+    as_fusion_spec,
+    merge_fused_host,
+    stack_specs,
+)
 from repro.core.search import SearchResult
 from repro.core.usms import FusedVectors, PathWeights
 from repro.serving.hybrid_service import HybridSearchService
@@ -304,38 +316,82 @@ class ReplicaRouter:
         with self._lock:
             return sorted(up, key=lambda i: (self.replicas[i].outstanding, i))
 
-    def _member_search(self, i: int, queries, weights, kw, en, k):
+    def _member_search(self, i: int, queries, fusion, kw, en, k):
         r = self.replicas[i]
         with self._lock:
             r.outstanding += 1
             self.stats.dispatched[i] += 1
         try:
             return r.service.search(
-                queries, weights, keywords=kw, entities=en, k=k
+                queries, fusion, keywords=kw, entities=en, k=k
             )
         finally:
             with self._lock:
                 r.outstanding -= 1
 
+    def path_stats(self) -> PathStats:
+        """ONE tier-wide normalization-stats object: per-replica running
+        stats pooled by live shard size (``PathStats.merge``). The shared
+        stats make normalized fusion scores comparable across shards — the
+        merge contract's precondition (DESIGN.md §11)."""
+        up = self._up()
+        sizes = self.shard_sizes()
+        return PathStats.merge(
+            [self.replicas[i].service.path_stats for i in up],
+            [sizes[i] for i in up],
+        )
+
+    def _resolve_spec(self, fusion) -> FusionSpec:
+        """Coerce the query-side fusion argument to ONE resolved spec for
+        the whole tier: sequences stack to a batched spec, and unresolved
+        (stats=None) specs pin to the tier-wide pooled stats so every
+        member normalizes identically."""
+        if isinstance(fusion, (FusionSpec, PathWeights)):
+            spec = as_fusion_spec(fusion)
+        else:
+            spec = stack_specs([as_fusion_spec(f) for f in fusion])
+        if spec.stats is not None:
+            return spec
+        stats = self.path_stats()
+        if np.ndim(spec.mode) >= 1:  # batched spec needs (B, 3) stat leaves
+            b = int(np.shape(spec.mode)[0])
+            bs = lambda x: jnp.broadcast_to(
+                jnp.asarray(x, jnp.float32), (b,) + jnp.shape(x)[-1:]
+            )
+            stats = PathStats(
+                minv=bs(stats.minv), maxv=bs(stats.maxv),
+                mean=bs(stats.mean), std=bs(stats.std),
+            )
+        return dataclasses.replace(spec, stats=stats)
+
     def search(
         self,
         queries: FusedVectors,
-        weights: Union[PathWeights, Sequence[PathWeights]],
+        fusion: Union[FusionSpec, PathWeights, Sequence, None] = None,
         *,
+        weights: Union[PathWeights, Sequence[PathWeights], None] = None,
         keywords: Optional[np.ndarray] = None,
         entities: Optional[np.ndarray] = None,
         k: Optional[int] = None,
     ) -> SearchResult:
         """Batched read. Hash tiers scatter to every up replica and merge
         per-row top-k in global-id space; mirror tiers dispatch the batch
-        to the single least-loaded replica."""
+        to the single least-loaded replica. ``weights=`` is the deprecated
+        ``PathWeights`` spelling."""
+        if fusion is not None and weights is not None:
+            raise ValueError("pass fusion= or (deprecated) weights=, not both")
+        if fusion is None:
+            if weights is None:
+                raise TypeError("search() requires fusion=FusionSpec(...)")
+            fusion = weights  # deprecated form; as_fusion_spec warns
+        spec = self._resolve_spec(fusion)
         up = self._dispatch_order(self._up())
         if not up:
             raise RuntimeError("no replica is up")
         self.stats.searches += 1
         if self.config.placement == "mirror":
             return self._member_search(
-                up[0], queries, weights, keywords, entities, k
+                up[0], queries, spec, keywords, entities, k
             )
         if len(up) < len(self.replicas):
             self.stats.partial_searches += 1
@@ -346,13 +402,13 @@ class ReplicaRouter:
                 )
         if len(up) == 1:
             return self._member_search(
-                up[0], queries, weights, keywords, entities, k
+                up[0], queries, spec, keywords, entities, k
             )
         futures = [
             (
                 i,
                 self._pool.submit(
-                    self._member_search, i, queries, weights,
+                    self._member_search, i, queries, spec,
                     keywords, entities, k,
                 ),
             )
@@ -360,9 +416,11 @@ class ReplicaRouter:
         ]
         parts = [f.result() for _, f in futures]
         k_out = int(np.asarray(parts[0].ids).shape[1])
-        m_ids, m_scores = HybridSearchService._merge_host(
+        m_ids, m_scores, m_ps = merge_fused_host(
             [np.asarray(p.ids) for p in parts],
             [np.asarray(p.scores) for p in parts],
+            [np.asarray(p.path_scores) for p in parts],
+            spec,
             k_out,
         )
         expanded = np.sum(
@@ -372,6 +430,7 @@ class ReplicaRouter:
             ids=jnp.asarray(m_ids),
             scores=jnp.asarray(m_scores),
             expanded=jnp.asarray(expanded, jnp.int32),
+            path_scores=jnp.asarray(m_ps),
         )
 
     # -- introspection ------------------------------------------------------

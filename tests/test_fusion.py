@@ -1,0 +1,362 @@
+"""Dynamic fusion framework (DESIGN.md §11): FusionSpec API surface,
+zero-recompile contract across modes/weights/rrf_k, numpy oracles for RRF
+and normalized fusion over the final candidate pool, the cross-part merge
+contract, the adaptive selector, and the PathWeights deprecation shim."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import BuildConfig, KnnConfig, PruneConfig, build_index
+from repro.core.fusion import (
+    RRF,
+    WEIGHTED_SUM,
+    ZSCORE,
+    FusionSpec,
+    PathStats,
+    adaptive_fusion,
+    as_fusion_spec,
+    merge_fused_host,
+    stack_specs,
+)
+from repro.core.search import SearchParams, search, search_padded_trace_count
+from repro.core.usms import PAD_IDX, PathWeights
+from repro.data.corpus import CorpusConfig, make_corpus
+from repro.serving.batcher import BatcherConfig, SearchRequest
+from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
+
+BUILD_CFG = BuildConfig(
+    knn=KnnConfig(k=12, iters=3, node_chunk=512),
+    prune=PruneConfig(degree=12, keyword_degree=4, node_chunk=256),
+    path_refine_iters=0,
+)
+PARAMS = SearchParams(k=10, iters=32, pool_size=48, kw_pool_size=16)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        CorpusConfig(n_docs=512, n_queries=8, n_topics=12, d_dense=32,
+                     nnz_sparse=10, nnz_lexical=8, seed=7)
+    )
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_index(corpus.docs, BUILD_CFG)
+
+
+@pytest.fixture(scope="module")
+def stats(index):
+    return PathStats.from_corpus(index.corpus, index.alive)
+
+
+# ---------------------------------------------------------------------------
+# API surface: bit-compatible default, deprecation shim, spec stacking.
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_sum_bit_compatible_with_pathweights(corpus, index):
+    """FusionSpec(mode=weighted_sum) must return EXACTLY what the legacy
+    PathWeights path returns — same executable, same floats."""
+    spec = FusionSpec.weighted(0.7, 0.3, 0.2)
+    res_new = search(index, corpus.queries, spec, PARAMS)
+    with pytest.deprecated_call():
+        res_old = search(
+            index, corpus.queries, PathWeights.make(0.7, 0.3, 0.2), PARAMS
+        )
+    assert np.array_equal(np.asarray(res_new.ids), np.asarray(res_old.ids))
+    assert np.array_equal(
+        np.asarray(res_new.scores), np.asarray(res_old.scores)
+    )
+
+
+def test_pathweights_shim_warns_and_converts():
+    with pytest.deprecated_call():
+        spec = as_fusion_spec(PathWeights.three_path())
+    assert isinstance(spec, FusionSpec)
+    assert int(spec.mode) == WEIGHTED_SUM
+    with pytest.raises(TypeError):
+        as_fusion_spec((1.0, 1.0, 1.0))
+
+
+def test_stack_specs_preserves_mode_dtype_and_rejects_mixed_stats():
+    stacked = stack_specs([FusionSpec.three_path(), FusionSpec.rrf()])
+    assert stacked.mode.dtype == jnp.int32
+    assert stacked.mode.shape == (2,)
+    assert stacked.rrf_k.shape == (2,)
+    with pytest.raises(ValueError, match="mixed stats"):
+        stack_specs(
+            [FusionSpec.three_path(),
+             FusionSpec.minmax(stats=PathStats.identity())]
+        )
+
+
+# ---------------------------------------------------------------------------
+# Zero-recompile contract: mode/weights/rrf_k/stats are traced data.
+# ---------------------------------------------------------------------------
+
+
+def test_zero_retrace_across_fusion_params(corpus, index, stats):
+    """One compiled executable serves every (mode, weights, rrf_k) mix of a
+    pytree structure: after the first call, switching fusion parameters must
+    never retrace search_padded."""
+    search(index, corpus.queries, FusionSpec.weighted(1, 0, 0), PARAMS)
+    warm = search_padded_trace_count()
+    for spec in [
+        FusionSpec.three_path(),
+        FusionSpec.weighted(0.3, 0.9, 0.2, kg=2.0),
+        FusionSpec.rrf(),
+        FusionSpec.rrf(rrf_k=7.0),
+        FusionSpec.make("minmax", 1.0, 1.0, 1.0),
+        FusionSpec.make("zscore", 0.5, 1.0, 1.0),
+    ]:
+        search(index, corpus.queries, spec, PARAMS)
+    assert search_padded_trace_count() == warm, (
+        "switching fusion mode/weights/rrf_k retraced search_padded"
+    )
+    # stats=None -> stats=PathStats is a different pytree structure (one
+    # extra trace, by design); after that, stats VALUES are traced data too
+    search(index, corpus.queries, FusionSpec.minmax(stats=stats), PARAMS)
+    warm2 = search_padded_trace_count()
+    search(index, corpus.queries, FusionSpec.zscore(stats=stats), PARAMS)
+    search(
+        index, corpus.queries,
+        FusionSpec.minmax(stats=PathStats.identity()), PARAMS,
+    )
+    assert search_padded_trace_count() == warm2, (
+        "switching normalization stats values retraced search_padded"
+    )
+
+
+def test_service_exec_cache_excludes_fusion(corpus, index):
+    """The AOT executable cache is keyed on (index, bucket, params) ONLY:
+    requests with different fusion modes share one compiled executable."""
+    svc = HybridSearchService(
+        index, PARAMS,
+        ServiceConfig(batcher=BatcherConfig(
+            flush_size=4, max_batch=4, kw_cap=4, ent_cap=2,
+            flush_deadline_s=60.0,
+        )),
+        build_cfg=BUILD_CFG,
+    )
+    specs = [
+        FusionSpec.three_path(),
+        FusionSpec.rrf(),
+        FusionSpec.zscore(),
+        FusionSpec.weighted(0.2, 0.9, 0.1),
+    ]
+    pend = [
+        svc.submit(SearchRequest(query=corpus.queries[i], fusion=specs[i], k=5))
+        for i in range(4)
+    ]
+    svc.flush()
+    assert len(svc._exec_cache) == 1
+    # a second wave of mode-mixed requests reuses the same executable
+    pend += [
+        svc.submit(SearchRequest(
+            query=corpus.queries[i], fusion=specs[3 - i], k=5,
+        ))
+        for i in range(4)
+    ]
+    svc.flush()
+    assert len(svc._exec_cache) == 1, (
+        "fusion leaked into the executable-cache key"
+    )
+    for p in pend:
+        ids, _ = p.result()
+        assert (np.asarray(ids) >= 0).any()
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracles: RRF / minmax / zscore re-score the SAME final pool the
+# weighted traversal produced (weights fixed at 1,1,1 so the traversal —
+# and hence the pool — is identical across modes).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def final_pool(corpus, index):
+    """Recover the whole final candidate pool (ids + per-path raw scores)
+    by asking the weighted run for k = pool_size + kw_pool_size."""
+    full_k = PARAMS.pool_size + PARAMS.kw_pool_size
+    res = search(
+        index, corpus.queries, FusionSpec.three_path(),
+        dataclasses.replace(PARAMS, k=full_k),
+    )
+    ids = np.asarray(res.ids)
+    ps = np.asarray(res.path_scores)
+    return ids, ps, ids >= 0
+
+
+def _np_ranks(ps, valid):
+    """Reference ranks: rank_p(i) = #valid j with higher score (ties by
+    position) — the definition fusion.ranks_desc implements."""
+    m = ps.shape[0]
+    r = np.zeros_like(ps)
+    pos = np.arange(m)
+    for p in range(ps.shape[1]):
+        col = ps[:, p]
+        for i in range(m):
+            beats = ((col > col[i]) | ((col == col[i]) & (pos < i))) & valid
+            r[i, p] = beats.sum()
+    return r
+
+
+def _assert_matches_oracle(res, oracle, ids_full, k, atol=1e-4):
+    """Mode-run output == numpy top-k of the oracle scores, up to tie
+    order (random float scores make exact ties vanishingly rare)."""
+    for b in range(oracle.shape[0]):
+        order = np.argsort(-oracle[b], kind="stable")[:k]
+        got_scores = np.asarray(res.scores[b])
+        assert np.allclose(got_scores, oracle[b][order], atol=atol), (
+            f"row {b}: fused scores diverge from the numpy oracle"
+        )
+        assert set(np.asarray(res.ids[b]).tolist()) == set(
+            ids_full[b][order].tolist()
+        ), f"row {b}: fused top-{k} ids diverge from the numpy oracle"
+
+
+def test_rrf_matches_numpy_oracle(corpus, index, final_pool):
+    ids_full, ps_full, valid = final_pool
+    rrf_k = 13.0
+    res = search(index, corpus.queries, FusionSpec.rrf(rrf_k=rrf_k), PARAMS)
+    oracle = np.full(ids_full.shape, -np.inf, np.float32)
+    for b in range(ids_full.shape[0]):
+        ranks = _np_ranks(ps_full[b], valid[b])
+        scores = (1.0 / (rrf_k + 1.0 + ranks)).sum(-1)
+        oracle[b] = np.where(valid[b], scores, -np.inf)
+    _assert_matches_oracle(res, oracle, ids_full, PARAMS.k, atol=1e-6)
+
+
+def test_minmax_matches_numpy_oracle(corpus, index, stats, final_pool):
+    ids_full, ps_full, valid = final_pool
+    res = search(
+        index, corpus.queries, FusionSpec.minmax(stats=stats), PARAMS
+    )
+    minv = np.asarray(stats.minv, np.float32)
+    scale = np.maximum(np.asarray(stats.maxv) - minv, 1e-6).astype(np.float32)
+    scores = ((ps_full - minv) / scale).sum(-1)
+    oracle = np.where(valid, scores, -np.inf).astype(np.float32)
+    _assert_matches_oracle(res, oracle, ids_full, PARAMS.k)
+
+
+def test_zscore_matches_numpy_oracle(corpus, index, stats, final_pool):
+    ids_full, ps_full, valid = final_pool
+    res = search(
+        index, corpus.queries, FusionSpec.zscore(stats=stats), PARAMS
+    )
+    mean = np.asarray(stats.mean, np.float32)
+    std = np.maximum(np.asarray(stats.std), 1e-6).astype(np.float32)
+    scores = ((ps_full - mean) / std).sum(-1)
+    oracle = np.where(valid, scores, -np.inf).astype(np.float32)
+    _assert_matches_oracle(res, oracle, ids_full, PARAMS.k)
+
+
+def test_per_query_modes_match_whole_batch_runs(corpus, index, stats):
+    """A batched spec mixing modes row-wise returns, per row, exactly what
+    the whole-batch run of that row's mode returns."""
+    b = corpus.queries.dense.shape[0]
+    row_specs = [
+        [FusionSpec.three_path(), FusionSpec.rrf(),
+         FusionSpec.zscore(stats=stats), FusionSpec.minmax(stats=stats)][i % 4]
+        for i in range(b)
+    ]
+    resolved = [
+        s if s.stats is not None else dataclasses.replace(s, stats=stats)
+        for s in row_specs
+    ]
+    mixed = search(index, corpus.queries, stack_specs(resolved), PARAMS)
+    for i, spec in enumerate(resolved):
+        solo = search(index, corpus.queries, spec, PARAMS)
+        assert np.array_equal(
+            np.asarray(mixed.ids[i]), np.asarray(solo.ids[i])
+        ), f"row {i}: per-query mode result diverges from whole-batch run"
+
+
+# ---------------------------------------------------------------------------
+# Merge contract: RRF merges recompute ranks over the union — never compare
+# raw local scores (the regression the old raw-score merge had).
+# ---------------------------------------------------------------------------
+
+
+def test_merge_host_rrf_recomputes_ranks_over_union():
+    # two shards, dense-path-only RRF with rrf_k=0: local scores are
+    # 1/(1+local_rank), so BOTH shard winners carry the same raw score 1.0
+    ids_parts = [np.array([[0, 1]]), np.array([[2, 3]])]
+    score_parts = [
+        np.array([[1.0, 0.5]], np.float32),
+        np.array([[1.0, 0.5]], np.float32),
+    ]
+    path_parts = [
+        np.array([[[10.0, 0, 0], [9.0, 0, 0]]], np.float32),
+        np.array([[[8.0, 0, 0], [7.0, 0, 0]]], np.float32),
+    ]
+    spec = FusionSpec.rrf(1.0, 0.0, 0.0, rrf_k=0.0)
+    ids, scores, ps = merge_fused_host(
+        ids_parts, score_parts, path_parts, spec, 2
+    )
+    # union ranks on the dense path: doc0 < doc1 < doc2 < doc3, so the
+    # correct top-2 is [0, 1] with scores [1, 1/2]
+    assert ids[0].tolist() == [0, 1]
+    assert np.allclose(scores[0], [1.0, 0.5])
+    assert np.allclose(ps[0, :, 0], [10.0, 9.0])
+    # the old raw-score merge would have tie-picked [0, 2] — the corruption
+    # this contract prevents
+    naive = np.concatenate(score_parts, axis=1)
+    naive_ids = np.concatenate(ids_parts, axis=1)
+    naive_top = naive_ids[0][np.argsort(-naive[0], kind="stable")[:2]]
+    assert naive_top.tolist() == [0, 2]
+    assert naive_top.tolist() != ids[0].tolist()
+
+
+def test_merge_host_rrf_without_path_scores_raises():
+    ids_parts = [np.array([[0, 1]]), np.array([[2, 3]])]
+    score_parts = [np.ones((1, 2), np.float32), np.ones((1, 2), np.float32)]
+    with pytest.raises(ValueError, match="merge contract"):
+        merge_fused_host(ids_parts, score_parts, None, FusionSpec.rrf(), 2)
+
+
+def test_merge_host_weighted_matches_raw_score_merge():
+    """Non-RRF rows still merge by score (raw weighted sums ARE globally
+    comparable) — including legacy callers that pass spec=None."""
+    ids_parts = [np.array([[4, 2]]), np.array([[7, 5]])]
+    score_parts = [
+        np.array([[9.0, 3.0]], np.float32),
+        np.array([[8.0, 6.0]], np.float32),
+    ]
+    for spec in (None, FusionSpec.three_path()):
+        ids, scores, _ = merge_fused_host(
+            ids_parts, score_parts, None, spec, 3
+        )
+        assert ids[0].tolist() == [4, 7, 5]
+        assert np.allclose(scores[0], [9.0, 8.0, 6.0])
+
+
+# ---------------------------------------------------------------------------
+# Adaptive selector.
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_fusion_policy():
+    kw = np.array([[3, 8], [PAD_IDX, PAD_IDX],
+                   [PAD_IDX, PAD_IDX], [PAD_IDX, PAD_IDX]])
+    en = np.array([[PAD_IDX], [5], [PAD_IDX], [PAD_IDX]])
+    nnz = np.array([0, 0, 9, 1])
+    spec = adaptive_fusion(kw, en, nnz)
+    assert np.asarray(spec.mode).tolist() == [
+        RRF, WEIGHTED_SUM, ZSCORE, WEIGHTED_SUM
+    ]
+    # entity row turns the KG path on; the others leave it off
+    assert np.asarray(spec.weights.kg).tolist() == [0.0, 1.0, 0.0, 0.0]
+    assert spec.stats is None  # unpinned: resolves downstream
+    pinned = adaptive_fusion(kw, en, nnz, stats=PathStats.identity())
+    assert pinned.stats.minv.shape == (4, 3)
+    # deterministic: same inputs -> identical spec
+    again = adaptive_fusion(kw, en, nnz)
+    assert np.array_equal(np.asarray(again.mode), np.asarray(spec.mode))
