@@ -384,6 +384,67 @@ def check_fusion(bench: dict, baseline: dict, recall_tol: float) -> list[str]:
     return failures
 
 
+def check_obs(
+    bench: dict, baseline: dict, hit_rate_tol: float, snapshot_path: str
+) -> list[str]:
+    """Observability gate over the serving bench's ``obs`` section (written
+    by ``serving_bench.run`` from the live metrics registries):
+
+      * AOT executable-cache hit rate may not drop more than
+        ``hit_rate_tol`` (absolute) below the baseline — a falling hit rate
+        means request/bucket keys started missing the cache (recompiles on
+        the serving path);
+      * ``search_padded_traces`` across the steady section is gated
+        EXACTLY — retraces are deterministic, so any drift means the jit
+        cache key changed (zero-recompile contract, DESIGN.md §11);
+      * the METRICS_snapshot.json artifact must exist and carry the serving
+        series (the CI-uploaded exposition is the same data the gate read).
+    """
+    failures: list[str] = []
+    obs_b = bench.get("obs", {})
+    obs_base = baseline.get("obs", {})
+    if not obs_b or not obs_base:
+        return ["obs section missing from bench or baseline — "
+                + SERVING_REGEN_HINT]
+    cache_b = obs_b.get("executable_cache", {})
+    cache_base = obs_base.get("executable_cache", {})
+    floor = cache_base.get("hit_rate", 0.0) - hit_rate_tol
+    if cache_b.get("hit_rate", 0.0) < floor:
+        failures.append(
+            f"executable-cache hit rate dropped "
+            f"{cache_base.get('hit_rate', 0.0):.3f} -> "
+            f"{cache_b.get('hit_rate', 0.0):.3f} (below floor {floor:.3f}): "
+            "serving requests started missing the AOT cache"
+        )
+    traces_b = obs_b.get("search_padded_traces")
+    traces_base = obs_base.get("search_padded_traces")
+    if traces_b != traces_base:
+        failures.append(
+            f"search_padded retrace count drifted {traces_base} -> "
+            f"{traces_b}: the padded entry point's jit cache key changed "
+            "(zero-recompile contract, DESIGN.md §11)"
+        )
+    snap_p = pathlib.Path(snapshot_path)
+    if not snap_p.exists():
+        failures.append(
+            f"{snap_p} missing — serving_bench.run() writes it; the CI "
+            "artifact upload depends on it"
+        )
+    else:
+        try:
+            snap = json.loads(snap_p.read_text())
+        except ValueError:
+            snap = None
+        if not isinstance(snap, dict) or not any(
+            k.startswith("allanpoe_serving_") for k in snap
+        ):
+            failures.append(
+                f"{snap_p} is not a valid metrics snapshot (no "
+                "allanpoe_serving_* series)"
+            )
+    return failures
+
+
 def _load_pair(
     bench_path: str, base_path: str, hint: str
 ) -> tuple[dict, dict] | list[str]:
@@ -432,6 +493,30 @@ def run_gate(kind: str, cfg: dict) -> list[str]:
             print(f"[serving] {name}: {line}")
         return check_serving(
             bench, baseline, cfg.get("qps_tol", 0.50), cfg.get("p99_tol", 1.5)
+        )
+    if kind == "obs":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_serving.json"),
+            cfg.get("baseline", "results/BENCH_serving_baseline.json"),
+            SERVING_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            obs = data.get("obs", {})
+            cache = obs.get("executable_cache", {})
+            print(
+                f"[obs] {name}: cache_hits={cache.get('hits')} "
+                f"cache_misses={cache.get('misses')} "
+                f"hit_rate={cache.get('hit_rate', float('nan')):.3f} "
+                f"search_padded_traces={obs.get('search_padded_traces')}"
+            )
+        return check_obs(
+            bench,
+            baseline,
+            cfg.get("hit_rate_tol", 0.05),
+            cfg.get("snapshot", "results/METRICS_snapshot.json"),
         )
     if kind == "scale":
         pair = _load_pair(

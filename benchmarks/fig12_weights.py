@@ -31,11 +31,8 @@ import jax
 
 from repro.core import FusionSpec, build_index
 from repro.core.fusion import FUSION_MODES, PathStats
-from repro.core.search import (
-    SearchParams,
-    search,
-    search_padded_trace_count,
-)
+from repro.core.search import SearchParams, search
+from repro.obs.metrics import GLOBAL
 from repro.data.corpus import ndcg_at_k
 
 
@@ -116,7 +113,8 @@ def run_fusion_sweep(dry_run: bool = False) -> dict:
 
     recall = {}
     t0 = time.perf_counter()
-    traces0 = search_padded_trace_count()
+    _trace_metric = "allanpoe_core_search_padded_traces_total"
+    traces0 = GLOBAL.value(_trace_metric)
     for mode in FUSION_MODES:
         for mix_name, (wd, ws, wf) in WEIGHT_MIXES:
             spec = FusionSpec.make(mode, wd, ws, wf, stats=stats)
@@ -127,7 +125,8 @@ def run_fusion_sweep(dry_run: bool = False) -> dict:
     sweep_s = time.perf_counter() - t0
     # every cell after the first reuses the one compiled executable: fusion
     # mode/weights/stats are traced data, never part of the trace signature
-    traces = search_padded_trace_count() - traces0
+    # (counted by the process-wide registry series the obs gate also reads)
+    traces = int(GLOBAL.value(_trace_metric) - traces0)
 
     hybrid_best = max(
         recall[f"{m}.hybrid"] for m in FUSION_MODES

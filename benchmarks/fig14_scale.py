@@ -56,6 +56,7 @@ from repro.core.segment_pool import (
 from repro.core.usms import PathWeights
 from repro.data.syncorpus import SynCorpus, SynCorpusConfig
 from repro.ingest import IngestPipeline
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.batcher import BatcherConfig, _next_pow2
 from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
 from repro.serving.replica_router import (
@@ -199,20 +200,25 @@ def build_tier(
 
 def _measure(search_fn, query_batches, n_requests: int, batch: int):
     """Closed-loop batched client: warm one batch (compile), then drive
-    ``n_requests`` requests and record per-batch wall latencies."""
+    ``n_requests`` requests. Per-batch wall latencies stream into the same
+    fixed-bucket histogram the serving stack exposes (one local series, no
+    sample array), and percentiles come from its interpolated quantiles —
+    bench and production share one latency implementation."""
     np.asarray(search_fn(query_batches[0]).ids)  # warmup / compile
-    lats = []
+    hist = MetricsRegistry().histogram(
+        "fig14_batch_latency_seconds", "per-batch scatter-read wall time"
+    )
     done = 0
     i = 0
     t0 = time.perf_counter()
     while done < n_requests:
         t1 = time.perf_counter()
         np.asarray(search_fn(query_batches[i % len(query_batches)]).ids)
-        lats.append((time.perf_counter() - t1) * 1e3)
+        hist.observe(time.perf_counter() - t1)
         done += batch
         i += 1
     wall = time.perf_counter() - t0
-    return done / wall, np.asarray(lats)
+    return done / wall, hist.snapshot()
 
 
 def bench_scale(
@@ -272,8 +278,8 @@ def bench_scale(
                 "iso_qps": iso,
                 "model_qps": min(iso),
                 "tier_qps": tier_qps,
-                "tier_p50_ms": float(np.percentile(lats, 50)),
-                "tier_p99_ms": float(np.percentile(lats, 99)),
+                "tier_p50_ms": float(lats.quantile(0.5)) * 1e3,
+                "tier_p99_ms": float(lats.quantile(0.99)) * 1e3,
             }
         finally:
             tier.close()

@@ -39,6 +39,8 @@ import jax
 from repro.core import BuildConfig, FusionSpec, KnnConfig, PruneConfig, build_index
 from repro.core.search import SearchParams
 from repro.data.corpus import CorpusConfig, make_corpus
+from repro.obs.export import write_metrics_snapshot
+from repro.obs.metrics import GLOBAL
 from repro.serving.batcher import BatcherConfig, SearchRequest
 from repro.serving.hybrid_service import HybridSearchService, ServiceConfig
 
@@ -53,31 +55,33 @@ FUSION_MIXES = [
 
 
 def _drive(service, queries, n_requests, rng, k):
-    """Closed-loop client: submit the stream, recording per-request latency
-    (submit -> result delivery, i.e. queue wait + batch execution)."""
+    """Closed-loop client: submit the stream; returns (wall_s, latency
+    HistogramSnapshot). Latency percentiles come from the service's OWN
+    ``allanpoe_serving_request_latency_seconds`` histogram (arrival ->
+    result fulfillment) — the bench consumes the production metrics code
+    path instead of keeping a second stopwatch (DESIGN.md §12), and the
+    snapshot delta across the drive isolates this drive's requests from
+    any earlier warmup traffic."""
     b = queries.dense.shape[0]
-    t_submit = np.zeros(n_requests)
-    t_done = np.zeros(n_requests)
-    pendings = []
+    hist = service.metrics.get("allanpoe_serving_request_latency_seconds")
+    before = hist.snapshot()
     t0 = time.perf_counter()
     for i in range(n_requests):
-        req = SearchRequest(
-            query=queries[int(rng.integers(b))],
-            fusion=FUSION_MIXES[int(rng.integers(len(FUSION_MIXES)))][1],
-            k=k,
+        service.submit(
+            SearchRequest(
+                query=queries[int(rng.integers(b))],
+                fusion=FUSION_MIXES[int(rng.integers(len(FUSION_MIXES)))][1],
+                k=k,
+            )
         )
-        t_submit[i] = time.perf_counter()
-        pendings.append(service.submit(req))
-        # requests completed by a size-triggered flush get their finish time
-        for j in range(i + 1):
-            if t_done[j] == 0.0 and pendings[j].done:
-                t_done[j] = time.perf_counter()
     service.flush()
-    now = time.perf_counter()
-    t_done[t_done == 0.0] = now
-    wall = now - t0
-    lat_ms = (t_done[:n_requests] - t_submit[:n_requests]) * 1e3
-    return wall, lat_ms
+    wall = time.perf_counter() - t0
+    return wall, hist.snapshot().minus(before)
+
+
+def _p_ms(snap, q: float) -> float:
+    """Interpolated histogram quantile, in milliseconds."""
+    return float(snap.quantile(q)) * 1e3
 
 
 def _update_bench_json(section: str, payload: dict, out_dir: str = "results") -> None:
@@ -100,6 +104,8 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
     rows = []
     if dry_run:
         n_docs, n_requests = 512, 32
+    traces0 = GLOBAL.value("allanpoe_core_search_padded_traces_total")
+    services = []  # every service of this section, for the obs roll-up
     rng = np.random.default_rng(7)
     corpus = make_corpus(
         CorpusConfig(
@@ -135,22 +141,23 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
                 )
             ),
         )
+        services.append(service)
         # warmup: one full bucket through every shape so compile time is
         # excluded from the steady-state measurement
         _drive(service, corpus.queries, bucket, np.random.default_rng(0), params.k)
-        wall, lat_ms = _drive(service, corpus.queries, n_requests, rng, params.k)
+        wall, lat = _drive(service, corpus.queries, n_requests, rng, params.k)
         qps = n_requests / wall
+        p50, p99 = _p_ms(lat, 0.5), _p_ms(lat, 0.99)
         steady["buckets"][str(bucket)] = {
             "qps": qps,
-            "p50_ms": float(np.percentile(lat_ms, 50)),
-            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "p50_ms": p50,
+            "p99_ms": p99,
         }
         rows.append(
             (
                 f"serving.qps_bucket{bucket}",
                 wall * 1e6 / n_requests,
-                f"qps={qps:.0f};p50_ms={np.percentile(lat_ms, 50):.1f};"
-                f"p99_ms={np.percentile(lat_ms, 99):.1f};"
+                f"qps={qps:.0f};p50_ms={p50:.1f};p99_ms={p99:.1f};"
                 f"executables={len(service.executable_cache)};"
                 f"fusion_mixes={len(FUSION_MIXES)}",
             )
@@ -164,6 +171,7 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
         params,
         ServiceConfig(batcher=BatcherConfig(flush_size=32, max_batch=32)),
     )
+    services.append(service)
     _drive(service, corpus.queries, 32, np.random.default_rng(0), params.k)
     for name, spec in FUSION_MIXES:
         pend = []
@@ -183,6 +191,37 @@ def run(n_docs: int = 4096, n_requests: int = 256, dry_run: bool = False):
                 f"qps={32 / dt:.0f};executables={len(service.executable_cache)}",
             )
         )
+    # obs roll-up (the check_regression "obs" gate input): AOT executable
+    # cache behaviour and search_padded retraces across this section, read
+    # from the same registries the serving exposition renders
+    hits = sum(
+        int(s.metrics.value(
+            "allanpoe_serving_executable_cache_total", outcome="hit"
+        ))
+        for s in services
+    )
+    misses = sum(
+        int(s.metrics.value(
+            "allanpoe_serving_executable_cache_total", outcome="miss"
+        ))
+        for s in services
+    )
+    obs = {
+        "executable_cache": {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
+        },
+        "search_padded_traces": int(
+            GLOBAL.value("allanpoe_core_search_padded_traces_total") - traces0
+        ),
+    }
+    _update_bench_json("obs", obs)
+    write_metrics_snapshot(
+        "results/METRICS_snapshot.json",
+        *[s.metrics for s in services],
+        GLOBAL,
+    )
     return rows
 
 
@@ -254,7 +293,7 @@ def run_streaming(
 
     thread = threading.Thread(target=writer)
     thread.start()
-    wall, lat_ms = _drive(
+    wall, lat = _drive(
         service, corpus.queries, n_requests, np.random.default_rng(3), params.k
     )
     thread.join()
@@ -264,8 +303,7 @@ def run_streaming(
     docs_inserted = (insert_batches - 1) * insert_batch
     insert_docs_per_s = docs_inserted / max(sum(insert_s), 1e-9)
     qps = n_requests / wall
-    p50 = float(np.percentile(lat_ms, 50))
-    p99 = float(np.percentile(lat_ms, 99))
+    p50, p99 = _p_ms(lat, 0.5), _p_ms(lat, 0.99)
     _update_bench_json(
         "streaming",
         {
@@ -379,7 +417,7 @@ def run_compaction(
 
         thread = threading.Thread(target=compactor)
         thread.start()
-        wall, lat_ms = _drive(
+        wall, lat = _drive(
             service, corpus.queries, n_requests, np.random.default_rng(5),
             params.k,
         )
@@ -390,8 +428,7 @@ def run_compaction(
             service.executable_cache.get(k) is v for k, v in sealed_keys.items()
         )
         qps = n_requests / wall
-        p50 = float(np.percentile(lat_ms, 50))
-        p99 = float(np.percentile(lat_ms, 99))
+        p50, p99 = _p_ms(lat, 0.5), _p_ms(lat, 0.99)
         payload[mode] = {
             "search_qps": qps,
             "p50_ms": p50,

@@ -43,6 +43,7 @@ from repro.core.usms import (
     weighted_query,
 )
 from repro.kernels import ops
+from repro.obs.metrics import GLOBAL as _OBS
 
 NEG = -1e30
 INF_HOP = jnp.int32(10**6)
@@ -82,7 +83,7 @@ def resolve_params(params: SearchParams) -> SearchParams:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["ids", "scores", "expanded", "path_scores"],
-    meta_fields=[],
+    meta_fields=["down_replicas"],
 )
 @dataclasses.dataclass
 class SearchResult:
@@ -93,6 +94,10 @@ class SearchResult:
     # lexical], zero on PAD slots — every downstream merge recomputes RRF
     # ranks from these (the cross-segment/replica merge contract, §11)
     path_scores: Optional[jax.Array] = None
+    # replica names whose shards this result is missing (degraded scatter
+    # read, DESIGN.md §9); None for single-index results and healthy tiers.
+    # meta field: a hashable tuple, so tracing never specializes on it
+    down_replicas: Optional[tuple] = None
 
 
 def _entry_state(index: HybridIndex, q_entities: jax.Array, p: SearchParams):
@@ -370,13 +375,18 @@ def _search_one(
 
 # incremented once per trace of search_padded (the Python body only runs
 # when jit misses its cache) — the observable the shape-bucketing tests
-# assert on: retraces == compiles for this entry point
-_TRACE_COUNT = [0]
+# and the CI obs gate assert on: retraces == compiles for this entry point.
+# Lives in the process-wide metrics registry so benches and the serving
+# exposition read the same series (obs naming convention, DESIGN.md §12).
+_TRACE_COUNTER = _OBS.counter(
+    "allanpoe_core_search_padded_traces_total",
+    "search_padded (re)traces: jit cache misses for the padded entry point",
+)
 
 
 def search_padded_trace_count() -> int:
     """Process-wide number of ``search_padded`` (re)traces so far."""
-    return _TRACE_COUNT[0]
+    return int(_TRACE_COUNTER.total())
 
 
 @partial(jax.jit, static_argnames=("params",))
@@ -402,7 +412,7 @@ def search_padded(
     AOT-compiles per (bucket shape, SearchParams); ``search()`` is the
     convenience wrapper that fabricates the pad arrays.
     """
-    _TRACE_COUNT[0] += 1
+    _TRACE_COUNTER.inc()
     if isinstance(fusion, PathWeights):
         fusion = FusionSpec.from_weights(fusion)
     b = queries.dense.shape[0]

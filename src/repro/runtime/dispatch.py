@@ -8,6 +8,10 @@ calls dispatch op-by-op and are NOT counted, so legacy-path numbers are a
 *lower bound* and the pipeline/legacy ratio reported in BENCH_build.json is
 conservative.
 
+The counters are series in the process-wide metrics registry
+(``repro.obs.metrics.GLOBAL``), so the serving exposition and the benches
+read the same numbers this module's accessors report.
+
 Usage:
     with dispatch.track() as t:
         build_index(...)
@@ -17,43 +21,43 @@ Usage:
 from __future__ import annotations
 
 import contextlib
-import threading
 
-_lock = threading.Lock()
-_count = 0
-_built_rows = 0
+from repro.obs.metrics import GLOBAL as _OBS
+
+_DISPATCHES = _OBS.counter(
+    "allanpoe_runtime_dispatches_total",
+    "jitted-executable launches at instrumented build-path call sites",
+)
+_BUILD_ROWS = _OBS.counter(
+    "allanpoe_runtime_build_rows_total",
+    "corpus rows fed through graph (re)construction",
+)
 
 
 def tick(n: int = 1) -> None:
     """Record ``n`` jitted-executable launches (called at instrumented sites)."""
-    global _count
-    with _lock:
-        _count += n
+    _DISPATCHES.inc(n)
 
 
 def count() -> int:
-    return _count
+    return int(_DISPATCHES.total())
 
 
 def build_rows_tick(n: int) -> None:
     """Record ``n`` corpus rows entering a graph (re)build — the work measure
     incremental compaction is gated on: ``compact_incremental`` must grow
     this by O(grow segment), a full ``seal_and_compact`` by O(corpus)."""
-    global _built_rows
-    with _lock:
-        _built_rows += int(n)
+    _BUILD_ROWS.inc(int(n))
 
 
 def build_rows() -> int:
     """Total corpus rows fed through graph construction so far."""
-    return _built_rows
+    return int(_BUILD_ROWS.total())
 
 
 def reset() -> None:
-    global _count, _built_rows
-    with _lock:
-        _count = 0
-        _built_rows = 0
+    _DISPATCHES.reset()
+    _BUILD_ROWS.reset()
 
 
 class _Tracker:

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.fusion import FusionSpec, as_fusion_spec
 from repro.core.usms import FusedVectors, PathWeights
+from repro.obs.tracer import TraceContext
 
 
 class QueueFullError(RuntimeError):
@@ -201,6 +202,10 @@ class SearchRequest:
     entities: Optional[np.ndarray] = None
     tenant: Optional[str] = None  # admission-control quota key (None = global only)
     weights: Optional[PathWeights] = None  # deprecated: use fusion
+    # optional span-tree context: every serving stage this request passes
+    # through (admission, queue wait, batch phases, replica fan-out) appends
+    # spans here — see repro.obs.tracer and DESIGN.md §12
+    trace: Optional[TraceContext] = None
 
     def __post_init__(self):
         if self.fusion is not None and self.weights is not None:
@@ -290,7 +295,11 @@ class PendingResult:
 class _Entry:
     request: SearchRequest
     pending: PendingResult
-    arrival_s: float
+    arrival_s: float  # time.monotonic(): deadline clock (injectable in tests)
+    # time.perf_counter() at enqueue: queue-wait attribution start. A
+    # separate stamp because the tests inject `now` into the monotonic
+    # deadline clock, and spans/histograms must stay on the real clock.
+    arrival_perf: float = 0.0
 
 
 def _next_pow2(n: int) -> int:
@@ -333,7 +342,7 @@ class MicroBatcher:
                 f"request queue full ({self.cfg.max_queue}); shed load or retry"
             )
         now = time.monotonic() if now is None else now
-        self._queue.append(_Entry(request, pending, now))
+        self._queue.append(_Entry(request, pending, now, time.perf_counter()))
 
     def due(self, now: Optional[float] = None) -> bool:
         """True when a flush trigger has fired (size or deadline)."""

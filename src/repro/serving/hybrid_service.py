@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -59,17 +60,23 @@ from repro.core.build_pipeline import insert as index_insert
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.index import mark_deleted as index_mark_deleted
 from repro.core.fusion import (
+    FUSION_MODE_NAMES,
     FusionSpec,
     PathStats,
     as_fusion_spec,
     merge_fused_host,
     stack_specs,
 )
+from repro.obs.export import write_metrics_snapshot
+from repro.obs.metrics import GLOBAL as GLOBAL_METRICS
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import TraceContext, Tracer
 from repro.core.search import (
     SearchParams,
     SearchResult,
     resolve_params,
     search_padded,
+    search_padded_trace_count,
 )
 from repro.core.usms import (
     PAD_IDX,
@@ -96,20 +103,101 @@ class ServiceConfig:
     keep_stale_executables: bool = False  # keep executables for old index shapes
     admission: Optional[AdmissionConfig] = None  # token buckets before enqueue
     pump_interval_s: Optional[float] = None  # auto-start a poll() pump thread
+    # observability (DESIGN.md §12): share a registry/tracer across services
+    # by passing them in; None gives the service its own private ones
+    metrics: Optional[MetricsRegistry] = None
+    tracer: Optional[Tracer] = None
+    # periodic JSON snapshot flush from the pump thread (service registry +
+    # the process-global one); None disables
+    metrics_dump_path: Optional[str] = None
+    metrics_dump_interval_s: float = 10.0
 
 
-@dataclasses.dataclass
+def _bucket_label(bucket: Bucket) -> str:
+    return f"{bucket.batch}x{bucket.kw_width}x{bucket.ent_width}"
+
+
+def _fusion_mode_label(spec) -> str:
+    """Host-side fusion-mode label of a request spec ("batched" for (B,)
+    leaf specs — per-row modes are traced data the host never unpacks)."""
+    try:
+        mode = spec.mode
+        if np.ndim(mode) >= 1:
+            return "batched"
+        return FUSION_MODE_NAMES.get(int(mode), str(int(mode)))
+    except Exception:
+        return "unknown"
+
+
 class ServiceStats:
-    requests: int = 0  # admitted AND enqueued (rejects counted separately)
-    batches: int = 0
-    compiles: int = 0
-    padded_slots: int = 0  # wasted batch slots (padding overhead measure)
-    rejected_queue_full: int = 0  # bounded-queue backpressure rejects
-    rejected_admission: int = 0  # token-bucket (rate-policy) rejects
+    """Thread-safe service counters, backed by the metrics registry: every
+    increment goes through the registry's single lock (previously these
+    were bare ``+=`` from multiple submitter threads), and the legacy field
+    names read the live series. Labeled dimensions (fusion mode on
+    requests, bucket shape on batches, reject reason) are visible through
+    ``HybridSearchService.metrics``; the properties here report totals."""
+
+    def __init__(self, metrics: MetricsRegistry):
+        self._requests = metrics.counter(
+            "allanpoe_serving_requests_total",
+            "requests admitted and enqueued (rejects counted separately)",
+            labels=("mode",),
+        )
+        self._batches = metrics.counter(
+            "allanpoe_serving_batches_total",
+            "batches executed",
+            labels=("bucket",),
+        )
+        self._compiles = metrics.counter(
+            "allanpoe_serving_compiles_total",
+            "AOT executable compiles (cache misses that won the publish race)",
+        )
+        self._padded_slots = metrics.counter(
+            "allanpoe_serving_padded_slots_total",
+            "wasted batch slots (padding overhead measure)",
+        )
+        self._rejected = metrics.counter(
+            "allanpoe_serving_rejected_total",
+            "rejected submits by reason (admission = rate policy, "
+            "queue_full = backpressure)",
+            labels=("reason",),
+        )
+
+    @property
+    def requests(self) -> int:
+        return int(self._requests.total())
+
+    @property
+    def batches(self) -> int:
+        return int(self._batches.total())
+
+    @property
+    def compiles(self) -> int:
+        return int(self._compiles.total())
+
+    @property
+    def padded_slots(self) -> int:
+        return int(self._padded_slots.total())
+
+    @property
+    def rejected_queue_full(self) -> int:
+        return int(self._rejected.value(reason="queue_full"))
+
+    @property
+    def rejected_admission(self) -> int:
+        return int(self._rejected.value(reason="admission"))
 
     @property
     def rejected(self) -> int:
         return self.rejected_queue_full + self.rejected_admission
+
+    def __repr__(self) -> str:
+        return (
+            f"ServiceStats(requests={self.requests}, batches={self.batches}, "
+            f"compiles={self.compiles}, padded_slots={self.padded_slots}, "
+            f"rejected_queue_full={self.rejected_queue_full}, "
+            f"rejected_admission={self.rejected_admission})"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,7 +231,36 @@ class HybridSearchService:
         # layer — or a backend/flag change could alias a stale executable
         self.params = resolve_params(params)
         self.config = config or ServiceConfig()
-        self.stats = ServiceStats()
+        self.metrics = self.config.metrics or MetricsRegistry()
+        self.tracer = self.config.tracer or Tracer()
+        self.stats = ServiceStats(self.metrics)
+        # instruments beyond the legacy counters (naming: DESIGN.md §12)
+        self._m_exec_cache = self.metrics.counter(
+            "allanpoe_serving_executable_cache_total",
+            "AOT executable-cache lookups by outcome",
+            labels=("outcome",),
+        )
+        self._m_group_dispatch = self.metrics.counter(
+            "allanpoe_serving_group_dispatches_total",
+            "pool-read dispatches per segment shape group",
+            labels=("group",),
+        )
+        self._m_queue_depth = self.metrics.gauge(
+            "allanpoe_serving_queue_depth", "pending requests in the batcher"
+        )
+        self._m_queue_wait = self.metrics.histogram(
+            "allanpoe_serving_queue_wait_seconds",
+            "enqueue -> batch start per request",
+        )
+        self._m_latency = self.metrics.histogram(
+            "allanpoe_serving_request_latency_seconds",
+            "enqueue -> result delivery per request (the bench p50/p99 source)",
+        )
+        self._m_batch_exec = self.metrics.histogram(
+            "allanpoe_serving_batch_exec_seconds",
+            "assemble -> deliver per batch",
+            labels=("bucket",),
+        )
         self._snap = _Snapshot(index, version=0)
         self._write_lock = threading.Lock()  # serializes snapshot writers
         # queue lock: enqueue/take_ready only, never held across a batch run,
@@ -208,6 +325,7 @@ class HybridSearchService:
             stop = self._pump_stop
 
             def loop():
+                last_dump = time.monotonic()
                 while not stop.wait(interval):
                     try:
                         self.poll()
@@ -215,11 +333,31 @@ class HybridSearchService:
                         # the failing batch already failed its own waiters
                         # (_run_batch); the pump must keep pumping for the rest
                         pass
+                    # periodic exposition flush rides the pump thread: the
+                    # snapshot is the same registry the benches read
+                    if (
+                        self.config.metrics_dump_path is not None
+                        and time.monotonic() - last_dump
+                        >= self.config.metrics_dump_interval_s
+                    ):
+                        last_dump = time.monotonic()
+                        try:
+                            self.dump_metrics()
+                        except Exception:
+                            pass  # a full disk must not kill the pump
 
             self._pump_thread = threading.Thread(
                 target=loop, name="hybrid-service-pump", daemon=True
             )
             self._pump_thread.start()
+
+    def dump_metrics(self, path=None) -> dict:
+        """Write the merged (service + process-global) metrics snapshot to
+        ``path`` (default ``config.metrics_dump_path``); returns the dict."""
+        path = self.config.metrics_dump_path if path is None else path
+        if path is None:
+            raise ValueError("no metrics dump path (arg or config)")
+        return write_metrics_snapshot(path, self.metrics, GLOBAL_METRICS)
 
     def stop_pump(self, timeout_s: float = 5.0) -> None:
         with self._pump_lock:
@@ -228,6 +366,11 @@ class HybridSearchService:
                 self._pump_stop.set()
                 thread.join(timeout=timeout_s)
                 self._pump_thread = None
+                if self.config.metrics_dump_path is not None:
+                    try:
+                        self.dump_metrics()  # final flush on clean shutdown
+                    except Exception:
+                        pass
         # clean shutdown extends to the attached router's background merge
         # worker: an in-flight merge finishes its atomic publish, then the
         # worker exits before this returns
@@ -403,17 +546,22 @@ class HybridSearchService:
         return self._exec_cache
 
     def _compile_cached(self, key: tuple, lower):
+        """(executable, cache_hit) for a cache key, compiling on miss. Every
+        lookup lands in the ``executable_cache_total{outcome}`` counter — the
+        hit-rate series the CI obs gate tracks."""
         with self._cache_lock:
             exe = self._exec_cache.get(key)
         if exe is not None:
-            return exe
+            self._m_exec_cache.inc(outcome="hit")
+            return exe, True
+        self._m_exec_cache.inc(outcome="miss")
         # compile outside the lock: a cold bucket must not stall warm-bucket
         # batches or snapshot publishes behind a multi-second XLA compile
         exe = lower().compile()
         with self._cache_lock:
             winner = self._exec_cache.get(key)
             if winner is not None:
-                return winner  # another thread compiled the same bucket first
+                return winner, False  # another thread compiled the bucket first
             # a writer may have swapped the snapshot while we compiled;
             # don't re-add an executable its prune already evicted
             if (
@@ -421,8 +569,8 @@ class HybridSearchService:
                 or key[0] in self._valid_index_keys(self._snap.index)
             ):
                 self._exec_cache[key] = exe
-            self.stats.compiles += 1
-        return exe
+        self.stats._compiles.inc()
+        return exe, False
 
     def _get_executable(self, snap: _Snapshot, bucket: Bucket, args):
         key = (self._index_key(snap.index), bucket, self.params)
@@ -443,6 +591,7 @@ class HybridSearchService:
         return self._local_fn
 
     def _get_group_executable(self, group: SegmentedIndex, bucket: Bucket, args):
+        """(executable, cache_hit) for one pool shape group."""
         key = (group_shape_key(group), bucket, self.params)
         fn = self._group_runner(group)
         return self._compile_cached(key, lambda: fn.lower(group, *args))
@@ -482,12 +631,19 @@ class HybridSearchService:
         ``QueueFullError`` on a bounded-queue reject (backpressure) — the
         two are counted separately in ``stats``."""
         self._validate(request)
+        ctx = request.trace
+        t_sub = time.perf_counter()
         pending = PendingResult(service=self)
         with self._queue_lock:
             if self._admission is not None and not self._admission.try_admit(
                 request.tenant
             ):
-                self.stats.rejected_admission += 1
+                self.stats._rejected.inc(reason="admission")
+                if ctx is not None:
+                    ctx.add_span(
+                        "admission", t_sub, time.perf_counter(),
+                        outcome="rejected_admission", tenant=request.tenant,
+                    )
                 raise AdmissionError(
                     f"token-bucket admission rejected request "
                     f"(tenant={request.tenant!r}); shed load or retry later"
@@ -499,9 +655,20 @@ class HybridSearchService:
                 # tokens back so backpressure rejects don't drain quota
                 if self._admission is not None:
                     self._admission.refund(request.tenant)
-                self.stats.rejected_queue_full += 1
+                self.stats._rejected.inc(reason="queue_full")
+                if ctx is not None:
+                    ctx.add_span(
+                        "admission", t_sub, time.perf_counter(),
+                        outcome="rejected_queue_full", tenant=request.tenant,
+                    )
                 raise
-            self.stats.requests += 1
+            self.stats._requests.inc(mode=_fusion_mode_label(request.fusion))
+            self._m_queue_depth.set(len(self._batcher))
+        if ctx is not None:
+            ctx.add_span(
+                "admission", t_sub, time.perf_counter(),
+                outcome="admitted", tenant=request.tenant,
+            )
         try:
             self._drain()
         except Exception:
@@ -525,6 +692,7 @@ class HybridSearchService:
     def _drain(self, force: bool = False) -> int:
         with self._queue_lock:
             ready = self._batcher.take_ready(force=force)
+            self._m_queue_depth.set(len(self._batcher))
         # entries are dequeued: run each batch outside the queue lock so
         # concurrent submits only wait for the enqueue, not the execution.
         # Every dequeued batch must resolve its waiters even if an earlier
@@ -552,7 +720,9 @@ class HybridSearchService:
         raises inside ``merge_fused_host``."""
         return merge_fused_host(ids_parts, score_parts, path_parts, spec, k)
 
-    def _merge_grow(self, snap: _Snapshot, args, ids, scores, ps, expanded):
+    def _merge_grow(
+        self, snap: _Snapshot, args, ids, scores, ps, expanded, phases=None
+    ):
         """Phase two of a segmented read: search the grow segment and merge
         per-row top-k with the sealed results in global-id space.
 
@@ -561,6 +731,8 @@ class HybridSearchService:
         ``executable_cache`` (sealed segments) is never touched. Tombstones
         need no extra filtering here: both phases already filter on their
         own ``alive`` masks."""
+        t0 = time.perf_counter()
+        traces0 = search_padded_trace_count()
         gres = search_padded(snap.grow, *args, self.params)
         g_local = np.asarray(gres.ids)
         gids_map = np.asarray(snap.grow_gids)
@@ -580,19 +752,31 @@ class HybridSearchService:
             path_parts=[ps, g_ps],
             spec=args[1],
         )
+        if phases is not None:
+            phases.append((
+                "grow_merge", t0, time.perf_counter(),
+                {"grow_rows": int(snap.grow.n),
+                 "retraced": search_padded_trace_count() > traces0},
+            ))
         return m_ids, m_scores, m_ps, expanded + np.asarray(gres.expanded)
 
-    def _run_pool(self, pool: SegmentPool, bucket: Bucket, args):
+    def _run_pool(self, pool: SegmentPool, bucket: Bucket, args, phases=None):
         """Pool read: one cached executable per shape group, merged per-row
         in global-id space. Groups untouched by a compaction keep hitting
         their existing executables."""
+        t0 = time.perf_counter()
+        pairs = [
+            self._get_group_executable(group, bucket, args)
+            for group in pool.groups
+        ]
+        t1 = time.perf_counter()
         # dispatch EVERY group before blocking on any result: jax executes
         # asynchronously, so the groups' device work overlaps instead of
         # paying the sum of per-group latencies
-        results = [
-            self._get_group_executable(group, bucket, args)(group, *args)
-            for group in pool.groups
-        ]
+        results = []
+        for gi, (group, (exe, _)) in enumerate(zip(pool.groups, pairs)):
+            self._m_group_dispatch.inc(group=gi)
+            results.append(exe(group, *args))
         ids_parts, score_parts, ps_parts = [], [], []
         expanded = np.int64(0)
         for res in results:
@@ -600,32 +784,63 @@ class HybridSearchService:
             score_parts.append(np.asarray(res.scores))
             ps_parts.append(np.asarray(res.path_scores))
             expanded = expanded + np.asarray(res.expanded)
+        t2 = time.perf_counter()
+        if phases is not None:
+            phases.append((
+                "executable_lookup", t0, t1,
+                {"hit": all(h for _, h in pairs), "groups": len(pairs)},
+            ))
+            phases.append(
+                ("device_dispatch", t1, t2, {"groups": len(pairs)})
+            )
         if len(ids_parts) == 1:
             return ids_parts[0], score_parts[0], ps_parts[0], expanded
         k = ids_parts[0].shape[1]
         m_ids, m_scores, m_ps = self._merge_host(
             ids_parts, score_parts, k, path_parts=ps_parts, spec=args[1]
         )
+        if phases is not None:
+            phases.append((
+                "fusion_rescore", t2, time.perf_counter(),
+                {"parts": len(ids_parts), "site": "pool_merge"},
+            ))
         return m_ids, m_scores, m_ps, expanded
 
     def _run_batch(self, bucket: Bucket, entries) -> None:
+        # batch phases are timed once and attributed to every query in the
+        # batch: (name, t0, t1, attrs) tuples become spans on each request's
+        # TraceContext (DESIGN.md §12 span taxonomy)
+        t_batch0 = time.perf_counter()
+        blabel = _bucket_label(bucket)
+        phases: list[tuple[str, float, float, dict]] = []
         try:
             snap = self._snap  # one snapshot for the whole batch
+            t0 = time.perf_counter()
             args = self._assemble(bucket, entries)
+            phases.append((
+                "batch_assembly", t0, time.perf_counter(),
+                {"bucket": blabel, "requests": len(entries)},
+            ))
             if isinstance(snap.index, SegmentPool):
                 ids, scores, ps, expanded = self._run_pool(
-                    snap.index, bucket, args
+                    snap.index, bucket, args, phases
                 )
             else:
-                exe = self._get_executable(snap, bucket, args)
+                t0 = time.perf_counter()
+                exe, hit = self._get_executable(snap, bucket, args)
+                t1 = time.perf_counter()
+                phases.append(("executable_lookup", t0, t1, {"hit": hit}))
                 res = exe(snap.index, *args)
                 ids = np.asarray(res.ids)
                 scores = np.asarray(res.scores)
                 ps = np.asarray(res.path_scores)
                 expanded = np.asarray(res.expanded)
+                phases.append(
+                    ("device_dispatch", t1, time.perf_counter(), {})
+                )
             if snap.grow is not None:
                 ids, scores, ps, expanded = self._merge_grow(
-                    snap, args, ids, scores, ps, expanded
+                    snap, args, ids, scores, ps, expanded, phases
                 )
         except Exception as err:
             # entries are already dequeued: propagate to every waiter so no
@@ -640,9 +855,20 @@ class HybridSearchService:
                 int(expanded[i]),
                 path_scores=ps[i, : e.request.k],
             )
-        with self._cache_lock:
-            self.stats.batches += 1
-            self.stats.padded_slots += bucket.batch - len(entries)
+        t_done = time.perf_counter()
+        for e in entries:
+            self._m_queue_wait.observe(t_batch0 - e.arrival_perf)
+            self._m_latency.observe(t_done - e.arrival_perf)
+            ctx = e.request.trace
+            if ctx is not None:
+                ctx.add_span(
+                    "queue_wait", e.arrival_perf, t_batch0, bucket=blabel
+                )
+                for name, p0, p1, attrs in phases:
+                    ctx.add_span(name, p0, p1, **attrs)
+        self._m_batch_exec.observe(t_done - t_batch0, bucket=blabel)
+        self.stats._batches.inc(bucket=blabel)
+        self.stats._padded_slots.inc(bucket.batch - len(entries))
 
     def _assemble(self, bucket: Bucket, entries):
         """Pack requests into the bucket's fixed shapes. Pad rows carry the
@@ -694,6 +920,7 @@ class HybridSearchService:
         keywords: Optional[np.ndarray] = None,
         entities: Optional[np.ndarray] = None,
         k: Optional[int] = None,
+        trace: Optional[TraceContext] = None,
     ) -> SearchResult:
         """Submit a whole batch and flush: per-row requests (row i of
         ``queries`` with fusion[i] if a sequence / batched-leaf spec was
@@ -735,6 +962,7 @@ class HybridSearchService:
                 k=k,
                 keywords=row_ids(keywords, i),
                 entities=row_ids(entities, i),
+                trace=trace,
             )
             for i in range(b)
         ]

@@ -24,6 +24,7 @@ with strings, not hand-built FusedVectors.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -38,6 +39,7 @@ from repro.core.fusion import (
 from repro.core.index import HybridIndex
 from repro.core.search import SearchParams, SearchResult, resolve_params, search
 from repro.core.usms import FusedVectors, PathWeights
+from repro.obs.tracer import TraceContext
 from repro.serving.engine import ServingEngine
 from repro.serving.hybrid_service import HybridSearchService
 
@@ -111,22 +113,32 @@ class RagPipeline:
         keywords: Optional[jax.Array] = None,
         entities: Optional[jax.Array] = None,
         fusion: Optional[FusionSpec] = None,
+        trace: Optional[TraceContext] = None,
     ) -> SearchResult:
         spec = self.cfg.fusion if fusion is None else as_fusion_spec(fusion)
         if self.service is not None:
             # mirror the direct path's semantics: keyword/entity operands are
             # inert when the params disable those paths, not request errors
+            # (the trace context rides the SearchRequests, so the span tree
+            # gains the service's admission/queue/dispatch phases)
             return self.service.search(
                 queries, spec,
                 keywords=keywords if self.service.params.use_keywords else None,
                 entities=entities if self.service.params.use_kg else None,
                 k=self.cfg.top_k,
+                trace=trace,
             )
         params = dataclasses.replace(self.cfg.search, k=self.cfg.top_k)
-        return search(
+        t0 = time.perf_counter()
+        res = search(
             self.index, queries, spec, params,
             keywords=keywords, entities=entities,
         )
+        if trace is not None:
+            trace.add_span(
+                "retrieval", t0, time.perf_counter(), path="direct"
+            )
+        return res
 
     def _adaptive_spec(self, enc) -> FusionSpec:
         """Per-query fusion selection from the analyzer's view of the query
@@ -142,7 +154,9 @@ class RagPipeline:
             stats=stats,
         )
 
-    def retrieve_text(self, texts) -> SearchResult:
+    def retrieve_text(
+        self, texts, *, trace: Optional[TraceContext] = None
+    ) -> SearchResult:
         """Raw query strings -> hybrid retrieval via the attached ingestion
         analyzer (query SparseVec + required keywords + query entities).
         With ``cfg.adaptive`` the fusion mode/weights are selected per query
@@ -151,16 +165,23 @@ class RagPipeline:
             raise ValueError(
                 "retrieve_text requires an IngestPipeline at construction"
             )
+        t0 = time.perf_counter()
         enc = self.ingest.encode_queries(list(texts))
+        if trace is not None:
+            trace.add_span(
+                "query_encode", t0, time.perf_counter(), queries=len(texts)
+            )
         return self.retrieve(
             enc.vectors,
             keywords=jnp.asarray(enc.keywords),
             entities=jnp.asarray(enc.entities),
             fusion=self._adaptive_spec(enc) if self.cfg.adaptive else None,
+            trace=trace,
         )
 
     def answer_text(
-        self, texts, prompts: jax.Array, n_tokens: int
+        self, texts, prompts: jax.Array, n_tokens: int,
+        *, trace: Optional[TraceContext] = None,
     ) -> tuple[jax.Array, SearchResult]:
         """Text-query counterpart of ``answer`` (same retrieval-to-
         generation tail; only the query encoding differs)."""
@@ -174,6 +195,7 @@ class RagPipeline:
             keywords=jnp.asarray(enc.keywords),
             entities=jnp.asarray(enc.entities),
             fusion=self._adaptive_spec(enc) if self.cfg.adaptive else None,
+            trace=trace,
         )
 
     def build_context(self, result: SearchResult) -> jax.Array:
@@ -192,11 +214,20 @@ class RagPipeline:
         keywords: Optional[jax.Array] = None,
         entities: Optional[jax.Array] = None,
         fusion: Optional[FusionSpec] = None,
+        trace: Optional[TraceContext] = None,
     ) -> tuple[jax.Array, SearchResult]:
         res = self.retrieve(
-            queries, keywords=keywords, entities=entities, fusion=fusion
+            queries, keywords=keywords, entities=entities, fusion=fusion,
+            trace=trace,
         )
+        t0 = time.perf_counter()
         ctx = self.build_context(res)
         full_prompt = jnp.concatenate([ctx, prompts], axis=1)
+        t1 = time.perf_counter()
         out = self.engine.generate(full_prompt, n_tokens)
+        if trace is not None:
+            trace.add_span("context_assembly", t0, t1, top_k=self.cfg.top_k)
+            trace.add_span(
+                "generation", t1, time.perf_counter(), n_tokens=n_tokens
+            )
         return out, res

@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence, Union
 
@@ -64,6 +65,8 @@ from repro.core.fusion import (
 )
 from repro.core.search import SearchResult
 from repro.core.usms import FusedVectors, PathWeights
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import TraceContext, Tracer
 from repro.serving.hybrid_service import HybridSearchService
 from repro.serving.segment_router import SegmentRouter
 
@@ -122,14 +125,81 @@ class ReplicaTierConfig:
             raise ValueError("virtual_nodes must be >= 1")
 
 
-@dataclasses.dataclass
 class ReplicaTierStats:
-    inserts: int = 0
-    inserted_docs: int = 0
-    deletes: int = 0
-    searches: int = 0
-    partial_searches: int = 0  # scatter reads served with >=1 replica down
-    dispatched: Optional[list[int]] = None  # per-replica search dispatches
+    """Registry-backed view of the tier's counters (``allanpoe_replica_*``
+    series in the router's metrics registry). Per-replica series are labeled
+    with the replica NAME — stable across mark_down/mark_up — while the
+    ``dispatched`` property re-exposes them as the positional list the
+    original dataclass carried."""
+
+    def __init__(self, metrics: MetricsRegistry, names: Sequence[str]):
+        self._names = list(names)
+        self._inserts = metrics.counter(
+            "allanpoe_replica_inserts_total", "tier insert() batches"
+        )
+        self._inserted_docs = metrics.counter(
+            "allanpoe_replica_inserted_docs_total",
+            "documents routed to home replicas",
+        )
+        self._deletes = metrics.counter(
+            "allanpoe_replica_deletes_total", "tier delete() calls"
+        )
+        self._searches = metrics.counter(
+            "allanpoe_replica_searches_total", "tier search() calls"
+        )
+        self._partial = metrics.counter(
+            "allanpoe_replica_partial_searches_total",
+            "scatter reads served with >=1 replica down",
+        )
+        self._dispatched = metrics.counter(
+            "allanpoe_replica_dispatched_total",
+            "search dispatches per replica",
+            labels=("replica",),
+        )
+        self._degraded = metrics.counter(
+            "allanpoe_replica_degraded_reads_total",
+            "reads that were missing this replica's shard (it was down)",
+            labels=("replica",),
+        )
+
+    @property
+    def inserts(self) -> int:
+        return int(self._inserts.total())
+
+    @property
+    def inserted_docs(self) -> int:
+        return int(self._inserted_docs.total())
+
+    @property
+    def deletes(self) -> int:
+        return int(self._deletes.total())
+
+    @property
+    def searches(self) -> int:
+        return int(self._searches.total())
+
+    @property
+    def partial_searches(self) -> int:
+        return int(self._partial.total())
+
+    @property
+    def dispatched(self) -> list[int]:
+        return [
+            int(self._dispatched.value(replica=n)) for n in self._names
+        ]
+
+    def degraded_reads(self, name: str) -> int:
+        """Reads served without this replica's shard while it was down."""
+        return int(self._degraded.value(replica=name))
+
+    def __repr__(self) -> str:
+        return (
+            f"ReplicaTierStats(inserts={self.inserts}, "
+            f"inserted_docs={self.inserted_docs}, deletes={self.deletes}, "
+            f"searches={self.searches}, "
+            f"partial_searches={self.partial_searches}, "
+            f"dispatched={self.dispatched})"
+        )
 
 
 class Replica:
@@ -158,6 +228,9 @@ class ReplicaRouter:
         self,
         replicas: Sequence[Union[Replica, HybridSearchService]],
         config: Optional[ReplicaTierConfig] = None,
+        *,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         if not replicas:
             raise ValueError("a replica tier needs at least one replica")
@@ -169,7 +242,9 @@ class ReplicaRouter:
         names = [r.name for r in self.replicas]
         if len(set(names)) != len(names):
             raise ValueError(f"replica names must be unique, got {names}")
-        self.stats = ReplicaTierStats(dispatched=[0] * len(self.replicas))
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer = tracer or Tracer()
+        self.stats = ReplicaTierStats(self.metrics, names)
         self._lock = threading.Lock()  # ring + outstanding counters
         self._ring: list[tuple[int, int]] = []
         self._rebuild_ring()
@@ -290,8 +365,8 @@ class ReplicaRouter:
             r.router.insert(
                 sub, key=key, new_doc_entities=ents, global_ids=gids[rows]
             )
-        self.stats.inserts += 1
-        self.stats.inserted_docs += n
+        self.stats._inserts.inc()
+        self.stats._inserted_docs.inc(n)
         return gids
 
     def delete(self, global_ids) -> int:
@@ -305,7 +380,7 @@ class ReplicaRouter:
             homes = self.homes_of(ids)
             for i in np.unique(homes):
                 self.replicas[int(i)].router.delete(ids[homes == i])
-        self.stats.deletes += 1
+        self.stats._deletes.inc()
         return int(ids.size)
 
     # -- reads --------------------------------------------------------------
@@ -316,18 +391,24 @@ class ReplicaRouter:
         with self._lock:
             return sorted(up, key=lambda i: (self.replicas[i].outstanding, i))
 
-    def _member_search(self, i: int, queries, fusion, kw, en, k):
+    def _member_search(self, i: int, queries, fusion, kw, en, k, trace=None):
         r = self.replicas[i]
         with self._lock:
             r.outstanding += 1
-            self.stats.dispatched[i] += 1
+        self.stats._dispatched.inc(replica=r.name)
+        t0 = time.perf_counter()
         try:
             return r.service.search(
-                queries, fusion, keywords=kw, entities=en, k=k
+                queries, fusion, keywords=kw, entities=en, k=k, trace=trace
             )
         finally:
             with self._lock:
                 r.outstanding -= 1
+            if trace is not None:
+                trace.add_span(
+                    "replica_dispatch", t0, time.perf_counter(),
+                    replica=r.name,
+                )
 
     def path_stats(self) -> PathStats:
         """ONE tier-wide normalization-stats object: per-replica running
@@ -373,11 +454,18 @@ class ReplicaRouter:
         keywords: Optional[np.ndarray] = None,
         entities: Optional[np.ndarray] = None,
         k: Optional[int] = None,
+        trace: Optional[TraceContext] = None,
     ) -> SearchResult:
         """Batched read. Hash tiers scatter to every up replica and merge
         per-row top-k in global-id space; mirror tiers dispatch the batch
         to the single least-loaded replica. ``weights=`` is the deprecated
-        ``PathWeights`` spelling."""
+        ``PathWeights`` spelling.
+
+        Degraded scatter reads (>=1 replica down) are recorded three ways:
+        in the result (``SearchResult.down_replicas``), as the labeled
+        counter ``allanpoe_replica_degraded_reads_total{replica}``, and as a
+        ``down_replicas`` annotation on ``trace`` — all BEFORE the optional
+        ``fail_on_partial`` raise, so the audit trail survives the error."""
         if fusion is not None and weights is not None:
             raise ValueError("pass fusion= or (deprecated) weights=, not both")
         if fusion is None:
@@ -388,41 +476,62 @@ class ReplicaRouter:
         up = self._dispatch_order(self._up())
         if not up:
             raise RuntimeError("no replica is up")
-        self.stats.searches += 1
+        self.stats._searches.inc()
         if self.config.placement == "mirror":
             return self._member_search(
-                up[0], queries, spec, keywords, entities, k
+                up[0], queries, spec, keywords, entities, k, trace
             )
-        if len(up) < len(self.replicas):
-            self.stats.partial_searches += 1
+        down = tuple(r.name for r in self.replicas if not r.up)
+        if down:
+            self.stats._partial.inc()
+            for name in down:
+                self.stats._degraded.inc(replica=name)
+            if trace is not None:
+                trace.annotate(down_replicas=list(down))
             if self.config.fail_on_partial:
-                down = [r.name for r in self.replicas if not r.up]
                 raise RuntimeError(
-                    f"replicas down ({down}) and fail_on_partial is set"
+                    f"replicas down ({list(down)}) and fail_on_partial is set"
                 )
-        if len(up) == 1:
-            return self._member_search(
-                up[0], queries, spec, keywords, entities, k
-            )
+        # a lone survivor still flows through the parts path below so
+        # degraded reads carry the same span/merge metadata as full scatters
+        t_sc = time.perf_counter()
         futures = [
             (
                 i,
                 self._pool.submit(
                     self._member_search, i, queries, spec,
-                    keywords, entities, k,
+                    keywords, entities, k, trace,
                 ),
             )
             for i in up
         ]
         parts = [f.result() for _, f in futures]
-        k_out = int(np.asarray(parts[0].ids).shape[1])
-        m_ids, m_scores, m_ps = merge_fused_host(
-            [np.asarray(p.ids) for p in parts],
-            [np.asarray(p.scores) for p in parts],
-            [np.asarray(p.path_scores) for p in parts],
-            spec,
-            k_out,
-        )
+        t_gather = time.perf_counter()
+        if trace is not None:
+            trace.add_span(
+                "scatter_gather", t_sc, t_gather,
+                replicas=len(up), down=list(down),
+            )
+        if len(parts) == 1:
+            # identity merge: re-ranking a single shard's rows could reorder
+            # ties, violating the one-replica == one-service equivalence
+            m_ids = np.asarray(parts[0].ids)
+            m_scores = np.asarray(parts[0].scores)
+            m_ps = np.asarray(parts[0].path_scores)
+        else:
+            k_out = int(np.asarray(parts[0].ids).shape[1])
+            m_ids, m_scores, m_ps = merge_fused_host(
+                [np.asarray(p.ids) for p in parts],
+                [np.asarray(p.scores) for p in parts],
+                [np.asarray(p.path_scores) for p in parts],
+                spec,
+                k_out,
+            )
+        if trace is not None:
+            trace.add_span(
+                "fusion_rescore", t_gather, time.perf_counter(),
+                parts=len(parts), site="replica_merge",
+            )
         expanded = np.sum(
             [np.asarray(p.expanded) for p in parts], axis=0
         )
@@ -431,6 +540,7 @@ class ReplicaRouter:
             scores=jnp.asarray(m_scores),
             expanded=jnp.asarray(expanded, jnp.int32),
             path_scores=jnp.asarray(m_ps),
+            down_replicas=down or None,
         )
 
     # -- introspection ------------------------------------------------------

@@ -100,6 +100,7 @@ from repro.core.segment_pool import (
     widen_entities,
 )
 from repro.core.usms import PAD_IDX, FusedVectors
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.batcher import _next_pow2
 from repro.serving.hybrid_service import HybridSearchService
 
@@ -156,18 +157,96 @@ pad_grow_to_capacity = pad_index_rows
 slice_grow_rows = slice_index_rows
 
 
-@dataclasses.dataclass
 class RouterStats:
-    inserts: int = 0  # insert() calls absorbed by the grow segment
-    inserted_docs: int = 0
-    deletes: int = 0  # delete() calls
-    deleted_sealed: int = 0  # ids tombstoned in sealed segments
-    deleted_grow: int = 0  # ids tombstoned in the grow segment
-    unknown_deletes: int = 0  # ids found nowhere (already compacted away?)
-    compactions: int = 0  # all compactions (full + incremental)
-    incremental_compactions: int = 0
-    merges: int = 0  # background segment merges
-    autocheckpoints: int = 0  # pool checkpoints written by the router
+    """Registry-backed view of the router's write-path counters.
+
+    Every field is a ``allanpoe_router_*`` series in the owning service's
+    metrics registry, so increments are atomic under the registry lock and
+    the numbers in ``MetricsRegistry.render()`` are the numbers these
+    properties report — there is no second bookkeeping path."""
+
+    def __init__(self, metrics: MetricsRegistry):
+        self._inserts = metrics.counter(
+            "allanpoe_router_inserts_total",
+            "insert() calls absorbed by the grow segment",
+        )
+        self._inserted_docs = metrics.counter(
+            "allanpoe_router_inserted_docs_total",
+            "documents appended to the grow segment",
+        )
+        self._deletes = metrics.counter(
+            "allanpoe_router_deletes_total", "delete() calls"
+        )
+        self._deleted_docs = metrics.counter(
+            "allanpoe_router_deleted_docs_total",
+            "ids tombstoned, by where they lived "
+            "(unknown = found nowhere, already compacted away?)",
+            labels=("target",),
+        )
+        self._compactions = metrics.counter(
+            "allanpoe_router_compactions_total",
+            "grow-segment seals, full rebuilds vs incremental pool appends",
+            labels=("mode",),
+        )
+        self._merges = metrics.counter(
+            "allanpoe_router_merges_total", "background segment merges"
+        )
+        self._autocheckpoints = metrics.counter(
+            "allanpoe_router_autocheckpoints_total",
+            "pool checkpoints written by the router",
+        )
+
+    @property
+    def inserts(self) -> int:
+        return int(self._inserts.total())
+
+    @property
+    def inserted_docs(self) -> int:
+        return int(self._inserted_docs.total())
+
+    @property
+    def deletes(self) -> int:
+        return int(self._deletes.total())
+
+    @property
+    def deleted_sealed(self) -> int:
+        return int(self._deleted_docs.value(target="sealed"))
+
+    @property
+    def deleted_grow(self) -> int:
+        return int(self._deleted_docs.value(target="grow"))
+
+    @property
+    def unknown_deletes(self) -> int:
+        return int(self._deleted_docs.value(target="unknown"))
+
+    @property
+    def compactions(self) -> int:
+        return int(self._compactions.total())
+
+    @property
+    def incremental_compactions(self) -> int:
+        return int(self._compactions.value(mode="incremental"))
+
+    @property
+    def merges(self) -> int:
+        return int(self._merges.total())
+
+    @property
+    def autocheckpoints(self) -> int:
+        return int(self._autocheckpoints.total())
+
+    def __repr__(self) -> str:
+        return (
+            f"RouterStats(inserts={self.inserts}, "
+            f"inserted_docs={self.inserted_docs}, deletes={self.deletes}, "
+            f"deleted_sealed={self.deleted_sealed}, "
+            f"deleted_grow={self.deleted_grow}, "
+            f"unknown_deletes={self.unknown_deletes}, "
+            f"compactions={self.compactions}, "
+            f"incremental_compactions={self.incremental_compactions}, "
+            f"merges={self.merges}, autocheckpoints={self.autocheckpoints})"
+        )
 
 
 class SegmentRouter:
@@ -195,7 +274,7 @@ class SegmentRouter:
         self.service = service
         self.build_cfg = build_cfg
         self.config = config or RouterConfig()
-        self.stats = RouterStats()
+        self.stats = RouterStats(service.metrics)
         # fitted IngestPipeline paired with auto-checkpoints (an index
         # restored without its frozen stats is silently wrong; DESIGN.md §7)
         self._ingest = ingest
@@ -414,8 +493,8 @@ class SegmentRouter:
             if self.config.grow_pow2:
                 grow = pad_grow_to_capacity(grow, _next_pow2(grow.n))
             svc._publish(snap.index, grow=grow, grow_gids=gids)
-            self.stats.inserts += 1
-            self.stats.inserted_docs += n_new
+            self.stats._inserts.inc()
+            self.stats._inserted_docs.inc(n_new)
             version = svc._snap.version
         if (
             self.config.auto_compact
@@ -500,10 +579,12 @@ class SegmentRouter:
                         resolved=(seg[in_sealed], loc[in_sealed]),
                     )
             svc._publish(sealed, grow=grow, grow_gids=grow_gids)
-            self.stats.deletes += 1
-            self.stats.deleted_sealed += int(in_sealed.sum())
-            self.stats.deleted_grow += int(in_grow.sum())
-            self.stats.unknown_deletes += int((~in_sealed & ~in_grow).sum())
+            self.stats._deletes.inc()
+            self.stats._deleted_docs.inc(int(in_sealed.sum()), target="sealed")
+            self.stats._deleted_docs.inc(int(in_grow.sum()), target="grow")
+            self.stats._deleted_docs.inc(
+                int((~in_sealed & ~in_grow).sum()), target="unknown"
+            )
             return svc._snap.version
 
     def seal_and_compact(self, *, key: Optional[jax.Array] = None) -> int:
@@ -599,7 +680,7 @@ class SegmentRouter:
             published = self._as_pool(new_seg) if pooled else new_seg
             svc._publish(published, grow=None, grow_gids=None)
             self._grow_raw = None
-            self.stats.compactions += 1
+            self.stats._compactions.inc(mode="full")
             version = svc._snap.version
         self._maybe_autocheckpoint()
         return version
@@ -628,8 +709,7 @@ class SegmentRouter:
                 # IS the compaction
                 svc._publish(pool, grow=None, grow_gids=None)
                 self._grow_raw = None
-                self.stats.compactions += 1
-                self.stats.incremental_compactions += 1
+                self.stats._compactions.inc(mode="incremental")
                 version = svc._snap.version
             else:
                 grow_corpus = jax.tree.map(
@@ -659,8 +739,7 @@ class SegmentRouter:
                 pool = place_pool(pool, svc._mesh)
                 svc._publish(pool, grow=None, grow_gids=None)
                 self._grow_raw = None
-                self.stats.compactions += 1
-                self.stats.incremental_compactions += 1
+                self.stats._compactions.inc(mode="incremental")
                 version = svc._snap.version
         if self.config.auto_merge:
             if self.config.background_merge:
@@ -735,7 +814,7 @@ class SegmentRouter:
             pool, _ = append_segment(pool, merged)
         pool = place_pool(pool, svc._mesh)
         svc._publish(pool, grow=snap.grow, grow_gids=snap.grow_gids)
-        self.stats.merges += 1
+        self.stats._merges.inc()
         return svc._snap.version
 
     def maybe_merge_segments(self, *, key: Optional[jax.Array] = None) -> int:
@@ -864,4 +943,4 @@ class SegmentRouter:
 
             save_pool(cfg.autocheckpoint_dir, pool, ingest=self._ingest)
             self._last_ckpt_compactions = done
-            self.stats.autocheckpoints += 1
+            self.stats._autocheckpoints.inc()
