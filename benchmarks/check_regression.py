@@ -58,6 +58,24 @@ against results/BENCH_kernel_baseline.json (both from
     12-pair mean is stable enough to catch the fused path regressing
     relative to the unfused one.
 
+**Quantized gate** (``--all --only quantized``): reads the SAME
+results/BENCH_kernel.json pair as the kernel gate (kernel_bench.py emits
+both sections):
+
+  * every sweep point's modeled ``bytes_quantized`` must stay strictly
+    below ``bytes_fused`` — exact and noise-free: the int8 corpus path
+    must shrink the candidate stream itself, not just the score
+    round-trip (DESIGN.md §13);
+  * bundled-corpus recall@10 of quantized traversal + full-precision
+    rescore may not fall more than ``recall_drop_tol`` below the fp32
+    recall from the same run (deterministic up to tie order);
+  * search_padded trace counts are gated EXACTLY: the fp32-vs-int8 sweep
+    must trace the baseline count and repeat searches must trace ZERO
+    times — corpus dtype is a build/cache-key property, not traced data
+    (zero-recompile contract, DESIGN.md §11);
+  * ``interpret_check_quantized`` must be "ok" on dry runs (Pallas
+    dequant-in-tile vs jnp oracle).
+
 **``--all`` mode**: run every gate in one invocation, driven by the
 committed ``results/gate_config.json`` — per-metric tolerances live in
 DATA, so tightening a gate is a one-line data diff, and the three
@@ -333,6 +351,89 @@ def check_kernel(
     return failures
 
 
+def check_quantized(
+    bench: dict, baseline: dict, recall_drop_tol: float
+) -> list[str]:
+    """Quantized-corpus gate over BENCH_kernel.json (the same artifact the
+    kernel gate reads — kernel_bench.py emits both); returns failure
+    messages. Everything here is exact or deterministic:
+
+      * every sweep point's modeled ``bytes_quantized`` must stay strictly
+        below ``bytes_fused`` — the int8 corpus path's whole point is
+        shrinking the candidate stream itself (DESIGN.md §13); a model
+        regression means dequant-in-tile re-acquired fp32 traffic;
+      * bundled-corpus ``recall_at_10_int8`` (quantized traversal +
+        full-precision rescore) may not fall more than ``recall_drop_tol``
+        below ``recall_at_10_fp32`` from the SAME run — a same-machine
+        comparison, so the floor is tight;
+      * ``sweep_traces`` must match the baseline and ``repeat_traces`` must
+        be ZERO: corpus dtype is a build/cache-key property, not traced
+        data, so searching fp32 and int8 indexes back-to-back must not
+        retrace search_padded (zero-recompile contract, DESIGN.md §11);
+      * ``interpret_check_quantized`` must be "ok" on dry runs — the
+        Pallas dequant-in-tile kernel vs the jnp oracle, bit-for-bit
+        positions.
+    """
+    failures: list[str] = []
+    sweep_b = bench.get("sweep", {})
+    if not sweep_b:
+        return ["sweep section missing from bench — " + KERNEL_REGEN_HINT]
+    for name, vals in sorted(sweep_b.items()):
+        model = vals.get("model", {})
+        bq = model.get("bytes_quantized")
+        if bq is None:
+            failures.append(
+                f"{name}: bytes_quantized missing from the bytes model — "
+                "the quantized sweep rows were dropped"
+            )
+            continue
+        if bq >= model.get("bytes_fused", 0):
+            failures.append(
+                f"{name}: modeled bytes_quantized {bq} >= bytes_fused "
+                f"{model.get('bytes_fused')} — the int8 corpus path no "
+                "longer shrinks the candidate stream (DESIGN.md §13)"
+            )
+    q_b = bench.get("quantized", {})
+    q_base = baseline.get("quantized", {})
+    if not q_b or not q_base:
+        return failures + [
+            "quantized section missing from bench or baseline — "
+            + KERNEL_REGEN_HINT
+        ]
+    fp32 = q_b.get("recall_at_10_fp32", 0.0)
+    int8 = q_b.get("recall_at_10_int8", 0.0)
+    floor = fp32 - recall_drop_tol
+    if int8 < floor:
+        failures.append(
+            f"quantized recall@10 {int8:.3f} fell below the fp32 floor "
+            f"{floor:.3f} (fp32={fp32:.3f}, drop_tol={recall_drop_tol}) — "
+            "the full-precision rescore no longer recovers the quantization "
+            "error (DESIGN.md §13)"
+        )
+    if q_b.get("sweep_traces") != q_base.get("sweep_traces"):
+        failures.append(
+            f"quantized sweep traced {q_b.get('sweep_traces')} time(s), "
+            f"baseline {q_base.get('sweep_traces')}: the fp32/int8 trace "
+            "budget changed (corpus dtype must stay a cache-key property)"
+        )
+    if q_b.get("repeat_traces") != 0:
+        failures.append(
+            f"repeat searches retraced search_padded "
+            f"{q_b.get('repeat_traces')} time(s), expected 0: corpus dtype "
+            "leaked into the trace signature (zero-recompile contract, "
+            "DESIGN.md §11)"
+        )
+    if bench.get("config", {}).get("dry_run") and (
+        bench.get("interpret_check_quantized") != "ok"
+    ):
+        failures.append(
+            "interpret_check_quantized missing or failed: the dry-run sweep "
+            "must verify the dequant-in-tile Pallas kernel against the jnp "
+            "oracle (kernel_bench.py --dry-run)"
+        )
+    return failures
+
+
 def check_fusion(bench: dict, baseline: dict, recall_tol: float) -> list[str]:
     """Fusion-sweep recall gate (benchmarks/fig12_weights.py); returns
     failure messages. Recall on the bundled corpus is deterministic up to
@@ -568,6 +669,33 @@ def run_gate(kind: str, cfg: dict) -> list[str]:
             bench, baseline,
             cfg.get("ratio_tol", 0.5), cfg.get("latency_tol", 3.0),
         )
+    if kind == "quantized":
+        pair = _load_pair(
+            cfg.get("bench", "results/BENCH_kernel.json"),
+            cfg.get("baseline", "results/BENCH_kernel_baseline.json"),
+            KERNEL_REGEN_HINT,
+        )
+        if isinstance(pair, list):
+            return pair
+        bench, baseline = pair
+        for name, data in (("bench", bench), ("baseline", baseline)):
+            q = data.get("quantized", {})
+            ratios = [
+                v["model"].get("quantized_saved_ratio")
+                for v in data.get("sweep", {}).values()
+                if v.get("model", {}).get("quantized_saved_ratio") is not None
+            ]
+            mean = sum(ratios) / len(ratios) if ratios else float("nan")
+            print(
+                f"[quantized] {name}: mean_bytes_saved={mean:.3f} "
+                f"recall_fp32={q.get('recall_at_10_fp32', float('nan')):.3f} "
+                f"recall_int8={q.get('recall_at_10_int8', float('nan')):.3f} "
+                f"traces={q.get('sweep_traces')} "
+                f"repeat_traces={q.get('repeat_traces')}"
+            )
+        return check_quantized(
+            bench, baseline, cfg.get("recall_drop_tol", 0.02)
+        )
     if kind == "fusion":
         pair = _load_pair(
             cfg.get("bench", "results/BENCH_fusion.json"),
@@ -629,7 +757,7 @@ def main() -> int:
         "--only",
         default=None,
         help="with --all: comma list of gate names to run "
-        "(build,serving,scale,kernel)",
+        "(build,serving,scale,kernel,quantized,fusion,obs)",
     )
     ap.add_argument("--bench", default="results/BENCH_build.json")
     ap.add_argument("--baseline", default="results/BENCH_build_baseline.json")

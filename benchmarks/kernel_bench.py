@@ -35,6 +35,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.usms import quantize_corpus
 from repro.kernels import ops, ref
 from repro.kernels.fused_topk import k_pad
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
@@ -68,15 +69,22 @@ def _bytes_model(*, b, c, dd, ps, pf, k, c_tile, bpe):
     c_pad = -(-c // c_tile) * c_tile
     kp = k_pad(k)
     vec_bytes = dd * bpe + ps * 8 + pf * 8  # dense + two ELL (idx i32 + val f32)
+    # quantized storage: int8 dense + 4-byte per-row scale, ELL ids stay
+    # int32 but vals drop to fp16; the query side stays fp32
+    vec_bytes_q = dd * 1 + 4 + ps * 6 + pf * 6
     inputs = b * vec_bytes + b * c_pad * (vec_bytes + 4)  # +4: candidate id lane
+    inputs_q = b * vec_bytes + b * c_pad * (vec_bytes_q + 4)
     score_roundtrip = 2 * b * c_pad * 4  # write (B, C_pad) f32, top_k reads it back
     unfused = inputs + score_roundtrip + b * k * 8
     fused = inputs + b * kp * 8
+    quantized = inputs_q + b * kp * 8  # fused selection over int8 storage
     return {
         "bytes_unfused": unfused,
         "bytes_fused": fused,
+        "bytes_quantized": quantized,
         "score_roundtrip_bytes": score_roundtrip,
         "bytes_saved_ratio": round(1.0 - fused / unfused, 4),
+        "quantized_saved_ratio": round(1.0 - quantized / fused, 4),
         "k_pad": kp,
         "lane_util_selection": round(k / kp, 4),
         "lane_util_candidates": round(c / c_pad, 4),
@@ -108,6 +116,7 @@ def run(dry_run: bool = False) -> dict:
 
     rng = np.random.default_rng(0)
     corpus = random_fused(rng, (n_corpus,), d_dense=dd, ps=ps, pf=pf, vs=vs, vf=vf)
+    corpus_q = quantize_corpus(corpus)
     q = random_fused(rng, (b,), d_dense=dd, ps=ps, pf=pf, vs=vs, vf=vf)
     bpe = jnp.dtype(corpus.dense.dtype).itemsize
 
@@ -132,6 +141,13 @@ def run(dry_run: bool = False) -> dict:
                         )
                     )
                 )
+                _, t_quant = timed(
+                    lambda: jax.block_until_ready(
+                        ops.fused_topk_vs_ids(
+                            q, corpus_q, ids, k_eff, c_tile=c_tile, use_kernel=use_kernel
+                        )
+                    )
+                )
                 n_pairs = b * c
                 model = _bytes_model(
                     b=b, c=c, dd=dd, ps=ps, pf=pf, k=k_eff, c_tile=c_tile, bpe=bpe
@@ -143,7 +159,9 @@ def run(dry_run: bool = False) -> dict:
                     "n_candidates": c,
                     "unfused_us_per_pair": round(t_unfused * 1e6 / n_pairs, 4),
                     "fused_us_per_pair": round(t_fused * 1e6 / n_pairs, 4),
+                    "quantized_us_per_pair": round(t_quant * 1e6 / n_pairs, 4),
                     "fused_ratio": round(t_fused / t_unfused, 4),
+                    "quantized_ratio": round(t_quant / t_fused, 4),
                     "model": model,
                     "roofline": _roofline(
                         b=b, c=c, dd=dd, ps=ps, pf=pf, c_tile=c_tile,
@@ -191,7 +209,85 @@ def run(dry_run: bool = False) -> dict:
         ), "fused != oracle (pos beyond tie tolerance)"
         out["interpret_check"] = "ok"
 
+        # same smoke over quantized storage: the dequant-in-tile kernel
+        # (interpret) must agree with the scale-after-dot oracle
+        qs, qi = ops.fused_topk_vs_ids(
+            q[:2] if b >= 2 else q, corpus_q, ids_s, 10,
+            c_tile=32, use_kernel=True, interpret=True,
+        )
+        cands_q = jax.tree.map(
+            lambda a: a.reshape((2, 96) + a.shape[1:]),
+            corpus_q.take(ids_s.reshape(-1)),
+        )
+        zs, zi = ref.fused_topk_quant_ref(
+            q[:2] if b >= 2 else q, cands_q, ids_s, None, 10
+        )
+        np.testing.assert_allclose(
+            np.asarray(qs), np.asarray(zs), rtol=1e-5, atol=1e-5,
+            err_msg="quantized fused != oracle",
+        )
+        flip = np.asarray(qi) != np.asarray(zi)
+        assert np.all(
+            np.abs(np.asarray(qs) - np.asarray(zs))[flip] < 1e-4
+        ), "quantized fused != oracle (pos beyond tie tolerance)"
+        out["interpret_check_quantized"] = "ok"
+
+    out["quantized"] = run_quantized_recall()
     return out
+
+
+def run_quantized_recall() -> dict:
+    """Recall@10 of quantized-traversal + full-precision-rescore vs the fp32
+    index on the bundled ingest corpus — the committed floor the quantized
+    gate enforces, plus the search_padded trace accounting (corpus dtype is
+    a treedef property: one trace per storage type, zero extra on repeats)."""
+    import dataclasses as _dc
+
+    from repro.core import BuildConfig, KnnConfig, PruneConfig
+    from repro.core.fusion import FusionSpec
+    from repro.core.search import SearchParams, search, search_padded_trace_count
+    from repro.core.usms import quantize_corpus as _quant
+    from repro.data.corpus import recall_at_k
+    from repro.data.textcorpus import load_bundled_corpus, topic_truth
+    from repro.ingest import IngestConfig, IngestPipeline
+
+    corpus = load_bundled_corpus()
+    pipe = IngestPipeline(IngestConfig(d_dense=64))
+    ingested = pipe.fit(corpus.texts)
+    cfg = BuildConfig(
+        knn=KnnConfig(k=16, iters=4, node_chunk=128),
+        prune=PruneConfig(degree=16, keyword_degree=4, node_chunk=128),
+        path_refine_iters=1,
+    )
+    index = pipe.build(ingested, cfg)
+    index_q = _dc.replace(index, corpus=_quant(index.corpus))
+    enc = pipe.encode_queries(corpus.query_texts)
+    truth = topic_truth(corpus.query_topics, corpus.topics)
+    spec = FusionSpec.weighted(1.0, 1.0, 1.0)
+    params = SearchParams(k=10, iters=48, pool_size=64)
+    params_q = _dc.replace(params, corpus_dtype="int8")
+
+    traces0 = search_padded_trace_count()
+    r32 = recall_at_k(
+        np.asarray(search(index, enc.vectors, spec, params).ids), truth
+    )
+    r8 = recall_at_k(
+        np.asarray(search(index_q, enc.vectors, spec, params_q).ids), truth
+    )
+    traces_first = search_padded_trace_count() - traces0
+    # repeats on both storage types must hit the existing traces
+    search(index, enc.vectors, spec, params)
+    search(index_q, enc.vectors, spec, params_q)
+    traces_repeat = search_padded_trace_count() - traces0 - traces_first
+    return {
+        "n_docs": len(corpus.texts),
+        "n_queries": len(corpus.query_texts),
+        "recall_at_10_fp32": float(r32),
+        "recall_at_10_int8": float(r8),
+        "recall_drop": float(r32 - r8),
+        "sweep_traces": int(traces_first),
+        "repeat_traces": int(traces_repeat),
+    }
 
 
 def main() -> None:
@@ -216,6 +312,14 @@ def main() -> None:
         )
     if "interpret_check" in out:
         print(f"interpret_check,{out['interpret_check']}")
+    if "interpret_check_quantized" in out:
+        print(f"interpret_check_quantized,{out['interpret_check_quantized']}")
+    qz = out["quantized"]
+    print(
+        f"quantized_recall,fp32={qz['recall_at_10_fp32']:.3f},"
+        f"int8={qz['recall_at_10_int8']:.3f},traces={qz['sweep_traces']},"
+        f"repeat_traces={qz['repeat_traces']}"
+    )
     print(f"wrote {args.out}")
 
 

@@ -31,7 +31,18 @@ def _tree_paths(tree) -> list[str]:
     return ["/".join(str(k) for k in path) for path, _ in flat]
 
 
-def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any, *, keep: int = 3):
+def save_checkpoint(
+    directory: str | os.PathLike,
+    step: int,
+    tree: Any,
+    *,
+    keep: int = 3,
+    extra: Optional[dict] = None,
+):
+    """``extra``: caller-provided JSON-serializable metadata merged into the
+    manifest (e.g. the index-io quantization record) — it rides the same
+    tmp-dir -> rename -> .done commit, so it is exactly as crash-consistent
+    as the leaves it describes."""
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     flat, treedef = jax.tree_util.tree_flatten(tree)
@@ -44,6 +55,8 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any, *, keep:
         "paths": paths,
         "leaves": [],
     }
+    if extra:
+        manifest.update(extra)
     for i, leaf in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
         logical_dtype = str(arr.dtype)

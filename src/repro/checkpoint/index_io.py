@@ -32,10 +32,67 @@ from repro.checkpoint.checkpoint import (
     save_checkpoint,
 )
 from repro.core.index import HybridIndex
-from repro.core.usms import FusedVectors, SparseVec
+from repro.core.usms import (
+    FusedVectors,
+    QuantizedFusedVectors,
+    SparseVec,
+    corpus_nbytes_by_leaf,
+)
 
 INGEST_SUBDIR = "ingest"  # legacy flat layout, still readable
 INGEST_STEP_PREFIX = "ingest_step_"
+
+
+def _corpus_record(corpus) -> dict:
+    """The manifest quantization record for one corpus: storage dtype, scale
+    layout, and the achieved compression ratio vs equivalent fp32 storage."""
+    quantized = isinstance(corpus, QuantizedFusedVectors)
+    actual = int(sum(corpus_nbytes_by_leaf(corpus).values()))
+    if quantized:
+        dd = corpus.dense_q.shape[-1]
+        rows = int(np.prod(corpus.dense_q.shape[:-1]))
+        ps = corpus.learned.idx.shape[-1]
+        pf = corpus.lexical.idx.shape[-1]
+        fp32 = rows * (dd * 4 + ps * 8 + pf * 8)  # idx int32 + val f32
+    else:
+        fp32 = actual
+    return {
+        "corpus_dtype": "int8" if quantized else "float32",
+        "scale_layout": "per_row_symmetric" if quantized else None,
+        "corpus_bytes": actual,
+        "corpus_bytes_fp32": fp32,
+        "compression_ratio": (fp32 / actual) if actual else 1.0,
+    }
+
+
+def _manifest_extra(tree) -> dict:
+    """Quantization metadata merged into the checkpoint manifest. For a
+    pool, the per-group dtype list is also the load-time group template
+    (a mixed fp32/int8 pool — mid-migration — has heterogeneous per-group
+    leaf counts, so the legacy uniform-stride recovery cannot describe it)."""
+    if hasattr(tree, "groups"):  # SegmentPool
+        records = [_corpus_record(g.index.corpus) for g in tree.groups]
+        actual = sum(r["corpus_bytes"] for r in records)
+        fp32 = sum(r["corpus_bytes_fp32"] for r in records)
+        return {
+            "pool_groups": [r["corpus_dtype"] for r in records],
+            "quantization": {
+                "corpus_dtype": (
+                    "int8"
+                    if any(r["corpus_dtype"] == "int8" for r in records)
+                    else "float32"
+                ),
+                "scale_layout": (
+                    "per_row_symmetric"
+                    if any(r["corpus_dtype"] == "int8" for r in records)
+                    else None
+                ),
+                "corpus_bytes": actual,
+                "corpus_bytes_fp32": fp32,
+                "compression_ratio": (fp32 / actual) if actual else 1.0,
+            },
+        }
+    return {"quantization": _corpus_record(tree.corpus)}
 
 
 def save_index(
@@ -71,7 +128,7 @@ def _save_stepped(directory: pathlib.Path, tree, *, ingest, keep: int) -> None:
     step = steps[-1] + 1 if steps else 0
     if ingest is not None:
         ingest.save(directory / f"{INGEST_STEP_PREFIX}{step}")
-    save_checkpoint(directory, step, tree, keep=keep)
+    save_checkpoint(directory, step, tree, keep=keep, extra=_manifest_extra(tree))
     # GC ingest manifests whose index step was retention-collected
     kept = set(all_steps(directory))
     for d in directory.glob(INGEST_STEP_PREFIX + "*"):
@@ -83,13 +140,23 @@ def _save_stepped(directory: pathlib.Path, tree, *, ingest, keep: int) -> None:
             shutil.rmtree(d, ignore_errors=True)
 
 
-def _structural_dummy() -> HybridIndex:
+def _structural_dummy(quantized: bool = False) -> HybridIndex:
     """Any HybridIndex: only its treedef matters (shapes come from the
-    manifest)."""
+    manifest). ``quantized`` selects int8 corpus storage (one extra leaf:
+    the per-row dense scale)."""
     zi = np.zeros((1, 1), np.int32)
     zf = np.zeros((1, 1), np.float32)
+    if quantized:
+        corpus = QuantizedFusedVectors(
+            np.zeros((1, 1), np.int8),
+            np.zeros((1,), np.float32),
+            SparseVec(zi, np.zeros((1, 1), np.float16)),
+            SparseVec(zi, np.zeros((1, 1), np.float16)),
+        )
+    else:
+        corpus = FusedVectors(zf, SparseVec(zi, zf), SparseVec(zi, zf))
     return HybridIndex(
-        corpus=FusedVectors(zf, SparseVec(zi, zf), SparseVec(zi, zf)),
+        corpus=corpus,
         semantic_edges=zi,
         keyword_edges=zi,
         logical_edges=np.zeros((1, 1, 4), np.int32),
@@ -118,7 +185,10 @@ def load_index(
         manifest = json.load(f)
     import jax
 
-    flat, treedef = jax.tree_util.tree_flatten(_structural_dummy())
+    # int8 leaves appear in exactly one place — quantized dense storage —
+    # so dtype presence (not leaf count alone) picks the corpus structure
+    quantized = any(m["dtype"] == "int8" for m in manifest["leaves"])
+    flat, treedef = jax.tree_util.tree_flatten(_structural_dummy(quantized))
     if len(flat) != len(manifest["leaves"]):
         raise ValueError(
             f"manifest has {len(manifest['leaves'])} leaves but HybridIndex "
@@ -134,14 +204,19 @@ def load_index(
     return restore_checkpoint(directory, step, template)
 
 
-def _pool_structural_dummy(n_groups: int):
+def _pool_structural_dummy(n_groups: int, group_dtypes=None):
     """A SegmentPool with ``n_groups`` groups: only the treedef matters
-    (leaf shapes come from the manifest)."""
+    (leaf shapes come from the manifest). ``group_dtypes`` — the manifest's
+    per-group ``pool_groups`` record — selects fp32/int8 corpus structure
+    per group (a mid-migration pool mixes both)."""
     from repro.core.distributed import SegmentedIndex
     from repro.core.segment_pool import SegmentPool
 
-    def one_group():
-        idx = _structural_dummy()
+    if group_dtypes is None:
+        group_dtypes = ["float32"] * n_groups
+
+    def one_group(dtype):
+        idx = _structural_dummy(quantized=dtype == "int8")
         import jax
 
         stacked = jax.tree_util.tree_map(lambda a: a[None], idx)
@@ -149,15 +224,19 @@ def _pool_structural_dummy(n_groups: int):
             index=stacked, global_ids=np.zeros((1, 1), np.int32)
         )
 
-    return SegmentPool(groups=[one_group() for _ in range(n_groups)])
+    return SegmentPool(groups=[one_group(d) for d in group_dtypes])
 
 
-def _pool_leaf_stride() -> int:
+def _pool_leaf_stride(quantized: bool = False) -> int:
     """Leaves per pool group (HybridIndex leaves + global_ids), derived
     from the registered pytree structure so it never drifts."""
     import jax
 
-    return len(jax.tree_util.tree_leaves(_pool_structural_dummy(1)))
+    return len(
+        jax.tree_util.tree_leaves(
+            _pool_structural_dummy(1, ["int8" if quantized else "float32"])
+        )
+    )
 
 
 def save_pool(
@@ -192,15 +271,19 @@ def load_pool(directory: str | os.PathLike, *, step: Optional[int] = None):
     with open(directory / f"step_{step}" / "manifest.json") as f:
         manifest = json.load(f)
     n_leaves = len(manifest["leaves"])
-    stride = _pool_leaf_stride()
-    if n_leaves == 0 or n_leaves % stride:
-        raise ValueError(
-            f"manifest has {n_leaves} leaves, not a multiple of "
-            f"{stride} — not a segment-pool checkpoint?"
-        )
+    group_dtypes = manifest.get("pool_groups")
+    if group_dtypes is None:
+        # legacy manifest (no per-group record): uniform fp32 groups
+        stride = _pool_leaf_stride()
+        if n_leaves == 0 or n_leaves % stride:
+            raise ValueError(
+                f"manifest has {n_leaves} leaves, not a multiple of "
+                f"{stride} — not a segment-pool checkpoint?"
+            )
+        group_dtypes = ["float32"] * (n_leaves // stride)
     import jax
 
-    dummy = _pool_structural_dummy(n_leaves // stride)
+    dummy = _pool_structural_dummy(len(group_dtypes), group_dtypes)
     flat, treedef = jax.tree_util.tree_flatten(dummy)
     if len(flat) != n_leaves:
         raise ValueError(

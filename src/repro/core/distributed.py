@@ -40,6 +40,7 @@ from repro.core.fusion import (
 from repro.core.index import BuildConfig, HybridIndex
 from repro.core.logical_edges import LogicalEdges, build_logical_edges
 from repro.core.search import SearchParams, SearchResult, search_padded
+from repro.core import usms
 from repro.core.usms import PAD_IDX, FusedVectors, PathWeights
 from repro.runtime import dispatch
 
@@ -230,7 +231,9 @@ def alive_docs(
     """Gather the live (non-pad, non-tombstoned) docs of every segment on
     the host. Returns (corpus rows, their global ids, their doc-entity
     rows) — the compaction input. The entity rows are all-PAD width-1 for
-    an index built without a knowledge graph."""
+    an index built without a knowledge graph. Quantized storage is
+    dequantized here: every rebuild / merge input is fp32 (builds never see
+    int8; re-quantization happens when the rebuilt segment seals)."""
     gids = np.asarray(seg_index.global_ids).reshape(-1)
     alive = np.asarray(seg_index.index.alive).reshape(-1)
     rows = np.flatnonzero((gids >= 0) & alive)
@@ -240,6 +243,8 @@ def alive_docs(
         ),
         seg_index.index.corpus,
     )
+    if isinstance(corpus, usms.QuantizedFusedVectors):
+        corpus = usms.dequantize_corpus(corpus)
     ents = np.asarray(seg_index.index.doc_entities)
     ents = ents.reshape((-1, ents.shape[-1]))[rows]
     return corpus, gids[rows].astype(np.int32), ents
@@ -547,10 +552,10 @@ def make_distributed_search_padded(
         local_search,
         mesh=mesh,
         in_specs=(
-            SegmentedIndex(
-                index=jax.tree.map(lambda _: seg_spec, _index_struct()),
-                global_ids=seg_spec,
-            ),
+            # a single prefix spec for the whole SegmentedIndex: every leaf
+            # shards over the segment axes regardless of whether the corpus
+            # subtree is FusedVectors or QuantizedFusedVectors (§13)
+            seg_spec,
             jax.tree.map(lambda _: q_spec, _queries_struct()),
             jax.tree.map(lambda _: q_spec, _fusion_struct()),
             q_spec,

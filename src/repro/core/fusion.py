@@ -99,8 +99,17 @@ class PathStats:
         never traced."""
         norms = [[] for _ in range(N_SCORE_PATHS)]
         for corpus, alive in parts:
-            dense = np.asarray(corpus.dense)
-            dense = dense.reshape(-1, dense.shape[-1])
+            if hasattr(corpus, "dense_scale"):  # quantized sealed segment:
+                # ||scale * int8 row|| = scale * ||int8 row|| — no need to
+                # densify the stored rows back to fp32
+                dq = np.asarray(corpus.dense_q, np.float32)
+                dq = dq.reshape(-1, dq.shape[-1])
+                dense = dq * np.asarray(
+                    corpus.dense_scale, np.float32
+                ).reshape(-1, 1)
+            else:
+                dense = np.asarray(corpus.dense)
+                dense = dense.reshape(-1, dense.shape[-1])
             lv = np.asarray(corpus.learned.val)
             lv = lv.reshape(-1, lv.shape[-1])
             fv = np.asarray(corpus.lexical.val)

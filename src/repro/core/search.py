@@ -63,6 +63,14 @@ class SearchParams:
     use_keywords: bool = False  # enable keyword edge loading + filtering
     use_kg: bool = False  # enable logical edge traversal
     kg_max_hops: int = 3  # x: max entity hops for logical expansion
+    corpus_dtype: str = "float32"  # sealed-corpus storage: "float32" or
+    # "int8" (symmetric per-row int8 dense + fp16 sparse vals, quantized at
+    # seal/compact time; traversal scores on quantized storage, the final
+    # pool re-scores at full precision). A build/cache-key property — it
+    # selects the corpus pytree the index carries, never traced data.
+
+
+CORPUS_DTYPES = ("float32", "int8")
 
 
 def resolve_params(params: SearchParams) -> SearchParams:
@@ -73,6 +81,11 @@ def resolve_params(params: SearchParams) -> SearchParams:
     executable cache above all — must key on the *resolved* params so a
     kernel-mode change can never alias a stale executable.
     """
+    if params.corpus_dtype not in CORPUS_DTYPES:
+        raise ValueError(
+            f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+            f"got {params.corpus_dtype!r}"
+        )
     if params.use_kernel is None:
         return dataclasses.replace(
             params, use_kernel=ops.resolve_use_kernel(None)

@@ -48,7 +48,7 @@ from repro.core.distributed import (
     resolve_global_ids,
 )
 from repro.core.index import BuildConfig
-from repro.core.usms import PAD_IDX, FusedVectors
+from repro.core.usms import PAD_IDX, FusedVectors, quantize_corpus
 
 
 @partial(
@@ -226,12 +226,17 @@ def build_pool_segment(
     kg_triplets: Optional[np.ndarray] = None,
     doc_entities: Optional[np.ndarray] = None,
     n_entities: int = 0,
+    corpus_dtype: str = "float32",
 ) -> SegmentedIndex:
     """Build ONE sealed segment of arbitrary size — O(rows given), never
     re-entering the full sharded build. Returns a single-segment stacked
     index (leaves (1, ...)) padded to ``capacity`` with dead rows (shape
     bucketing: quantized capacities keep the pool's group count low),
-    carrying the caller's global ids."""
+    carrying the caller's global ids.
+
+    ``corpus_dtype="int8"`` quantizes the segment's corpus storage after the
+    (always-fp32) build — the seal-time contract: graph construction sees
+    exact vectors, sealed storage is compressed."""
     global_ids = np.asarray(global_ids, np.int32)
     n = corpus.n
     if n == 0:
@@ -261,6 +266,10 @@ def build_pool_segment(
         idx = dataclasses.replace(
             idx, entry_points=jnp.tile(ep, reps)[:n_entry]
         )
+    if corpus_dtype == "int8":
+        idx = dataclasses.replace(idx, corpus=quantize_corpus(idx.corpus))
+    elif corpus_dtype != "float32":
+        raise ValueError(f"unknown corpus_dtype {corpus_dtype!r}")
     gids = np.full((capacity,), PAD_IDX, np.int32)
     gids[:n] = global_ids
     stacked = jax.tree.map(lambda a: jnp.asarray(a)[None], idx)

@@ -88,6 +88,116 @@ class FusedVectors:
 
 @partial(
     jax.tree_util.register_dataclass,
+    data_fields=["dense_q", "dense_scale", "learned", "lexical"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class QuantizedFusedVectors:
+    """A sealed corpus in compressed storage: per-row symmetric int8 dense
+    vectors with fp32 scales, fp16 ELL sparse values (ids stay int32).
+
+    dense_q:     (..., Dd) int8 — round(dense / scale), clipped to ±127.
+    dense_scale: (...,) float32 — per-row scale; 1.0 for all-zero rows.
+    learned:     SparseVec (..., Ps) with float16 vals.
+    lexical:     SparseVec (..., Pf) with float16 vals.
+
+    Deliberately has no ``.dense`` property: reconstructing fp32 rows must be
+    an explicit ``dequantize_corpus`` call, never a silent densification.
+    """
+
+    dense_q: jax.Array
+    dense_scale: jax.Array
+    learned: SparseVec
+    lexical: SparseVec
+
+    @property
+    def n(self) -> int:
+        return self.dense_q.shape[0]
+
+    def __getitem__(self, key) -> "QuantizedFusedVectors":
+        return QuantizedFusedVectors(
+            self.dense_q[key],
+            self.dense_scale[key],
+            self.learned[key],
+            self.lexical[key],
+        )
+
+    def take(self, ids: jax.Array) -> "QuantizedFusedVectors":
+        """Gather rows by id along axis 0. ids may contain PAD_IDX (clipped;
+        callers must mask the resulting scores)."""
+        safe = jnp.clip(ids, 0, self.dense_q.shape[0] - 1)
+        take = lambda a: jnp.take(a, safe, axis=0)
+        return QuantizedFusedVectors(
+            take(self.dense_q),
+            take(self.dense_scale),
+            SparseVec(take(self.learned.idx), take(self.learned.val)),
+            SparseVec(take(self.lexical.idx), take(self.lexical.val)),
+        )
+
+
+def quantize_corpus(f: FusedVectors) -> QuantizedFusedVectors:
+    """Seal-time compression of a built corpus (paper: reduced storage).
+
+    Dense rows use symmetric per-row int8: scale = max|row| / 127 (1.0 for
+    all-zero rows so dequantization is exact there), giving a per-element
+    dequantization error of at most scale / 2. Sparse ELL values drop to
+    fp16 — padded slots stay exactly 0, so the kernel padding contract
+    (query PAD only matches candidate PAD whose val is 0) is preserved.
+    """
+    amax = jnp.max(jnp.abs(f.dense), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    dense_q = jnp.clip(
+        jnp.round(f.dense / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return QuantizedFusedVectors(
+        dense_q,
+        scale,
+        SparseVec(f.learned.idx, f.learned.val.astype(jnp.float16)),
+        SparseVec(f.lexical.idx, f.lexical.val.astype(jnp.float16)),
+    )
+
+
+def dequantize_corpus(q: QuantizedFusedVectors) -> FusedVectors:
+    """Reconstruct fp32 storage from a quantized corpus. Used when sealed
+    segments feed back into a rebuild (merge / compaction), which always
+    runs at full precision."""
+    dense = q.dense_q.astype(jnp.float32) * q.dense_scale[..., None]
+    return FusedVectors(
+        dense,
+        SparseVec(q.learned.idx, q.learned.val.astype(jnp.float32)),
+        SparseVec(q.lexical.idx, q.lexical.val.astype(jnp.float32)),
+    )
+
+
+def corpus_nbytes_by_leaf(corpus) -> dict:
+    """Byte footprint of a corpus pytree, keyed by (leaf, dtype) — feeds the
+    ``allanpoe_index_bytes_total`` gauges."""
+    out: dict = {}
+    if isinstance(corpus, QuantizedFusedVectors):
+        named = [
+            ("dense", corpus.dense_q),
+            ("dense_scale", corpus.dense_scale),
+            ("sparse_idx", corpus.learned.idx),
+            ("sparse_val", corpus.learned.val),
+            ("sparse_idx", corpus.lexical.idx),
+            ("sparse_val", corpus.lexical.val),
+        ]
+    else:
+        named = [
+            ("dense", corpus.dense),
+            ("sparse_idx", corpus.learned.idx),
+            ("sparse_val", corpus.learned.val),
+            ("sparse_idx", corpus.lexical.idx),
+            ("sparse_val", corpus.lexical.val),
+        ]
+    for leaf, arr in named:
+        key = (leaf, str(arr.dtype))
+        out[key] = out.get(key, 0) + arr.size * arr.dtype.itemsize
+    return out
+
+
+@partial(
+    jax.tree_util.register_dataclass,
     data_fields=["dense", "sparse", "full", "kg"],
     meta_fields=[],
 )

@@ -64,15 +64,20 @@ def k_pad(k: int) -> int:
 
 
 def _distance_tile(qd_ref, qsi_ref, qsv_ref, qfi_ref, qfv_ref,
-                   cd_ref, csi_ref, csv_ref, cfi_ref, cfv_ref):
+                   cd_ref, csi_ref, csv_ref, cfi_ref, cfv_ref,
+                   cscale_ref=None):
     """One (1, C_TILE) hybrid-distance tile — identical math to
-    ``hybrid_distance._hybrid_distance_kernel``."""
+    ``hybrid_distance._hybrid_distance_kernel``. A non-None ``cscale_ref``
+    dequantizes int8 dense rows by the per-candidate scale after the MXU
+    matvec (one VPU multiply per candidate)."""
     f32 = jnp.float32
     qd = qd_ref[...].astype(f32)  # (1, Dd)
     cd = cd_ref[0].astype(f32)  # (C_TILE, Dd)
     acc = jax.lax.dot_general(
         qd, cd, (((1,), (1,)), ((), ())), preferred_element_type=f32
     )  # (1, C_TILE)
+    if cscale_ref is not None:
+        acc = acc * cscale_ref[...].astype(f32)  # dequant-in-tile
 
     def sparse_accumulate(acc, qi_ref, qv_ref, ci_ref, cv_ref):
         qi = qi_ref[...]  # (1, P) int32
@@ -116,15 +121,15 @@ def _merge_topk_lanes(acc_s, acc_i, tile_s, tile_i, k: int):
     return res_s, res_i
 
 
-def _make_fused_topk_kernel(k: int, c_tile: int, has_bias: bool):
+def _make_fused_topk_kernel(k: int, c_tile: int, has_bias: bool,
+                            has_scale: bool = False):
     def kernel(*refs):
-        if has_bias:
-            (qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv,
-             cid_ref, bias_ref, out_s_ref, out_i_ref) = refs
-        else:
-            (qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv,
-             cid_ref, out_s_ref, out_i_ref) = refs
-            bias_ref = None
+        refs = list(refs)
+        qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv, cid_ref = refs[:11]
+        rest = refs[11:]
+        bias_ref = rest.pop(0) if has_bias else None
+        cscale_ref = rest.pop(0) if has_scale else None
+        out_s_ref, out_i_ref = rest
         j = pl.program_id(1)
 
         # the output blocks are this row's accumulator (index map pins them
@@ -134,7 +139,8 @@ def _make_fused_topk_kernel(k: int, c_tile: int, has_bias: bool):
             out_s_ref[...] = jnp.full(out_s_ref.shape, NEG, jnp.float32)
             out_i_ref[...] = jnp.full(out_i_ref.shape, PAD_IDX, jnp.int32)
 
-        scores = _distance_tile(qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv)
+        scores = _distance_tile(qd, qsi, qsv, qfi, qfv, cd, csi, csv,
+                                cfi, cfv, cscale_ref)
         if bias_ref is not None:
             scores = scores + bias_ref[...].astype(jnp.float32)
         cids = cid_ref[...]  # (1, C_TILE) candidate ids (validity only)
@@ -164,12 +170,16 @@ def fused_topk_pallas(
     cfv: jax.Array,  # (B, Pf, C)
     cid: jax.Array,  # (B, C) int32 candidate ids (PAD_IDX = invalid slot)
     bias: jax.Array | None,  # (B, C) f32 per-candidate score bias, or None
+    cscale: jax.Array | None = None,  # (B, C) f32 per-candidate dense scale
     *,
     k: int,
     c_tile: int = DEFAULT_C_TILE,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Raw pallas_call wrapper. C must be a multiple of c_tile (callers pad).
+
+    When ``cscale`` is given, ``cd`` holds int8 rows and the dense matvec is
+    dequantized in-tile by the per-candidate scale.
 
     Returns ``(scores, positions)`` of shape (B, K_PAD): per query the top-k
     candidate scores (descending) and their positions along the C axis.
@@ -205,9 +215,13 @@ def fused_topk_pallas(
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, c_tile), crow))
         args.append(bias)
+    if cscale is not None:
+        in_specs.append(pl.BlockSpec((1, c_tile), crow))
+        args.append(cscale)
 
     return pl.pallas_call(
-        _make_fused_topk_kernel(k, c_tile, bias is not None),
+        _make_fused_topk_kernel(k, c_tile, bias is not None,
+                                cscale is not None),
         grid=grid,
         in_specs=in_specs,
         # both outputs pinned per grid row -> VMEM-resident accumulators

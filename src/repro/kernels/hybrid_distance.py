@@ -35,44 +35,61 @@ from jax.experimental import pallas as pl
 DEFAULT_C_TILE = 128
 
 
-def _hybrid_distance_kernel(
-    qd_ref,  # (1, Dd)            query dense
-    qsi_ref,  # (1, Ps) int32      query learned-sparse indices
-    qsv_ref,  # (1, Ps)            query learned-sparse values
-    qfi_ref,  # (1, Pf) int32      query lexical-sparse indices
-    qfv_ref,  # (1, Pf)            query lexical-sparse values
-    cd_ref,  # (1, C_TILE, Dd)    candidate dense tile
-    csi_ref,  # (1, Ps, C_TILE)    candidate learned idx (nnz-major)
-    csv_ref,  # (1, Ps, C_TILE)
-    cfi_ref,  # (1, Pf, C_TILE)    candidate lexical idx (nnz-major)
-    cfv_ref,  # (1, Pf, C_TILE)
-    out_ref,  # (1, C_TILE) f32
-):
-    f32 = jnp.float32
+def _make_hybrid_distance_kernel(has_scale: bool):
+    """Build the distance kernel, optionally with a per-candidate dense
+    dequantization scale (int8 corpus storage). The int8 rows ride the MXU
+    as-is; the fp32 scale multiplies the (1, C_TILE) matvec *output*, so
+    dequantization costs one VPU multiply per candidate instead of Dd."""
 
-    # --- dense path: MXU matvec (1, Dd) x (C_TILE, Dd)^T -> (1, C_TILE) ---
-    qd = qd_ref[...].astype(f32)  # (1, Dd)
-    cd = cd_ref[0].astype(f32)  # (C_TILE, Dd)
-    acc = jax.lax.dot_general(
-        qd, cd, (((1,), (1,)), ((), ())), preferred_element_type=f32
-    )  # (1, C_TILE)
+    def kernel(
+        qd_ref,  # (1, Dd)            query dense
+        qsi_ref,  # (1, Ps) int32      query learned-sparse indices
+        qsv_ref,  # (1, Ps)            query learned-sparse values
+        qfi_ref,  # (1, Pf) int32      query lexical-sparse indices
+        qfv_ref,  # (1, Pf)            query lexical-sparse values
+        cd_ref,  # (1, C_TILE, Dd)    candidate dense tile
+        csi_ref,  # (1, Ps, C_TILE)    candidate learned idx (nnz-major)
+        csv_ref,  # (1, Ps, C_TILE)
+        cfi_ref,  # (1, Pf, C_TILE)    candidate lexical idx (nnz-major)
+        cfv_ref,  # (1, Pf, C_TILE)
+        *rest,  # [cscale_ref (1, C_TILE) f32 if has_scale], out_ref (1, C_TILE)
+    ):
+        if has_scale:
+            cscale_ref, out_ref = rest
+        else:
+            (out_ref,) = rest
+        f32 = jnp.float32
 
-    # --- sparse paths: per-query-term vectorized intersection ---
-    def sparse_accumulate(acc, qi_ref, qv_ref, ci_ref, cv_ref):
-        qi = qi_ref[...]  # (1, P) int32
-        qv = qv_ref[...].astype(f32)  # (1, P)
-        ci = ci_ref[0]  # (P, C_TILE) int32
-        cv = cv_ref[0].astype(f32)  # (P, C_TILE)
-        n_terms = qi.shape[-1]
-        for j in range(n_terms):  # static unroll over the query's nnz slots
-            match = ci == qi[0, j]  # (P, C_TILE)
-            contrib = jnp.where(match, cv, 0.0)  # padded slots have val 0
-            acc = acc + jnp.sum(contrib, axis=0, keepdims=True) * qv[0, j]
-        return acc
+        # --- dense path: MXU matvec (1, Dd) x (C_TILE, Dd)^T -> (1, C_TILE) ---
+        qd = qd_ref[...].astype(f32)  # (1, Dd)
+        cd = cd_ref[0].astype(f32)  # (C_TILE, Dd)
+        acc = jax.lax.dot_general(
+            qd, cd, (((1,), (1,)), ((), ())), preferred_element_type=f32
+        )  # (1, C_TILE)
+        if has_scale:
+            acc = acc * cscale_ref[...].astype(f32)  # dequant-in-tile
 
-    acc = sparse_accumulate(acc, qsi_ref, qsv_ref, csi_ref, csv_ref)
-    acc = sparse_accumulate(acc, qfi_ref, qfv_ref, cfi_ref, cfv_ref)
-    out_ref[...] = acc
+        # --- sparse paths: per-query-term vectorized intersection ---
+        def sparse_accumulate(acc, qi_ref, qv_ref, ci_ref, cv_ref):
+            qi = qi_ref[...]  # (1, P) int32
+            qv = qv_ref[...].astype(f32)  # (1, P)
+            ci = ci_ref[0]  # (P, C_TILE) int32
+            cv = cv_ref[0].astype(f32)  # (P, C_TILE)
+            n_terms = qi.shape[-1]
+            for j in range(n_terms):  # static unroll over the query's nnz slots
+                match = ci == qi[0, j]  # (P, C_TILE)
+                contrib = jnp.where(match, cv, 0.0)  # padded slots have val 0
+                acc = acc + jnp.sum(contrib, axis=0, keepdims=True) * qv[0, j]
+            return acc
+
+        acc = sparse_accumulate(acc, qsi_ref, qsv_ref, csi_ref, csv_ref)
+        acc = sparse_accumulate(acc, qfi_ref, qfv_ref, cfi_ref, cfv_ref)
+        out_ref[...] = acc
+
+    return kernel
+
+
+_hybrid_distance_kernel = _make_hybrid_distance_kernel(has_scale=False)
 
 
 def hybrid_distance_pallas(
@@ -86,11 +103,15 @@ def hybrid_distance_pallas(
     csv: jax.Array,  # (B, Ps, C)
     cfi: jax.Array,  # (B, Pf, C)
     cfv: jax.Array,  # (B, Pf, C)
+    cscale: jax.Array | None = None,  # (B, C) f32 per-candidate dense scale
     *,
     c_tile: int = DEFAULT_C_TILE,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call wrapper. C must be a multiple of c_tile (callers pad).
+
+    When ``cscale`` is given, ``cd`` holds int8 rows and the dense matvec is
+    dequantized in-tile by the per-candidate scale.
 
     Returns (B, C) float32 hybrid scores (higher = more similar).
     """
@@ -106,23 +127,31 @@ def hybrid_distance_pallas(
     q_row = lambda i, j: (i, 0)
     cand3 = lambda i, j: (i, 0, j)  # (1, P, C_TILE) tiles along last dim
     dense3 = lambda i, j: (i, j, 0)  # (1, C_TILE, Dd) tiles along middle dim
+    crow = lambda i, j: (i, j)
+
+    has_scale = cscale is not None
+    in_specs = [
+        pl.BlockSpec((1, dd), q_row),
+        pl.BlockSpec((1, ps), q_row),
+        pl.BlockSpec((1, ps), q_row),
+        pl.BlockSpec((1, pf), q_row),
+        pl.BlockSpec((1, pf), q_row),
+        pl.BlockSpec((1, c_tile, dd), dense3),
+        pl.BlockSpec((1, ps, c_tile), cand3),
+        pl.BlockSpec((1, ps, c_tile), cand3),
+        pl.BlockSpec((1, pf, c_tile), cand3),
+        pl.BlockSpec((1, pf, c_tile), cand3),
+    ]
+    operands = [qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, c_tile), crow))
+        operands.append(cscale)
 
     return pl.pallas_call(
-        _hybrid_distance_kernel,
+        _make_hybrid_distance_kernel(has_scale),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, dd), q_row),
-            pl.BlockSpec((1, ps), q_row),
-            pl.BlockSpec((1, ps), q_row),
-            pl.BlockSpec((1, pf), q_row),
-            pl.BlockSpec((1, pf), q_row),
-            pl.BlockSpec((1, c_tile, dd), dense3),
-            pl.BlockSpec((1, ps, c_tile), cand3),
-            pl.BlockSpec((1, ps, c_tile), cand3),
-            pl.BlockSpec((1, pf, c_tile), cand3),
-            pl.BlockSpec((1, pf, c_tile), cand3),
-        ],
-        out_specs=pl.BlockSpec((1, c_tile), lambda i, j: (i, j)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, c_tile), crow),
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
         interpret=interpret,
-    )(qd, qsi, qsv, qfi, qfv, cd, csi, csv, cfi, cfv)
+    )(*operands)

@@ -21,7 +21,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.usms import PAD_IDX, FusedVectors, SparseVec
+from repro.core.usms import (
+    PAD_IDX,
+    FusedVectors,
+    QuantizedFusedVectors,
+    SparseVec,
+)
 from repro.kernels import ref
 from repro.kernels.fused_topk import NEG as NEG  # re-export: callers mask on it
 from repro.kernels.fused_topk import fused_topk_pallas
@@ -64,6 +69,29 @@ def _pad_candidates(cands: FusedVectors, c_tile: int) -> tuple[FusedVectors, int
     )
 
 
+def _pad_candidates_q(
+    cands: QuantizedFusedVectors, c_tile: int
+) -> tuple[QuantizedFusedVectors, int]:
+    """Quantized twin of ``_pad_candidates``: int8 padding rows are 0 with
+    scale 0.0, so padded dense scores are exactly 0 before masking."""
+    c = cands.dense_q.shape[1]
+    c_pad = (-c) % c_tile
+    if c_pad == 0:
+        return cands, c
+    pad3 = lambda a: jnp.pad(a, ((0, 0), (0, c_pad), (0, 0)))
+    pad2 = lambda a: jnp.pad(a, ((0, 0), (0, c_pad)))
+    padi = lambda a: jnp.pad(a, ((0, 0), (0, c_pad), (0, 0)), constant_values=PAD_IDX)
+    return (
+        QuantizedFusedVectors(
+            pad3(cands.dense_q),
+            pad2(cands.dense_scale),
+            SparseVec(padi(cands.learned.idx), pad3(cands.learned.val)),
+            SparseVec(padi(cands.lexical.idx), pad3(cands.lexical.val)),
+        ),
+        c,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("c_tile", "use_kernel", "interpret"))
 def hybrid_scores(
     q: FusedVectors,
@@ -76,12 +104,22 @@ def hybrid_scores(
     """Score B queries against their (B, C, ...) candidate rows -> (B, C) f32.
 
     Weights must already be folded into ``q`` (usms.weighted_query).
+    ``cands`` may be quantized storage (``QuantizedFusedVectors``) — the
+    corpus dtype is a trace-time pytree property, never traced data.
     """
+    quantized = isinstance(cands, QuantizedFusedVectors)
     if not resolve_use_kernel(use_kernel):
+        if quantized:
+            return ref.hybrid_scores_quant_ref(q, cands)
         return ref.hybrid_scores_ref(q, cands)
     if interpret is None:
         interpret = _on_cpu()
-    cands, c_orig = _pad_candidates(cands, c_tile)
+    if quantized:
+        cands, c_orig = _pad_candidates_q(cands, c_tile)
+        cd, cscale = cands.dense_q, cands.dense_scale
+    else:
+        cands, c_orig = _pad_candidates(cands, c_tile)
+        cd, cscale = cands.dense, None
     # nnz-major candidate layout for the kernel (see hybrid_distance.py).
     csi = jnp.swapaxes(cands.learned.idx, 1, 2)
     csv = jnp.swapaxes(cands.learned.val, 1, 2)
@@ -93,11 +131,12 @@ def hybrid_scores(
         q.learned.val,
         q.lexical.idx,
         q.lexical.val,
-        cands.dense,
+        cd,
         csi,
         csv,
         cfi,
         cfv,
+        cscale,
         c_tile=c_tile,
         interpret=interpret,
     )
@@ -145,12 +184,20 @@ def fused_topk(
     hold ``(NEG, PAD_IDX)``; ``bias`` must be finite (mask via PAD ids, not
     via bias). Tie order matches ``lax.top_k`` (lowest position wins).
     """
+    quantized = isinstance(cands, QuantizedFusedVectors)
     if not resolve_use_kernel(use_kernel):
+        if quantized:
+            return ref.fused_topk_quant_ref(q, cands, cid, bias, k)
         return ref.fused_topk_ref(q, cands, cid, bias, k)
     if interpret is None:
         interpret = _on_cpu()
-    cands, c_orig = _pad_candidates(cands, c_tile)
-    c_padded = cands.dense.shape[1]
+    if quantized:
+        cands, c_orig = _pad_candidates_q(cands, c_tile)
+        cd, cscale = cands.dense_q, cands.dense_scale
+    else:
+        cands, c_orig = _pad_candidates(cands, c_tile)
+        cd, cscale = cands.dense, None
+    c_padded = cd.shape[1]
     if c_padded != c_orig:
         grow = ((0, 0), (0, c_padded - c_orig))
         cid = jnp.pad(cid, grow, constant_values=PAD_IDX)
@@ -166,13 +213,14 @@ def fused_topk(
         q.learned.val,
         q.lexical.idx,
         q.lexical.val,
-        cands.dense,
+        cd,
         csi,
         csv,
         cfi,
         cfv,
         cid.astype(jnp.int32),
         None if bias is None else bias.astype(jnp.float32),
+        cscale,
         k=k,
         c_tile=c_tile,
         interpret=interpret,

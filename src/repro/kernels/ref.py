@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.usms import PAD_IDX, FusedVectors
+from repro.core.usms import PAD_IDX, FusedVectors, QuantizedFusedVectors
 from repro.kernels.fused_topk import NEG
 
 
@@ -48,6 +48,23 @@ def hybrid_scores_ref(q: FusedVectors, cands: FusedVectors) -> jax.Array:
     return dense + sp + fp
 
 
+def hybrid_scores_quant_ref(
+    q: FusedVectors, cands: QuantizedFusedVectors
+) -> jax.Array:
+    """Quantized-storage oracle: ``scale_c * <q, int8_c>`` — the scale
+    multiplies the dense *dot product* (not the rows), matching the kernel's
+    dequant-in-tile op order so oracle and kernel differ only by summation
+    order, like the fp32 paths."""
+    dense = jnp.einsum(
+        "bd,bcd->bc",
+        q.dense.astype(jnp.float32),
+        cands.dense_q.astype(jnp.float32),
+    ) * cands.dense_scale.astype(jnp.float32)
+    sp = sparse_ip_ref(q.learned.idx, q.learned.val, cands.learned.idx, cands.learned.val)
+    fp = sparse_ip_ref(q.lexical.idx, q.lexical.val, cands.lexical.idx, cands.lexical.val)
+    return dense + sp + fp
+
+
 def fused_topk_ref(
     q: FusedVectors,
     cands: FusedVectors,
@@ -63,6 +80,24 @@ def fused_topk_ref(
     or k exceeding the number of live candidates — hold (NEG, PAD_IDX).
     """
     scores = hybrid_scores_ref(q, cands)
+    return _select_topk_ref(scores, cid, bias, k)
+
+
+def fused_topk_quant_ref(
+    q: FusedVectors,
+    cands: QuantizedFusedVectors,
+    cid: jax.Array,
+    bias: jax.Array | None,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """``fused_topk_ref`` over quantized candidate storage (same contract)."""
+    scores = hybrid_scores_quant_ref(q, cands)
+    return _select_topk_ref(scores, cid, bias, k)
+
+
+def _select_topk_ref(
+    scores: jax.Array, cid: jax.Array, bias: jax.Array | None, k: int
+) -> tuple[jax.Array, jax.Array]:
     if bias is not None:
         scores = scores + bias.astype(jnp.float32)
     scores = jnp.where(cid >= 0, scores, NEG)

@@ -82,7 +82,9 @@ from repro.core.usms import (
     PAD_IDX,
     FusedVectors,
     PathWeights,
+    QuantizedFusedVectors,
     SparseVec,
+    corpus_nbytes_by_leaf,
 )
 from repro.serving.batcher import (
     AdmissionConfig,
@@ -94,6 +96,19 @@ from repro.serving.batcher import (
     PendingResult,
     QueueFullError,
     SearchRequest,
+)
+
+
+# process-wide storage-footprint gauges, ticked at every snapshot publish
+# (and once at service construction — the initial snapshot never passes
+# through _publish). Labels: leaf kind x storage dtype, so the quantized
+# compression ratio is a scraped metric, not just a checkpoint-manifest
+# field. With several services in one process the most recent publisher
+# wins — the bench snapshot reads one serving index at a time.
+_INDEX_BYTES = GLOBAL_METRICS.gauge(
+    "allanpoe_index_bytes_total",
+    "served index storage bytes by leaf kind and dtype",
+    labels=("leaf", "dtype"),
 )
 
 
@@ -230,6 +245,24 @@ class HybridSearchService:
         # key, so kernel mode must be resolved — not deferred to the op
         # layer — or a backend/flag change could alias a stale executable
         self.params = resolve_params(params)
+        # declared storage mode must match what the index actually holds:
+        # serving quantized segments under corpus_dtype="float32" would hand
+        # the executables a pytree the cache key does not describe. The
+        # reverse — "int8" over (still-)fp32 segments — is allowed: during a
+        # migration old fp32 seals coexist with new int8 ones, and the
+        # per-group dispatch handles each by its own treedef.
+        if self.params.corpus_dtype == "float32":
+            quantized = [
+                type(c).__name__
+                for c, _ in self._norm_parts(_Snapshot(index, version=0))
+                if isinstance(c, QuantizedFusedVectors)
+            ]
+            if quantized:
+                raise ValueError(
+                    "index holds quantized corpus storage but "
+                    'SearchParams.corpus_dtype is "float32"; construct the '
+                    'service with corpus_dtype="int8"'
+                )
         self.config = config or ServiceConfig()
         self.metrics = self.config.metrics or MetricsRegistry()
         self.tracer = self.config.tracer or Tracer()
@@ -262,6 +295,8 @@ class HybridSearchService:
             labels=("bucket",),
         )
         self._snap = _Snapshot(index, version=0)
+        self._index_bytes_keys: set = set()
+        self._tick_index_bytes(self._snap)
         self._write_lock = threading.Lock()  # serializes snapshot writers
         # queue lock: enqueue/take_ready only, never held across a batch run,
         # so a timer thread pumping poll() can coexist with request threads
@@ -443,6 +478,45 @@ class HybridSearchService:
             return spec
         return dataclasses.replace(spec, stats=self.path_stats)
 
+    def _tick_index_bytes(self, snap: _Snapshot) -> None:
+        """Set the ``allanpoe_index_bytes_total{leaf,dtype}`` gauges to this
+        snapshot's storage footprint. Corpus leaves are broken out by kind
+        (dense / dense_scale / sparse_idx / sparse_val); everything else —
+        edges, entry points, liveness, entity tables — rolls up as "graph"
+        by dtype. Label pairs that vanished (e.g. float32 dense after a
+        fully quantized compaction) are zeroed, not left stale."""
+        totals: dict = {}
+
+        def add(leaf: str, arr) -> None:
+            key = (leaf, str(arr.dtype))
+            totals[key] = totals.get(key, 0) + arr.size * arr.dtype.itemsize
+
+        def add_index(hidx) -> None:
+            for key, v in corpus_nbytes_by_leaf(hidx.corpus).items():
+                totals[key] = totals.get(key, 0) + v
+            corpus_ids = {id(l) for l in jax.tree.leaves(hidx.corpus)}
+            for leaf in jax.tree.leaves(hidx):
+                if id(leaf) not in corpus_ids:
+                    add("graph", leaf)
+
+        idx = snap.index
+        if isinstance(idx, SegmentPool):
+            for g in idx.groups:
+                add_index(g.index)
+                add("graph", g.global_ids)
+        elif isinstance(idx, SegmentedIndex):
+            add_index(idx.index)
+            add("graph", idx.global_ids)
+        else:
+            add_index(idx)
+        if snap.grow is not None:
+            add_index(snap.grow)
+        for leaf, dtype in self._index_bytes_keys - set(totals):
+            _INDEX_BYTES.set(0, leaf=leaf, dtype=dtype)
+        for (leaf, dtype), v in totals.items():
+            _INDEX_BYTES.set(v, leaf=leaf, dtype=dtype)
+        self._index_bytes_keys = set(totals)
+
     def _publish(self, new_index, *, grow=None, grow_gids=None) -> None:
         # materialize before publishing so readers never block on (or fail
         # inside) a half-computed donor buffer
@@ -456,6 +530,7 @@ class HybridSearchService:
         self._snap = _Snapshot(
             new_index, self._snap.version + 1, grow=grow, grow_gids=grow_gids
         )
+        self._tick_index_bytes(self._snap)
         if not self.config.keep_stale_executables:
             # prune on the SEALED index keys only: the grow segment is read
             # through search_padded's own jit cache, so grow churn neither

@@ -99,7 +99,7 @@ from repro.core.segment_pool import (
     resolve_global_ids_pool,
     widen_entities,
 )
-from repro.core.usms import PAD_IDX, FusedVectors
+from repro.core.usms import PAD_IDX, FusedVectors, quantize_corpus
 from repro.obs.metrics import MetricsRegistry
 from repro.serving.batcher import _next_pow2
 from repro.serving.hybrid_service import HybridSearchService
@@ -380,6 +380,11 @@ class SegmentRouter:
             if isinstance(index, SegmentPool)
             else SegmentPool.from_segmented(index)
         )
+
+    def _corpus_dtype(self) -> str:
+        """Sealed-segment storage dtype: follows the service's resolved
+        SearchParams, so the AOT cache key and the storage always agree."""
+        return self.service.params.corpus_dtype
 
     def _kg_kwargs(self, doc_entities: Optional[np.ndarray]) -> dict:
         if self._kg_triplets is None or self._n_entities <= 0:
@@ -675,6 +680,15 @@ class SegmentRouter:
                 key=key,
                 **kg_kwargs,
             )
+            if self._corpus_dtype() == "int8":
+                # builds are always fp32; sealed storage quantizes here
+                new_seg = dataclasses.replace(
+                    new_seg,
+                    index=dataclasses.replace(
+                        new_seg.index,
+                        corpus=quantize_corpus(new_seg.index.corpus),
+                    ),
+                )
             if svc._mesh is not None:
                 new_seg = place_segmented_index(new_seg, svc._mesh)
             published = self._as_pool(new_seg) if pooled else new_seg
@@ -733,6 +747,7 @@ class SegmentRouter:
                     self.build_cfg,
                     capacity=capacity,
                     key=key,
+                    corpus_dtype=self._corpus_dtype(),
                     **self._kg_kwargs(ents),
                 )
                 pool, _ = append_segment(pool, segment)
@@ -809,6 +824,7 @@ class SegmentRouter:
                 self.build_cfg,
                 capacity=capacity,
                 key=key,
+                corpus_dtype=self._corpus_dtype(),
                 **self._kg_kwargs(ents),
             )
             pool, _ = append_segment(pool, merged)
